@@ -1,0 +1,56 @@
+"""Fig. 4 — inference throughput of (a) FP16/bf16, (b) MX quantized
+(MR-GPTQ-style, no T3), (c) MX + online T3 (LATMiX path), (d) LATMiX
+without the bias (Learned-Inv): tokens/s of the serving engine (CPU-jit
+relative comparison — the paper's claim C5 is that LATMiX adds at most
+negligible overhead vs the other quantized paths) + the per-op cost of the
+online T3 transform itself."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize import QuantMode
+from repro.core import transforms as tfm
+from repro.serving.engine import Engine
+from . import common
+
+
+def run(log=print):
+    params, cfg = common.get_model(log)
+    rows = []
+    modes = [
+        ("bf16", QuantMode.off()),
+        ("mx_no_t3", QuantMode.mxfp4(t3=False)),
+        ("mx_t3_latmix", QuantMode.mxfp4(t3=True)),
+        ("mx_t3_nobias", QuantMode.mxfp4(t3=True)),  # same runtime path
+    ]
+    base = None
+    for name, qm in modes:
+        eng = Engine(params, cfg, qm, batch_size=8, max_len=128)
+        stats = eng.throughput(n_requests=8, prompt_len=32, max_new=16)
+        tps = stats["tok_per_s"]
+        if base is None:
+            base = tps
+        log(f"[fig4] {name:14s} {tps:9.1f} tok/s "
+            f"({100*tps/base:.1f}% of bf16)")
+        rows.append({"name": f"fig4_{name}",
+                     "us_per_call": 1e6 / max(tps, 1e-9),
+                     "derived": f"tok_per_s={tps:.1f};rel={tps/base:.3f}",
+                     "tok_per_s": tps})
+    # isolated T3 cost: one online block-Hadamard over a d_ff activation
+    x = jax.random.normal(jax.random.PRNGKey(0), (512, cfg.d_ff))
+    h = tfm.hadamard_matrix(32)
+    f = jax.jit(lambda t: tfm.apply_blockwise(t, h))
+    us = common.timed(f, x) * 1e6
+    rows.append({"name": "fig4_t3_op", "us_per_call": us,
+                 "derived": f"bytes={x.size*4}"})
+    t3_rel = rows[2]["tok_per_s"] / max(rows[1]["tok_per_s"], 1e-9)
+    rows.append({"name": "fig4_claimC5", "us_per_call": 0.0,
+                 "derived": f"latmix_vs_mx={t3_rel:.3f};"
+                            f"negligible_overhead={bool(t3_rel > 0.85)}"})
+    common.emit(rows, "fig4_throughput")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,71 @@
+"""Kernel microbenchmarks: jnp-path timings (jit, CPU) of the three MX ops
+plus analytic TPU-roofline projections for the Pallas kernels (the CPU
+interpreter is for correctness; the projection uses the v5e bandwidth and
+the packed 4-bit byte counts from DESIGN.md §2)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mx as mxlib
+from repro.core import transforms as tfm
+from repro.kernels import ops
+from . import common
+
+HBM_BW = 819e9
+PEAK = 197e12
+
+
+def run(log=print):
+    rows = []
+    M, K, N = 2048, 4096, 4096
+    x = jax.random.normal(jax.random.PRNGKey(0), (M, K), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (K, N), jnp.float32) * 0.1
+    cfg = mxlib.MXConfig(fmt="mxfp4")
+
+    # jnp fake-quant path timings (CPU reference implementation)
+    f_quant = jax.jit(lambda t: mxlib.quantize(t, cfg, ste=False))
+    us = common.timed(f_quant, x) * 1e6
+    rows.append({"name": "mx_quant_jnp_2048x4096", "us_per_call": us,
+                 "derived": f"gbps={x.size*4/us*1e6/1e9:.2f}"})
+
+    h = tfm.hadamard_matrix(32)
+    f_t3 = jax.jit(lambda t: mxlib.quantize(tfm.apply_blockwise(t, h),
+                                            cfg, ste=False))
+    us = common.timed(f_t3, x) * 1e6
+    rows.append({"name": "hadamard_quant_jnp_2048x4096", "us_per_call": us,
+                 "derived": f"gbps={x.size*4/us*1e6/1e9:.2f}"})
+
+    wq = jax.jit(lambda t: jnp.swapaxes(
+        mxlib.quantize(jnp.swapaxes(t, 0, 1), cfg, ste=False), 0, 1))(w)
+    f_mm = jax.jit(lambda a, b: mxlib.quantize(a, cfg, ste=False) @ b)
+    us = common.timed(f_mm, x, wq) * 1e6
+    flops = 2 * M * K * N
+    rows.append({"name": "mx_matmul_jnp_2048x4096x4096", "us_per_call": us,
+                 "derived": f"gflops={flops/us*1e6/1e9:.1f}"})
+
+    # TPU roofline projections for the Pallas kernels (packed layout)
+    wbytes = mxlib.packed_nbytes((K, N), cfg)
+    abytes = M * K * 2                     # bf16 activations in
+    obytes = M * N * 2
+    t_mem = (wbytes + abytes + obytes) / HBM_BW
+    t_cmp = flops / PEAK
+    rows.append({
+        "name": "mx_matmul_tpu_projection", "us_per_call": t_cmp * 1e6,
+        "derived": (f"mem_us={t_mem*1e6:.1f};compute_us={t_cmp*1e6:.1f};"
+                    f"bound={'memory' if t_mem > t_cmp else 'compute'};"
+                    f"ai={flops/(wbytes+abytes+obytes):.1f}")})
+    # bf16 baseline projection: weight bytes 2 B/param -> 3.76x more traffic
+    t_mem_bf16 = (K * N * 2 + abytes + obytes) / HBM_BW
+    rows.append({
+        "name": "mx_vs_bf16_weight_traffic", "us_per_call": 0.0,
+        "derived": f"speedup_at_bw_bound={t_mem_bf16/t_mem:.2f}x"})
+    for r in rows:
+        log(f"[kernels] {r['name']:32s} {r['us_per_call']:10.1f}us "
+            f"{r['derived']}")
+    common.emit(rows, "kernels_bench")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,40 @@
+"""Roofline summary benchmark: reads experiments/roofline/*.json (produced
+by repro.roofline.analyze from the dry-run compiles) and emits one CSV row
+per (arch × shape) cell with the three terms and the dominant bottleneck."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from . import common
+
+
+def run(log=print):
+    root = pathlib.Path("experiments/roofline_final")
+    if not any(root.glob("*__*.json")) if root.exists() else True:
+        root = pathlib.Path("experiments/roofline")
+    rows = []
+    if not root.exists():
+        rows.append({"name": "roofline_missing", "us_per_call": 0.0,
+                     "derived": "run repro.roofline.analyze first"})
+        common.emit(rows, "roofline_report")
+        return rows
+    for f in sorted(root.glob("*__*.json")):
+        r = json.loads(f.read_text())
+        if r.get("status") != "ok":
+            continue
+        t = r["terms_s"]
+        rows.append({
+            "name": f"roofline_{r['arch']}_{r['shape']}",
+            "us_per_call": r["step_time_lower_bound_s"] * 1e6,
+            "derived": (f"dom={r['dominant']};"
+                        f"cmp_ms={t['compute']*1e3:.2f};"
+                        f"mem_ms={t['memory']*1e3:.2f};"
+                        f"col_ms={t['collective']*1e3:.2f};"
+                        f"frac={r['roofline_fraction']:.3f}")})
+    common.emit(rows, "roofline_report")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

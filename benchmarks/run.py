@@ -1,0 +1,48 @@
+"""Benchmark driver — one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV."""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset: fig2,table1,table2,"
+                         "table3,table8,fig4,kernels,roofline")
+    ap.add_argument("--fast", action="store_true",
+                    help="fewer transform-learning steps")
+    args = ap.parse_args()
+    wanted = set(args.only.split(",")) if args.only else None
+
+    from . import (fig2_mse, fig4_throughput, kernels_bench,
+                   roofline_report, table1_methods, table2_granularity,
+                   table3_invariance, table8_ablations)
+
+    benches = [
+        ("fig2", fig2_mse.run, {}),
+        ("table1", table1_methods.run,
+         {"steps": 40} if args.fast else {}),
+        ("table2", table2_granularity.run,
+         {"steps": 40} if args.fast else {}),
+        ("table3", table3_invariance.run, {}),
+        ("table8", table8_ablations.run,
+         {"steps": 30} if args.fast else {}),
+        ("fig4", fig4_throughput.run, {}),
+        ("kernels", kernels_bench.run, {}),
+        ("roofline", roofline_report.run, {}),
+    ]
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name, fn, kw in benches:
+        if wanted and name not in wanted:
+            continue
+        print(f"# --- {name} ---", file=sys.stderr)
+        fn(log=lambda m: print(m, file=sys.stderr), **kw)
+    print(f"# total {time.time()-t0:.0f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

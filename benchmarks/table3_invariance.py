@@ -1,0 +1,47 @@
+"""Table 3 — computational-invariance relaxation: FP model perplexity after
+fusing the learned T1/T2 at several transform-training step counts. The
+paper's claim (C4): fusing the learned affine transforms changes FP quality
+negligibly (distillation keeps the models consistent)."""
+from __future__ import annotations
+
+from repro.core import latmix as lx_lib
+from repro.core.quantize import QuantMode
+from repro.models import api
+from . import common
+
+
+def run(log=print):
+    params, cfg = common.get_model(log)
+    calib = common.calib_batches(cfg)
+    ev = common.eval_tokens(cfg)
+    fp_ppl = api.perplexity(params, cfg, ev)
+    rows = [{"name": "table3_fp16", "us_per_call": 0.0,
+             "derived": f"ppl={fp_ppl:.4f}", "ppl": fp_ppl}]
+    pn = api.fold_norms(params, cfg)
+    for steps in [0, 1, 50, 150]:
+        lx = lx_lib.LatmixConfig(kind="lu", steps=max(steps, 1),
+                                 lr=1e-3 if steps else 0.0)
+        if steps == 0:
+            omega = lx_lib.init_omega(
+                __import__("jax").random.PRNGKey(0), cfg, lx)
+            tset = lx_lib.materialize_set(omega, cfg, lx)
+        else:
+            _, tset, _ = lx_lib.learn_transforms(pn, cfg, lx, calib)
+        folded = api.fold(pn, cfg, tset)
+        ppl = api.perplexity(folded, cfg, ev, QuantMode.off(t3=32))
+        drift = abs(ppl - fp_ppl) / fp_ppl
+        log(f"[table3] steps={steps:4d} fused-FP ppl={ppl:.4f} "
+            f"(drift {100*drift:.2f}%)")
+        rows.append({"name": f"table3_steps{steps}", "us_per_call": 0.0,
+                     "derived": f"ppl={ppl:.4f};drift={100*drift:.2f}%",
+                     "ppl": ppl, "drift": drift})
+    worst = max(r["drift"] for r in rows if "drift" in r)
+    rows.append({"name": "table3_claimC4", "us_per_call": 0.0,
+                 "derived": f"max_drift={100*worst:.2f}%;"
+                            f"negligible={bool(worst < 0.10)}"})
+    common.emit(rows, "table3_invariance")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

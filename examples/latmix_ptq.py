@@ -1,0 +1,52 @@
+"""Full LATMiX PTQ pipeline on a trained checkpoint:
+
+  load checkpoint -> fold norms -> learn T1/T2 (KL distillation + L_vol)
+  -> fold transforms -> GPTQ the weights -> evaluate every method.
+
+Run examples/train_lm.py first (or let this script train the benchmark
+model). Compares RTN / GPTQ / QuaRot / block-Hadamard / SpinQuant-like /
+LATMiX-LU / LATMiX-QR under MXFP4.
+
+    PYTHONPATH=src python examples/latmix_ptq.py [--fmt mxint4] [--steps 80]
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "benchmarks") if False else None
+
+from repro.core import ptq
+from repro.models import api
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fmt", default="mxfp4",
+                    choices=["mxfp4", "mxint4"])
+    ap.add_argument("--steps", type=int, default=80)
+    ap.add_argument("--methods", default="rtn,gptq,quarot,block_hadamard,"
+                                         "spinquant,latmix-lu,latmix-qr")
+    args = ap.parse_args()
+
+    from benchmarks import common
+    params, cfg = common.get_model()
+    calib = common.calib_batches(cfg)
+    ev = common.eval_tokens(cfg)
+
+    fp = api.perplexity(params, cfg, ev)
+    print(f"\n{'method':16s} {'ppl':>9s} {'vs FP':>8s}")
+    print(f"{'fp16':16s} {fp:9.3f} {'100.0%':>8s}")
+    for m in args.methods.split(","):
+        res = ptq.apply_method(m, params, cfg, calib, fmt=args.fmt,
+                               steps=args.steps)
+        ppl = ptq.eval_ppl(res, cfg, ev)
+        print(f"{m:16s} {ppl:9.3f} {100*fp/ppl:7.1f}%")
+        if res.tset is not None and m.startswith("latmix"):
+            from repro.core import transforms as tfm
+            dev = float(tfm.orthogonality_deviation(res.tset.a1))
+            off = float(tfm.offblock_norm(res.tset.a1, 32))
+            print(f"{'':16s}   A1: orth-dev={dev:.3f} offblock={off:.3f}"
+                  f" (Fig. 3 metrics)")
+
+
+if __name__ == "__main__":
+    main()

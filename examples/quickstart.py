@@ -1,0 +1,37 @@
+"""Quickstart: build a small LM, quantize it to MXFP4 with LATMiX, and
+compare perplexity against RTN — in ~2 minutes on CPU.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import ptq
+from repro.data import synthetic
+from repro.models import api
+
+# 1. a small llama-style model (random init for speed; see examples/
+#    train_lm.py + examples/latmix_ptq.py for the trained pipeline)
+cfg = ArchConfig(name="quickstart", family="dense", n_layers=3,
+                 d_model=128, n_heads=8, n_kv_heads=4, head_dim=16,
+                 d_ff=352, vocab_size=512, attn_chunk=64)
+params = api.init(jax.random.PRNGKey(0), cfg)
+print(f"model: {cfg.param_count()/1e6:.2f}M params")
+
+# 2. calibration + eval data (synthetic Zipf–Markov corpus)
+src = synthetic.make_source(cfg, 8, 64, seed=0)
+calib = [{k: jnp.asarray(v) for k, v in src.batch(i).items()}
+         for i in range(3)]
+ev = jnp.asarray(src.batch(100)["inputs"])
+
+fp_ppl = api.perplexity(params, cfg, ev)
+print(f"FP32 ppl          : {fp_ppl:9.2f}")
+
+# 3. RTN baseline vs LATMiX-LU (learned affine transforms + GPTQ)
+for method in ["rtn", "latmix-lu"]:
+    res = ptq.apply_method(method, params, cfg, calib, fmt="mxfp4",
+                           steps=60)
+    ppl = ptq.eval_ppl(res, cfg, ev)
+    print(f"MXFP4 {method:12s}: {ppl:9.2f}  "
+          f"(recovery {100*fp_ppl/ppl:.1f}% of FP ppl ratio)")

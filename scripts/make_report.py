@@ -1,0 +1,62 @@
+"""Inject the generated §Roofline table into EXPERIMENTS.md from
+experiments/roofline_final/*.json (falls back to experiments/roofline)."""
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def build_table(d: pathlib.Path) -> str:
+    rows = []
+    for f in sorted(d.glob("*__*.json")):
+        r = json.loads(f.read_text())
+        if r.get("status") != "ok":
+            continue
+        rows.append(r)
+    out = ["| arch | shape | compute s | memory s | collective s |"
+           " dominant | useful FLOPs | roofline frac | next lever |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    LEVER = {
+        ("collective", "train"): "shard_map all-to-all MoE dispatch / "
+                                 "fewer FSDP regathers",
+        ("memory", "train"): "fuse QKV+GU matmuls; bf16-native fusions "
+                             "(CPU bytes are upper bounds)",
+        ("memory", "prefill"): "fuse quantize into matmuls "
+                               "(hadamard_quant/mx_matmul kernels)",
+        ("memory", "decode"): "packed 4-bit weights via mx_matmul kernel "
+                              "(3.76x less weight traffic) + MX KV cache",
+        ("collective", "prefill"): "head-stationary attention layout",
+        ("collective", "decode"): "replicate small params",
+        ("compute", "train"): "less remat (save dot outputs)",
+    }
+    for r in rows:
+        t = r["terms_s"]
+        kind = ("train" if r["shape"].startswith("train") else
+                "prefill" if r["shape"].startswith("prefill") else "decode")
+        lever = LEVER.get((r["dominant"], kind), "—")
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute']:.3f} | "
+            f"{t['memory']:.3f} | {t['collective']:.3f} | {r['dominant']} | "
+            f"{r['useful_flops_ratio']:.2f} | {r['roofline_fraction']:.3f} |"
+            f" {lever} |")
+    return "\n".join(out)
+
+
+def main():
+    src = ROOT / "experiments/roofline_final"
+    if not any(src.glob("*__*.json")):
+        src = ROOT / "experiments/roofline"
+    table = build_table(src)
+    exp = ROOT / "EXPERIMENTS.md"
+    text = exp.read_text()
+    marker = "<!-- ROOFLINE_TABLE -->"
+    start = text.index(marker)
+    end = text.index("## §Perf")
+    text = text[:start] + marker + "\n\n" + table + "\n\n" + text[end:]
+    exp.write_text(text)
+    print(f"injected {table.count(chr(10))-1} rows from {src.name}")
+
+
+if __name__ == "__main__":
+    main()

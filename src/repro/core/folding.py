@@ -1,0 +1,166 @@
+"""Transformation folding (Appendix C), row convention ``y = x @ W + b``.
+
+A ``TransformSet`` carries the learned transformations:
+
+  A1 (d, d), v1 (d,)          — global residual-stream transform T1
+  A2 (L, Dh, Dh), v2 (L, Dh)  — per-layer per-head value transform T2
+  t3_block                    — online block-Hadamard size (inverse folded
+                                into the down projection here)
+
+Role helpers (each exact, differentiable — the LATMiX student *is* the
+folded network, so gradients flow through these into Ω):
+
+  read:      W ← A1⁻¹ W,  b ← b − v1 @ (A1⁻¹ W)        (Eq. 30)
+  write:     W ← W A1,    b ← b @ A1                     (Eq. 31)
+  embed:     W_e ← W_e A1 + v1                           (Eq. 32)
+  value:     per-head  W_V ← (A1⁻¹ W_V) A2 (+v2)         (Eq. 33)
+  attn_out:  per-head  W_O ← A2⁻¹ W_O, then · A1; bias −v2 correction
+                                                         (Eq. 34)
+  t3:        W_down ← blockdiag(H)ᵀ W_down (runtime applies H online)
+  head:      = read (the LM head reads the stream through the final norm)
+
+RMSNorm γ's are folded into their adjacent linears *before* any of this
+(``fold_norm_into``) so the norms are scale-free and the stream algebra is
+exact up to the (relaxed, distillation-compensated) norm non-commutation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import transforms as tfm
+
+
+@dataclasses.dataclass
+class TransformSet:
+    a1: jnp.ndarray                     # (d, d)
+    v1: jnp.ndarray                     # (d,)
+    a2: Optional[jnp.ndarray] = None    # (L, Dh, Dh)
+    v2: Optional[jnp.ndarray] = None    # (L, Dh)
+    t3_block: int = 32
+
+    @property
+    def a1_inv(self) -> jnp.ndarray:
+        return tfm.inverse(self.a1)
+
+    def a2_inv(self) -> jnp.ndarray:
+        return jax.vmap(tfm.inverse)(self.a2)
+
+
+def identity_set(d: int, n_layers: int, head_dim: int,
+                 t3_block: int = 32) -> TransformSet:
+    return TransformSet(
+        a1=jnp.eye(d, dtype=jnp.float32),
+        v1=jnp.zeros((d,), jnp.float32),
+        a2=jnp.tile(jnp.eye(head_dim, dtype=jnp.float32)[None],
+                    (n_layers, 1, 1)),
+        v2=jnp.zeros((n_layers, head_dim), jnp.float32),
+        t3_block=t3_block,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Norm folding (exact)
+# ---------------------------------------------------------------------------
+
+def fold_norm_into(gamma: jnp.ndarray, *ws: jnp.ndarray):
+    """Return (ones_like(gamma), [diag(γ) @ W ...]) — exact rewrite of
+    ``rmsnorm(x)*γ @ W``. Supports stacked (L, d, out) weights with
+    stacked (L, d) gammas."""
+    new_ws = []
+    for w in ws:
+        if w.ndim == gamma.ndim + 1:
+            new_ws.append(w * gamma[..., :, None].astype(w.dtype))
+        else:
+            raise ValueError(f"shape mismatch {gamma.shape} vs {w.shape}")
+    return jnp.ones_like(gamma), new_ws
+
+
+# ---------------------------------------------------------------------------
+# Role folds. All support an optional leading layer axis via vmap.
+# ---------------------------------------------------------------------------
+
+def fold_read(w: jnp.ndarray, b: Optional[jnp.ndarray],
+              a1_inv: jnp.ndarray, v1: jnp.ndarray):
+    """W (…, d, out) ← A1⁻¹ W;  b ← b − v1 @ (A1⁻¹ W)."""
+    def one(wl):
+        wt = a1_inv.astype(wl.dtype) @ wl
+        return wt
+    wt = _map_layers(one, w, a1_inv.ndim)
+    corr = jnp.einsum("d,...do->...o", v1.astype(wt.dtype), wt)
+    bt = (-corr) if b is None else (b - corr)
+    return wt, bt
+
+
+def fold_write(w: jnp.ndarray, b: Optional[jnp.ndarray], a1: jnp.ndarray):
+    """W (…, in, d) ← W A1;  b ← b @ A1."""
+    wt = w @ a1.astype(w.dtype)
+    bt = None if b is None else b @ a1.astype(b.dtype)
+    return wt, bt
+
+
+def fold_embed(w_e: jnp.ndarray, a1: jnp.ndarray, v1: jnp.ndarray):
+    """(V, d) table ← W_e A1 + v1 per row."""
+    return w_e @ a1.astype(w_e.dtype) + v1.astype(w_e.dtype)[None, :]
+
+
+def fold_value(w_v: jnp.ndarray, b_v: Optional[jnp.ndarray],
+               a1_inv: jnp.ndarray, v1: jnp.ndarray,
+               a2: jnp.ndarray, v2: jnp.ndarray, n_kv: int):
+    """Value projection: stream-read fold then per-head T2.
+
+    w_v: (…, d, n_kv*Dh). Returns same shape; bias gains +v2 per head."""
+    wt, bt = fold_read(w_v, b_v, a1_inv, v1)
+    *lead, d, kd = wt.shape
+    dh = kd // n_kv
+    wh = wt.reshape(*lead, d, n_kv, dh)
+    wh = jnp.einsum("...dkh,...hj->...dkj", wh, a2.astype(wh.dtype))
+    wt = wh.reshape(*lead, d, kd)
+    bh = bt.reshape(*lead, n_kv, dh)
+    bh = jnp.einsum("...kh,...hj->...kj", bh, a2.astype(bh.dtype))
+    bh = bh + v2[..., None, :].astype(bh.dtype)
+    return wt, bh.reshape(*lead, kd)
+
+
+def fold_attn_out(w_o: jnp.ndarray, b_o: Optional[jnp.ndarray],
+                  a1: jnp.ndarray, a2_inv: jnp.ndarray, v2: jnp.ndarray,
+                  n_heads: int):
+    """Output projection: per-head T2⁻¹, then stream-write fold (Eq. 34).
+
+    w_o: (…, n_heads*Dh, d)."""
+    *lead, hd, d = w_o.shape
+    dh = hd // n_heads
+    wh = w_o.reshape(*lead, n_heads, dh, d)
+    wh = jnp.einsum("...ij,...kjd->...kid", a2_inv.astype(wh.dtype), wh)
+    # bias correction: each head's value stream carries +v2 (softmax rows
+    # sum to one, Appendix B), removed here: − Σ_h v2 @ (A2⁻¹ W_O[h]);
+    # note wh already holds A2⁻¹ W_O[h].
+    corr = jnp.einsum("...j,...kjd->...d", v2.astype(wh.dtype), wh)
+    wt = wh.reshape(*lead, hd, d)
+    b0 = (-corr) if b_o is None else (b_o - corr)
+    return fold_write(wt, b0, a1)
+
+
+def fold_t3(w_down: jnp.ndarray, block: int):
+    """W_down (…, f, d) ← blockdiag(H_b)ᵀ W_down.
+
+    Runtime then computes (x·blockdiag(H)) @ W̃ = x @ W — exact since H is
+    orthogonal. This moves the outlier-diffusing rotation of the down-proj
+    *input* online (T3) while its inverse is free (folded here)."""
+    h = tfm.hadamard_matrix(block, dtype=w_down.dtype)
+    *lead, f, d = w_down.shape
+    wb = w_down.reshape(*lead, f // block, block, d)
+    # W̃_block = Hᵀ @ W_block  (runtime applies x_block @ H, H orthogonal)
+    wb = jnp.einsum("jb,...kjd->...kbd", h, wb)
+    return wb.reshape(*lead, f, d)
+
+
+def _map_layers(fn, w, base_ndim):
+    """Apply fn to (d, out) matrices, vmapping over any leading axes."""
+    extra = w.ndim - 2
+    for _ in range(extra):
+        fn = jax.vmap(fn)
+    return fn(w)

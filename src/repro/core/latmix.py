@@ -1,0 +1,204 @@
+"""LATMiX — learning the affine transformations Ω (Section 3.2).
+
+Stage 1 of the PTQ pipeline: with FP weights, learn
+  T1 (global, d_model) and T2 (per attention layer, head_dim)
+by minimizing  L = KL(f(x) || f̃_Ω(x)) + λ·L_vol  (Eq. 9) over a small
+calibration set, where f̃_Ω is the *folded* network (fold is differentiable,
+so transforming activations ≡ folding — Appendix C) executed with MX
+fake-quantized activations (STE).
+
+The same machinery, restricted, yields the baselines:
+  kind='orthogonal'                  -> SpinQuant-like learned rotation
+  kind='invertible' (no bias)        -> "Learned Inv. Matrix"
+  kind='kron'                        -> FlatQuant's matrix structure
+  granularity='block'                -> BRQ/MR-GPTQ-style block-diagonal
+  fixed kinds ('hadamard', ...)      -> QuaRot / block-Hadamard (no training)
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import mx as mxlib
+from repro.core import transforms as tfm
+from repro.core.folding import TransformSet
+from repro.core.quantize import QuantMode
+from repro.models import api
+from repro.training import optimizer as opt
+
+
+@dataclasses.dataclass(frozen=True)
+class LatmixConfig:
+    kind: str = "lu"                 # transform family (see module doc)
+    granularity: str = "full"        # 'full' | 'block'
+    learn_bias: bool = True
+    learn_t2: bool = True
+    act_fmt: str = "mxfp4"
+    block_size: int = 32
+    scale_mode: str = "pow2"         # 'fp8' => NVFP4 (App. E.6)
+    t3_block: int = 32
+    steps: int = 150
+    lr: float = 1e-3
+    weight_decay: float = 1e-4
+    lambda_vol: float = 0.1
+    lambda_diag: float = 0.1
+    temperature: float = 1.5
+    loss: str = "kl"                 # 'kl' | 'ce' | 'mse'
+    seed: int = 0
+
+    @property
+    def trainable(self) -> bool:
+        return self.kind not in ("hadamard", "block_hadamard", "identity")
+
+
+def _n_t2(cfg: ArchConfig) -> int:
+    if cfg.family == "hybrid":
+        return cfg.n_super_blocks
+    return cfg.n_layers
+
+
+def t2_applicable(cfg: ArchConfig) -> bool:
+    return cfg.family != "ssm"       # attention-free: no value path
+
+
+def _specs(cfg: ArchConfig, lx: LatmixConfig):
+    init = ("bd_hadamard" if lx.kind in ("lu", "invertible", "kron")
+            else "bd_orthogonal")
+    s1 = tfm.TransformSpec(kind=lx.kind, d=cfg.d_model,
+                           learn_bias=lx.learn_bias, block=lx.block_size,
+                           init=init, granularity=lx.granularity)
+    s2 = tfm.TransformSpec(kind=lx.kind, d=cfg.head_dim,
+                           learn_bias=lx.learn_bias,
+                           block=min(lx.block_size, cfg.head_dim),
+                           init=init, granularity=lx.granularity)
+    return s1, s2
+
+
+def init_omega(key, cfg: ArchConfig, lx: LatmixConfig):
+    s1, s2 = _specs(cfg, lx)
+    k1, k2 = jax.random.split(key)
+    omega = {"t1": tfm.init_params(k1, s1)}
+    if lx.learn_t2 and t2_applicable(cfg):
+        n = _n_t2(cfg)
+        keys = jax.random.split(k2, n)
+        per = [tfm.init_params(keys[i], s2) for i in range(n)]
+        omega["t2"] = jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+    return omega
+
+
+def materialize_set(omega, cfg: ArchConfig, lx: LatmixConfig) -> TransformSet:
+    s1, s2 = _specs(cfg, lx)
+    a1, v1 = tfm.materialize(omega["t1"], s1)
+    if "t2" in omega:
+        a2, v2 = jax.vmap(lambda p: tfm.materialize(p, s2))(omega["t2"])
+    else:
+        n = _n_t2(cfg)
+        a2 = jnp.tile(jnp.eye(cfg.head_dim, dtype=jnp.float32)[None],
+                      (n, 1, 1))
+        v2 = jnp.zeros((n, cfg.head_dim), jnp.float32)
+    return TransformSet(a1=a1, v1=v1, a2=a2, v2=v2, t3_block=lx.t3_block)
+
+
+def reg_loss(omega, cfg: ArchConfig, lx: LatmixConfig) -> jnp.ndarray:
+    s1, s2 = _specs(cfg, lx)
+    l = tfm.loss_vol(omega["t1"], s1)
+    ld = tfm.diag_reg(omega["t1"])
+    if "t2" in omega:
+        l = l + jnp.sum(jax.vmap(lambda p: tfm.loss_vol(p, s2))(omega["t2"]))
+        ld = ld + jnp.sum(jax.vmap(tfm.diag_reg)(omega["t2"]))
+    return lx.lambda_vol * l + lx.lambda_diag * ld
+
+
+def student_qm(lx: LatmixConfig) -> QuantMode:
+    """Stage-1 student: quantized activations, FP weights (Liu et al.)."""
+    return QuantMode(enabled=True,
+                     act_cfg=mxlib.MXConfig(fmt=lx.act_fmt,
+                                            block_size=lx.block_size,
+                                            scale_mode=lx.scale_mode),
+                     weight_cfg=None, t3_block=lx.t3_block)
+
+
+def learn_transforms(params, cfg: ArchConfig, lx: LatmixConfig,
+                     calib_batches: List[dict],
+                     log: Optional[Callable[[str], None]] = None):
+    """Run stage 1. ``params`` must already be norm-folded
+    (api.fold_norms). Returns (omega, TransformSet, history)."""
+    key = jax.random.PRNGKey(lx.seed)
+    omega = init_omega(key, cfg, lx)
+    qm = student_qm(lx)
+
+    # teacher logits are fixed -> precompute once per calibration batch
+    teacher_fn = jax.jit(lambda b: api.forward(params, cfg, b))
+    teachers = [jax.device_get(teacher_fn(b["inputs"]))
+                for b in calib_batches]
+
+    if not lx.trainable:
+        tset = materialize_set(omega, cfg, lx)
+        return omega, tset, []
+
+    ocfg = opt.AdamWConfig(lr=lx.lr, weight_decay=lx.weight_decay,
+                           warmup_steps=max(1, lx.steps // 10),
+                           total_steps=lx.steps, grad_clip=1.0)
+    # grad only w.r.t. the 'learn' subtrees (fixed buffers hold int perms)
+    learn0 = {k: v["learn"] for k, v in omega.items()}
+    fixed = {k: v["fixed"] for k, v in omega.items()}
+    state = opt.init_state(learn0)
+
+    def join(learn):
+        return {k: {"learn": learn[k], "fixed": fixed[k]}
+                for k in learn}
+
+    def loss_fn(learn, batch, teacher):
+        om = join(learn)
+        tset = materialize_set(om, cfg, lx)
+        folded = api.fold(params, cfg, tset)
+        student = api.forward(folded, cfg, batch["inputs"], qm)
+        if lx.loss == "kl":
+            task = api.kl_divergence(teacher, student, lx.temperature)
+        elif lx.loss == "ce":
+            task = api.cross_entropy(student, batch["labels"])
+        else:  # 'mse' on logits (FlatQuant-style local objective proxy)
+            task = jnp.mean((student.astype(jnp.float32)
+                             - teacher.astype(jnp.float32)) ** 2)
+        return task + reg_loss(om, cfg, lx), task
+
+    @jax.jit
+    def step(learn, st, batch, teacher):
+        (loss, task), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            learn, batch, teacher)
+        learn, st, info = opt.apply_updates(learn, grads, st, ocfg)
+        return learn, st, loss, task, info
+
+    hist = []
+    t0 = time.time()
+    learn = learn0
+    for i in range(lx.steps):
+        b = calib_batches[i % len(calib_batches)]
+        t = jnp.asarray(teachers[i % len(calib_batches)])
+        learn, state, loss, task, info = step(learn, state, b, t)
+        omega = join(learn)
+        if i % max(1, lx.steps // 10) == 0 or i == lx.steps - 1:
+            hist.append({"step": i, "loss": float(loss),
+                         "task": float(task),
+                         "grad_norm": float(info["grad_norm"])})
+            if log:
+                log(f"[latmix:{lx.kind}] step {i:4d} loss={float(loss):.4f} "
+                    f"task={float(task):.4f} ({time.time()-t0:.1f}s)")
+    tset = materialize_set(omega, cfg, lx)
+    return omega, tset, hist
+
+
+def transform_metrics(omega, cfg: ArchConfig, lx: LatmixConfig) -> dict:
+    """Fig. 3 metrics: orthogonality deviation + off-block spectral norm."""
+    tset = materialize_set(omega, cfg, lx)
+    return {
+        "orthogonality_deviation": float(
+            tfm.orthogonality_deviation(tset.a1)),
+        "offblock_norm": float(tfm.offblock_norm(tset.a1, lx.block_size)),
+        "condition_number": float(jnp.linalg.cond(tset.a1)),
+    }

@@ -1,0 +1,118 @@
+"""Quantized execution mode: MX fake-quant linears + online T3 transform.
+
+Model code routes every matmul through :func:`qlinear`. A ``QuantMode``
+threads through the model and decides, per call-site role, whether the
+activation and/or weight is MX-fake-quantized (STE-differentiable, so the
+same path serves LATMiX transform learning and quantized evaluation).
+
+Roles (mirroring the paper's Fig. 5 placement):
+  'qkv', 'attn_out', 'ffn_in', 'router', 'head', 'ssm_in', 'ssm_out', ...
+  'ffn_down'  — the one call-site with the *online* T3 block-Hadamard.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+from . import mx as mxlib
+from . import transforms as tfm
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantMode:
+    """How to execute linears.
+
+    enabled=False           -> pure FP path (training / teacher).
+    act_cfg / weight_cfg    -> MXConfig for activations / weights
+                               (weight_cfg=None => FP weights: transform-
+                               learning stage quantizes activations only).
+    t3_block                -> online block-Hadamard size before ffn_down
+                               (0 disables T3). Applied whenever nonzero —
+                               also in FP mode — because its inverse is
+                               folded into the weights offline; a folded
+                               model must run with the matching t3_block.
+    quantize_head           -> whether the LM head matmul is quantized
+                               (papers keep head/embeddings FP; default off).
+    """
+
+    enabled: bool = False
+    act_cfg: Optional[mxlib.MXConfig] = None
+    weight_cfg: Optional[mxlib.MXConfig] = None
+    t3_block: int = 0
+    quantize_head: bool = False
+
+    @staticmethod
+    def off(t3: int = 0) -> "QuantMode":
+        return QuantMode(enabled=False, t3_block=t3)
+
+    @staticmethod
+    def mxfp4(weights: bool = True, t3: bool = True) -> "QuantMode":
+        c = mxlib.MXConfig(fmt="mxfp4", block_size=32)
+        return QuantMode(enabled=True, act_cfg=c,
+                         weight_cfg=c if weights else None,
+                         t3_block=32 if t3 else 0)
+
+    @staticmethod
+    def mxint4(weights: bool = True, t3: bool = True) -> "QuantMode":
+        c = mxlib.MXConfig(fmt="mxint4", block_size=32)
+        return QuantMode(enabled=True, act_cfg=c,
+                         weight_cfg=c if weights else None,
+                         t3_block=32 if t3 else 0)
+
+    @staticmethod
+    def nvfp4(weights: bool = True, t3: bool = True) -> "QuantMode":
+        c = mxlib.NVFP4
+        return QuantMode(enabled=True, act_cfg=c,
+                         weight_cfg=c if weights else None,
+                         t3_block=32 if t3 else 0)
+
+
+def _maybe_quant_act(x: jnp.ndarray, qm: QuantMode) -> jnp.ndarray:
+    if qm.enabled and qm.act_cfg is not None:
+        return mxlib.quantize(x, qm.act_cfg)
+    return x
+
+
+def _maybe_quant_weight(w: jnp.ndarray, qm: QuantMode) -> jnp.ndarray:
+    """Weights are MX-blocked along the contraction (first) axis so the
+    GEMM dequantizes per k-block (matching the kernel layout)."""
+    if qm.enabled and qm.weight_cfg is not None:
+        wt = jnp.swapaxes(w, -1, -2)
+        wq = mxlib.quantize(wt, qm.weight_cfg)
+        return jnp.swapaxes(wq, -1, -2)
+    return w
+
+
+def qlinear(x: jnp.ndarray, w: jnp.ndarray, b: Optional[jnp.ndarray],
+            qm: QuantMode, role: str = "") -> jnp.ndarray:
+    """y = Q(x) @ Q(w) + b under the quant mode; plain x@w+b otherwise.
+
+    role='ffn_down' additionally applies the online T3 block-Hadamard to the
+    activation *before* quantization (its inverse is folded into w offline,
+    see core.folding.fold_t3)."""
+    if qm.t3_block and role == "ffn_down":
+        h = tfm.hadamard_matrix(qm.t3_block, dtype=x.dtype)
+        x = tfm.apply_blockwise(x, h)
+    if role == "head" and not qm.quantize_head:
+        y = x @ w
+        return y if b is None else y + b
+    xq = _maybe_quant_act(x, qm)
+    wq = _maybe_quant_weight(w, qm)
+    y = xq @ wq
+    return y if b is None else y + b
+
+
+def qeinsum(spec: str, x: jnp.ndarray, w: jnp.ndarray,
+            qm: QuantMode, role: str = "") -> jnp.ndarray:
+    """Quantized einsum for expert-batched weights, e.g. 'ecd,edf->ecf'.
+
+    Activation is quantized along its last axis; the weight along the
+    einsum contraction axis (assumed to be its second-to-last axis)."""
+    if qm.t3_block and role == "ffn_down":
+        h = tfm.hadamard_matrix(qm.t3_block, dtype=x.dtype)
+        x = tfm.apply_blockwise(x, h)
+    xq = _maybe_quant_act(x, qm)
+    wq = _maybe_quant_weight(w, qm)
+    return jnp.einsum(spec, xq, wq)

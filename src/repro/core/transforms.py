@@ -1,0 +1,360 @@
+"""Invertible affine transformations for outlier diffusion (Section 3.2).
+
+Row convention: activations are rows, ``T(X) = X @ A + v`` with
+``A in R^{d x d}``; ``T^{-1}(Y) = Y @ A^{-1} - v @ A^{-1}`` (Appendix B uses
+the same convention for multi-token inputs).
+
+Two free-form parameterizations of ``A``:
+
+  LU (Eq. 5):  A = P · L · (U + diag(s))       — P fixed permutation,
+               L unit-lower-triangular, U strictly-upper, s = sign ⊙ e^{logs}
+  QR (Eq. 6):  A = exp(½(G − Gᵀ)) · (R + diag(s))
+
+plus restricted families used as baselines / ablations:
+
+  - orthogonal-only (learn G, fix R=0, s=1)   → SpinQuant-like learned
+    rotation with unconstrained optimization (matrix exponential instead of
+    Stiefel-manifold steps),
+  - invertible-only (LU with v frozen at 0)    → "Learned Inv. Matrix",
+  - fixed random/block Hadamard                → QuaRot / MR-GPTQ,
+  - Kronecker product of two small matrices    → FlatQuant's structure.
+
+Volume regularizer (Eq. 7, stable log form): L_vol = (Σ_i log|s_i|)².
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Hadamard / orthogonal constructions
+# ---------------------------------------------------------------------------
+
+def hadamard_matrix(n: int, dtype=jnp.float32) -> jnp.ndarray:
+    """Sylvester-construction Hadamard matrix, scaled to be orthogonal.
+
+    Requires n to be a power of two (all our widths/blocks are)."""
+    if n & (n - 1) != 0:
+        raise ValueError(f"Hadamard size must be a power of 2, got {n}")
+    h = np.array([[1.0]])
+    while h.shape[0] < n:
+        h = np.block([[h, h], [h, -h]])
+    return jnp.asarray(h / np.sqrt(n), dtype=dtype)
+
+
+def random_hadamard(key: jax.Array, n: int, dtype=jnp.float32) -> jnp.ndarray:
+    """H · diag(random ±1): a random orthogonal matrix with Hadamard
+    incoherence (QuIP#/QuaRot construction)."""
+    signs = jax.random.rademacher(key, (n,), dtype=dtype)
+    return hadamard_matrix(n, dtype) * signs[None, :]
+
+
+def random_orthogonal(key: jax.Array, n: int, dtype=jnp.float32) -> jnp.ndarray:
+    """Haar-random orthogonal via QR of a Gaussian."""
+    g = jax.random.normal(key, (n, n), dtype=jnp.float32)
+    q, r = jnp.linalg.qr(g)
+    q = q * jnp.sign(jnp.diagonal(r))[None, :]
+    return q.astype(dtype)
+
+
+def block_diagonal(blocks: jnp.ndarray) -> jnp.ndarray:
+    """(nb, b, b) stack -> (nb*b, nb*b) block-diagonal matrix."""
+    nb, b, _ = blocks.shape
+    eye = jnp.eye(nb, dtype=blocks.dtype)
+    # (nb, nb, b, b) -> (nb*b, nb*b)
+    full = jnp.einsum("ij,ibc->ibjc", eye, blocks)
+    return full.reshape(nb * b, nb * b)
+
+
+def block_diag_init(key: jax.Array, d: int, block: int, kind: str = "hadamard",
+                    noise: float = 1e-3, dtype=jnp.float32) -> jnp.ndarray:
+    """Block-diagonal rotation init + small off-block Gaussian noise
+    (Appendix E.2's best rows: BD Hadamard + Noise / BD Orthogonal + Noise).
+    """
+    nb = d // block
+    keys = jax.random.split(key, nb + 1)
+    if kind == "hadamard":
+        blocks = jnp.stack([random_hadamard(keys[i], block, dtype)
+                            for i in range(nb)])
+    elif kind == "orthogonal":
+        blocks = jnp.stack([random_orthogonal(keys[i], block, dtype)
+                            for i in range(nb)])
+    elif kind == "identity":
+        blocks = jnp.tile(jnp.eye(block, dtype=dtype)[None], (nb, 1, 1))
+    else:
+        raise ValueError(kind)
+    a = block_diagonal(blocks)
+    if noise > 0:
+        off = jax.random.normal(keys[-1], (d, d), dtype=dtype) * noise
+        mask = 1.0 - block_diagonal(
+            jnp.ones((nb, block, block), dtype=dtype))
+        a = a + off * mask
+    return a
+
+
+def apply_blockwise(x: jnp.ndarray, h: jnp.ndarray) -> jnp.ndarray:
+    """Multiply the last axis of x by block-diagonal(h) without materializing
+    the full matrix: x (..., d), h (b, b), d % b == 0.
+
+    This is the online T3 op (block Hadamard before the down projection)."""
+    b = h.shape[0]
+    *lead, d = x.shape
+    xb = x.reshape(*lead, d // b, b)
+    yb = jnp.einsum("...kb,bc->...kc", xb, h.astype(x.dtype))
+    return yb.reshape(*lead, d)
+
+
+# ---------------------------------------------------------------------------
+# Parameterizations
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TransformSpec:
+    """What family of transformation to learn.
+
+    kind:   'lu' | 'qr' | 'orthogonal' | 'invertible' | 'hadamard' |
+            'block_hadamard' | 'identity' | 'kron'
+    d:      dimension
+    learn_bias: include the affine shift v (Aff(d) vs GL(d))
+    block:  MX block size (for block-diagonal variants & init)
+    init:   'bd_hadamard' | 'bd_orthogonal' | 'identity' | 'hadamard' |
+            'orthogonal'
+    """
+
+    kind: str = "lu"
+    d: int = 0
+    learn_bias: bool = True
+    block: int = 32
+    init: str = "bd_hadamard"
+    init_noise: float = 1e-3
+    granularity: str = "full"   # 'full' | 'block' (block-diagonal learnable,
+    #                             the MR-GPTQ/BRQ restriction — Table 2)
+
+
+def _init_matrix(key: jax.Array, spec: TransformSpec) -> jnp.ndarray:
+    d, b = spec.d, min(spec.block, spec.d)
+    if spec.init == "bd_hadamard":
+        return block_diag_init(key, d, b, "hadamard", spec.init_noise)
+    if spec.init == "bd_orthogonal":
+        return block_diag_init(key, d, b, "orthogonal", spec.init_noise)
+    if spec.init == "identity":
+        return block_diag_init(key, d, b, "identity", spec.init_noise)
+    if spec.init == "hadamard":
+        return random_hadamard(key, d)
+    if spec.init == "orthogonal":
+        return random_orthogonal(key, d)
+    raise ValueError(spec.init)
+
+
+def init_params(key: jax.Array, spec: TransformSpec) -> Params:
+    """Initialize learnable parameters + fixed buffers for ``spec``.
+
+    Learnable leaves sit under 'learn'; fixed buffers under 'fixed'.
+    """
+    d = spec.d
+    if spec.granularity == "block" and spec.kind in ("lu", "qr", "orthogonal",
+                                                     "invertible",
+                                                     "orth_scale"):
+        nb = d // spec.block
+        sub = dataclasses.replace(spec, d=spec.block, granularity="full",
+                                  init=spec.init.replace("bd_", ""))
+        keys = jax.random.split(key, nb)
+        per = [init_params(keys[i], sub) for i in range(nb)]
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+        if spec.learn_bias:
+            # learn one full-width bias (cheap; block-local A)
+            stacked["learn"]["v_full"] = jnp.zeros((d,), jnp.float32)
+        return stacked
+    k_mat, k_misc = jax.random.split(key)
+
+    if spec.kind in ("hadamard", "identity"):
+        a0 = (random_hadamard(k_mat, d) if spec.kind == "hadamard"
+              else jnp.eye(d))
+        return {"learn": {}, "fixed": {"A": a0}}
+
+    if spec.kind == "block_hadamard":
+        a0 = block_diag_init(k_mat, d, min(spec.block, d), "hadamard", 0.0)
+        return {"learn": {}, "fixed": {"A": a0}}
+
+    a0 = np.asarray(_init_matrix(k_mat, spec), dtype=np.float64)
+
+    if spec.kind in ("lu", "invertible"):
+        import scipy.linalg as sla
+        p, l, u = sla.lu(a0)
+        s = np.diagonal(u).copy()
+        learn = {
+            "L": jnp.asarray(np.tril(l, -1), jnp.float32),
+            "U": jnp.asarray(np.triu(u, 1), jnp.float32),
+            "logs": jnp.asarray(np.log(np.abs(s) + 1e-12), jnp.float32),
+        }
+        fixed = {
+            "perm": jnp.asarray(np.argmax(p, axis=1), jnp.int32),
+            "sign": jnp.asarray(np.sign(s), jnp.float32),
+        }
+    elif spec.kind in ("qr", "orthogonal", "orth_scale"):
+        import scipy.linalg as sla
+        q, r = np.linalg.qr(a0)
+        # ensure det(q) = +1 so the real matrix log exists & is skew
+        detq = np.linalg.det(q)
+        if detq < 0:
+            q[:, 0] *= -1.0
+            r[0, :] *= -1.0
+        g = np.real(sla.logm(q))
+        g = (g - g.T)  # exact skew; materialize uses exp(0.5(G - G^T))
+        s = np.diagonal(r).copy()
+        learn = {"G": jnp.asarray(g, jnp.float32)}
+        fixed = {"sign": jnp.asarray(np.sign(s), jnp.float32)}
+        if spec.kind == "qr":
+            learn["R"] = jnp.asarray(np.triu(r, 1), jnp.float32)
+            learn["logs"] = jnp.asarray(np.log(np.abs(s) + 1e-12), jnp.float32)
+        elif spec.kind == "orth_scale":
+            # OSTQuant-style: orthogonal Q × learned diagonal scaling
+            fixed["R"] = jnp.zeros((d, d), jnp.float32)
+            learn["logs"] = jnp.zeros((d,), jnp.float32)
+            fixed["sign"] = jnp.ones((d,), jnp.float32)
+        else:  # orthogonal-only: R=0, s=1 fixed
+            fixed["R"] = jnp.zeros((d, d), jnp.float32)
+            fixed["logs"] = jnp.zeros((d,), jnp.float32)
+            fixed["sign"] = jnp.ones((d,), jnp.float32)
+    elif spec.kind == "kron":
+        # FlatQuant structure: A = A1 ⊗ A2 with d = d1*d2, d1,d2 ~ sqrt(d)
+        d1 = _near_sqrt_factor(d)
+        d2 = d // d1
+        learn = {
+            "K1": jnp.asarray(np.eye(d1), jnp.float32),
+            "K2": jnp.asarray(np.eye(d2), jnp.float32),
+        }
+        fixed = {}
+    else:
+        raise ValueError(spec.kind)
+
+    if spec.learn_bias and spec.kind != "kron":
+        learn["v"] = jnp.zeros((d,), jnp.float32)
+    elif spec.learn_bias and spec.kind == "kron":
+        learn["v"] = jnp.zeros((d,), jnp.float32)
+    return {"learn": learn, "fixed": fixed}
+
+
+def _near_sqrt_factor(d: int) -> int:
+    best = 1
+    for f in range(1, int(np.sqrt(d)) + 1):
+        if d % f == 0:
+            best = f
+    return best
+
+
+def materialize(params: Params, spec: TransformSpec):
+    """Build (A, v) from parameters. Differentiable."""
+    learn, fixed = params["learn"], params["fixed"]
+    d = spec.d
+    if spec.granularity == "block" and spec.kind in ("lu", "qr", "orthogonal",
+                                                     "invertible",
+                                                     "orth_scale"):
+        sub = dataclasses.replace(spec, d=spec.block, granularity="full")
+        v_full = learn.get("v_full", jnp.zeros((d,), jnp.float32))
+        inner = {"learn": {k: v_ for k, v_ in learn.items()
+                           if k != "v_full"},
+                 "fixed": fixed}
+        blocks, _ = jax.vmap(lambda p: materialize(p, sub))(inner)
+        return block_diagonal(blocks), v_full
+    v = learn.get("v", jnp.zeros((d,), jnp.float32))
+
+    if spec.kind in ("hadamard", "identity", "block_hadamard"):
+        return fixed["A"], v
+
+    if spec.kind in ("lu", "invertible"):
+        eye = jnp.eye(d, dtype=jnp.float32)
+        l = jnp.tril(learn["L"], -1) + eye
+        s = fixed["sign"] * jnp.exp(learn["logs"])
+        u = jnp.triu(learn["U"], 1) + jnp.diag(s)
+        a = (l @ u)[fixed["perm"], :]  # P @ (L @ U): row permutation
+        return a, v
+
+    if spec.kind in ("qr", "orthogonal", "orth_scale"):
+        g = learn["G"]
+        skew = 0.5 * (g - g.T)
+        q = jax.scipy.linalg.expm(skew)
+        r_off = learn.get("R", fixed.get("R"))
+        logs = learn.get("logs", fixed.get("logs"))
+        sign = fixed["sign"]
+        r = jnp.triu(r_off, 1) + jnp.diag(sign * jnp.exp(logs))
+        return q @ r, v
+
+    if spec.kind == "kron":
+        a = jnp.kron(learn["K1"], learn["K2"])
+        return a, v
+
+    raise ValueError(spec.kind)
+
+
+def inverse(a: jnp.ndarray) -> jnp.ndarray:
+    return jnp.linalg.inv(a.astype(jnp.float32))
+
+
+def loss_vol(params: Params, spec: TransformSpec) -> jnp.ndarray:
+    """Volume-preserving regularizer (Eq. 7, log form):
+    (Σ_i log|s_i|)² — shares minima with (∏|s_i| − 1)² but stable."""
+    learn = params["learn"]
+    if "logs" in learn:
+        return jnp.sum(learn["logs"]) ** 2
+    if spec.kind == "kron":
+        # |det(A1⊗A2)| = |det A1|^{d2} |det A2|^{d1}
+        s1 = jnp.linalg.slogdet(learn["K1"])[1]
+        s2 = jnp.linalg.slogdet(learn["K2"])[1]
+        d1, d2 = learn["K1"].shape[0], learn["K2"].shape[0]
+        return (d2 * s1 + d1 * s2) ** 2
+    return jnp.asarray(0.0, jnp.float32)
+
+
+def diag_reg(params: Params) -> jnp.ndarray:
+    """Secondary regularizer (Appendix D.1): keep diag entries near one."""
+    learn = params["learn"]
+    if "logs" in learn:
+        return jnp.sum(learn["logs"] ** 2)
+    return jnp.asarray(0.0, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Application helpers
+# ---------------------------------------------------------------------------
+
+def forward(x: jnp.ndarray, a: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """T(x) = x @ A + v (rows)."""
+    return x @ a.astype(x.dtype) + v.astype(x.dtype)
+
+
+def backward(y: jnp.ndarray, a_inv: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """T^{-1}(y) = (y - v) @ A^{-1}."""
+    return (y - v.astype(y.dtype)) @ a_inv.astype(y.dtype)
+
+
+def transform_mse(x: jnp.ndarray, a: jnp.ndarray, v: jnp.ndarray,
+                  mx_cfg) -> jnp.ndarray:
+    """Definition 3.2: E(T) = 1/d E||x − T⁻¹(Q(T(x)))||² (for analysis)."""
+    from . import mx as mxlib
+    y = forward(x, a, v)
+    q = mxlib.quantize(y, mx_cfg, ste=False)
+    back = backward(q, inverse(a), v)
+    return jnp.mean(jnp.sum((x - back) ** 2, axis=-1) / x.shape[-1])
+
+
+def orthogonality_deviation(a: jnp.ndarray) -> jnp.ndarray:
+    """Fig. 3a metric: ||AᵀA − I||_σ."""
+    d = a.shape[0]
+    m = a.T @ a - jnp.eye(d, dtype=a.dtype)
+    return jnp.linalg.norm(m, ord=2)
+
+
+def offblock_norm(a: jnp.ndarray, block: int) -> jnp.ndarray:
+    """Fig. 3b metric: spectral norm of A with block-diagonal zeroed."""
+    d = a.shape[0]
+    nb = d // block
+    mask = 1.0 - np.kron(np.eye(nb), np.ones((block, block)))
+    return jnp.linalg.norm(a * jnp.asarray(mask, a.dtype), ord=2)

@@ -1,0 +1,69 @@
+"""Pallas TPU kernel: fused online T3 (block-Hadamard) + MX quantization.
+
+The one runtime op LATMiX adds: before the FFN down projection the
+activation is rotated by blockdiag(H₃₂) (inverse folded into the weights)
+and immediately MX-quantized. Fusing the two saves one full HBM round-trip
+of the (tokens × d_ff) tensor — the d_ff stream is the widest activation in
+the network, so this is the highest-leverage fusion in the serving path.
+
+The 32×32 Hadamard multiply maps to a single MXU pass per (BM, 32) slab:
+we reshape the (BM, BK) tile to (BM·BK/32, 32) and right-multiply by H₃₂.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core import transforms as tfm
+from .mx_quant import MXBLOCK, _format_consts, _quant_tile
+
+
+def _hadamard_quant_kernel(x_ref, h_ref, codes_ref, scales_ref, *, fmt):
+    grid, mids, r_max, center = _format_consts(fmt)
+    x = x_ref[...].astype(jnp.float32)
+    bm, bk = x.shape
+    h = h_ref[...].astype(jnp.float32)            # (32, 32)
+    xb = x.reshape(bm, bk // MXBLOCK, MXBLOCK)
+    # one MXU pass: (BM * BK/32, 32) @ (32, 32)
+    yb = jnp.dot(xb.reshape(-1, MXBLOCK), h,
+                 preferred_element_type=jnp.float32)
+    yb = yb.reshape(bm, bk // MXBLOCK, MXBLOCK)
+    codes, scale = _quant_tile(yb, grid, mids, r_max, center)
+    codes_ref[...] = codes.reshape(bm, bk).astype(jnp.uint8)
+    scales_ref[...] = scale.astype(jnp.float32)
+
+
+def hadamard_quant(x: jnp.ndarray, fmt: str = "mxfp4", *, bm: int = 256,
+                   bk: int = 512, interpret: bool = True):
+    """x: (M, K) -> (codes uint8 (M, K), scales f32 (M, K//32)) of
+    Q_mx(x · blockdiag(H₃₂))."""
+    M, K = x.shape
+    bm, bk = min(bm, M), min(bk, K)
+    while M % bm:
+        bm //= 2
+    while K % bk:
+        bk //= 2
+    assert bk % MXBLOCK == 0
+    h = tfm.hadamard_matrix(MXBLOCK, dtype=jnp.float32)
+    kern = functools.partial(_hadamard_quant_kernel, fmt=fmt)
+    return pl.pallas_call(
+        kern,
+        grid=(M // bm, K // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+            pl.BlockSpec((MXBLOCK, MXBLOCK), lambda i, j: (0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bk // MXBLOCK), lambda i, j: (i, j)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((M, K), jnp.uint8),
+            jax.ShapeDtypeStruct((M, K // MXBLOCK), jnp.float32),
+        ),
+        interpret=interpret,
+    )(x, h)

@@ -1,0 +1,100 @@
+"""Pallas TPU kernel: fused activation-quantizing MX GEMM.
+
+  y = Q_mx(x) @ dequant(w_codes, w_scales)
+
+— the deployment hot-spot after LATMiX folding: activations arrive bf16,
+are MX-quantized on the fly (per-row 32-blocks along K), the weight tile is
+decoded from uint8 codes with its power-of-two column scales, and the MXU
+accumulates fp32 over the K grid axis.
+
+Tiling: grid (M/BM, N/BN, K/BK), K innermost so the (BM, BN) fp32
+accumulator tile stays resident in VMEM across the K sweep. BM/BN/BK are
+multiples of 128 (MXU-aligned); BK a multiple of 32 keeps whole MX blocks
+inside one tile so scales never straddle instances.
+
+VMEM per instance (BM=BN=256, BK=512): x 512K + w codes 128K + w scales 2K
++ acc 256K ≈ 0.9 MiB « 16 MiB.
+
+On CPU this runs in interpret mode for correctness only; the roofline
+memory term uses the 4-bit packed byte count (see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core import mx as mxlib
+from .mx_quant import MXBLOCK, _format_consts, _quant_tile
+
+
+def _decode_codes(codes, grid, center):
+    """uint8 symmetric code -> float value, via static compares (the grid
+    has <= 8 magnitudes; Pallas forbids captured jnp LUT constants)."""
+    rel = codes.astype(jnp.int32) - center
+    sign = jnp.where(rel < 0, -1.0, 1.0).astype(jnp.float32)
+    k = jnp.abs(rel)
+    val = jnp.zeros(codes.shape, jnp.float32)
+    for i, g in enumerate(grid):                  # static python loop
+        val += jnp.where(k == i, float(g), 0.0)
+    return sign * val
+
+
+def _mx_matmul_kernel(x_ref, wc_ref, ws_ref, out_ref, *, fmt, n_k):
+    grid, mids, r_max, center = _format_consts(fmt)
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[...].astype(jnp.float32)            # (BM, BK)
+    bm, bk = x.shape
+    xb = x.reshape(bm, bk // MXBLOCK, MXBLOCK)
+    codes, scale = _quant_tile(xb, grid, mids, r_max, center)
+    xq = (_decode_codes(codes, grid, center)
+          * scale[..., None]).reshape(bm, bk)
+
+    wc = wc_ref[...]                              # (BK, BN) uint8
+    ws = ws_ref[...]                              # (BK//32, BN) f32
+    wvals = _decode_codes(wc, grid, center)
+    bn = wc.shape[1]
+    w = (wvals.reshape(bk // MXBLOCK, MXBLOCK, bn)
+         * ws[:, None, :]).reshape(bk, bn)
+
+    out_ref[...] += jnp.dot(xq, w, preferred_element_type=jnp.float32)
+
+
+def mx_matmul(x: jnp.ndarray, w_codes: jnp.ndarray, w_scales: jnp.ndarray,
+              fmt: str = "mxfp4", *, bm: int = 256, bn: int = 256,
+              bk: int = 512, interpret: bool = True,
+              out_dtype=jnp.float32) -> jnp.ndarray:
+    """x: (M, K); w_codes: (K, N) uint8; w_scales: (K//32, N) f32."""
+    M, K = x.shape
+    K2, N = w_codes.shape
+    assert K == K2 and w_scales.shape == (K // MXBLOCK, N)
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    while M % bm:
+        bm //= 2
+    while N % bn:
+        bn //= 2
+    while K % bk:
+        bk //= 2
+    assert bk % MXBLOCK == 0, (bk,)
+    kern = functools.partial(_mx_matmul_kernel, fmt=fmt, n_k=K // bk)
+    out = pl.pallas_call(
+        kern,
+        grid=(M // bm, N // bn, K // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bk // MXBLOCK, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        interpret=interpret,
+    )(x, w_codes, w_scales)
+    return out.astype(out_dtype)

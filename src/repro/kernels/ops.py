@@ -1,0 +1,46 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True on CPU (the kernel body executes in Python
+for validation); on TPU backends it defaults to False (compiled Mosaic).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import hadamard_quant as _hq
+from . import mx_matmul as _mm
+from . import mx_quant as _mq
+from . import ref
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "interpret"))
+def mx_quantize(x, fmt: str = "mxfp4", interpret: bool | None = None):
+    it = _default_interpret() if interpret is None else interpret
+    return _mq.mx_quant(x, fmt, interpret=it)
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "interpret"))
+def mx_gemm(x, w_codes, w_scales, fmt: str = "mxfp4",
+            interpret: bool | None = None):
+    it = _default_interpret() if interpret is None else interpret
+    return _mm.mx_matmul(x, w_codes, w_scales, fmt, interpret=it)
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "interpret"))
+def t3_quantize(x, fmt: str = "mxfp4", interpret: bool | None = None):
+    it = _default_interpret() if interpret is None else interpret
+    return _hq.hadamard_quant(x, fmt, interpret=it)
+
+
+# re-exported oracles
+mx_quant_ref = ref.mx_quant_ref
+mx_matmul_ref = ref.mx_matmul_ref
+hadamard_quant_ref = ref.hadamard_quant_ref
+quantize_weight_for_kernel = ref.quantize_weight_for_kernel

@@ -1,0 +1,64 @@
+"""4-bit code packing — the deployable HBM layout.
+
+The interpreter kernels address uint8 codes (one per byte); deployment
+stores two 4-bit codes per byte plus one E8M0 (biased power-of-two
+exponent) scale byte per 32-block. These utilities convert between the
+layouts and are the source of the roofline packed-byte accounting
+(`mx.packed_nbytes`).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mx as mxlib
+
+
+def pack_codes(codes: jnp.ndarray) -> jnp.ndarray:
+    """uint8 codes in [0, 15] -> packed uint8, two per byte (even index in
+    the low nibble). Last axis must be even."""
+    *lead, d = codes.shape
+    c = codes.reshape(*lead, d // 2, 2).astype(jnp.uint8)
+    return (c[..., 0] | (c[..., 1] << 4)).astype(jnp.uint8)
+
+
+def unpack_codes(packed: jnp.ndarray) -> jnp.ndarray:
+    lo = packed & 0xF
+    hi = (packed >> 4) & 0xF
+    *lead, h = packed.shape
+    out = jnp.stack([lo, hi], axis=-1).reshape(*lead, h * 2)
+    return out.astype(jnp.uint8)
+
+
+def pack_scales_e8m0(scales: jnp.ndarray) -> jnp.ndarray:
+    """Power-of-two f32 scales -> E8M0 byte (biased exponent, OCP MX)."""
+    e = jnp.round(jnp.log2(scales.astype(jnp.float32))).astype(jnp.int32)
+    return (e + 127).astype(jnp.uint8)
+
+
+def unpack_scales_e8m0(b: jnp.ndarray) -> jnp.ndarray:
+    return jnp.exp2(b.astype(jnp.int32) - 127).astype(jnp.float32)
+
+
+def pack_weight(w: jnp.ndarray, fmt: str = "mxfp4"):
+    """(K, N) float weight -> deployable bundle:
+    {codes_packed (K//2, N) uint8, scales_e8m0 (K//32, N) uint8}."""
+    cfg = mxlib.MXConfig(fmt=fmt, block_size=32)
+    codes_t, scales_t = mxlib.encode(w.T, cfg)     # blocked along K
+    codes, scales = codes_t.T, scales_t.T          # (K, N), (K//32, N)
+    packed = pack_codes(codes.T).T                 # pack along K
+    return {"codes_packed": packed,
+            "scales_e8m0": pack_scales_e8m0(scales),
+            "fmt": fmt, "shape": w.shape}
+
+
+def unpack_weight(bundle, dtype=jnp.float32) -> jnp.ndarray:
+    cfg = mxlib.MXConfig(fmt=bundle["fmt"], block_size=32)
+    codes = unpack_codes(bundle["codes_packed"].T).T
+    scales = unpack_scales_e8m0(bundle["scales_e8m0"])
+    return mxlib.decode(codes.T, scales.T, cfg, dtype).T
+
+
+def packed_bundle_nbytes(bundle) -> int:
+    return (bundle["codes_packed"].size
+            + bundle["scales_e8m0"].size)

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for the Pallas kernels (the source of truth in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mx as mxlib
+from repro.core import transforms as tfm
+
+
+def mx_quant_ref(x: jnp.ndarray, fmt: str = "mxfp4", block: int = 32):
+    """(M, K) -> (codes uint8 (M, K), scales f32 (M, K//block))."""
+    cfg = mxlib.MXConfig(fmt=fmt, block_size=block)
+    return mxlib.encode(x, cfg)
+
+
+def mx_dequant_ref(codes, scales, fmt: str = "mxfp4", block: int = 32,
+                   dtype=jnp.float32):
+    cfg = mxlib.MXConfig(fmt=fmt, block_size=block)
+    return mxlib.decode(codes, scales, cfg, dtype)
+
+
+def mx_matmul_ref(x: jnp.ndarray, w_codes: jnp.ndarray,
+                  w_scales: jnp.ndarray, fmt: str = "mxfp4",
+                  block: int = 32) -> jnp.ndarray:
+    """Fused act-quant MX GEMM oracle.
+
+    x: (M, K) float; w_codes: (K, N) uint8; w_scales: (K//block, N) f32.
+    y = Q_mx(x) @ dequant(w), fp32 accumulation.
+    """
+    cfg = mxlib.MXConfig(fmt=fmt, block_size=block)
+    xq = mxlib.quantize(x.astype(jnp.float32), cfg, ste=False)
+    w = mx_dequant_ref(w_codes.T, w_scales.T, fmt, block).T
+    return xq @ w
+
+
+def hadamard_quant_ref(x: jnp.ndarray, fmt: str = "mxfp4",
+                       block: int = 32):
+    """Online T3: block-Hadamard rotate then MX-encode.
+    x: (M, K) -> (codes (M, K), scales (M, K//block))."""
+    h = tfm.hadamard_matrix(block, dtype=jnp.float32)
+    y = tfm.apply_blockwise(x.astype(jnp.float32), h)
+    return mx_quant_ref(y, fmt, block)
+
+
+def quantize_weight_for_kernel(w: jnp.ndarray, fmt: str = "mxfp4",
+                               block: int = 32):
+    """Pre-quantize a (K, N) weight along K into kernel layout:
+    (codes (K, N) uint8, scales (K//block, N) f32)."""
+    cfg = mxlib.MXConfig(fmt=fmt, block_size=block)
+    codes_t, scales_t = mxlib.encode(w.T, cfg)      # blocked along K
+    return codes_t.T, scales_t.T

@@ -1,0 +1,325 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: prove every (architecture × input shape × mesh) cell
+lowers, SPMD-partitions, and compiles on the production meshes.
+
+  single pod : (16, 16)    ("data", "model")        256 chips
+  multi-pod  : (2, 16, 16) ("pod", "data", "model") 512 chips
+
+For each cell we jit the step (train_step for training shapes, prefill /
+serve_step for inference shapes), lower with abstract ShapeDtypeStruct
+inputs (no allocation), compile, and record:
+
+  · compiled.memory_analysis()  — per-device bytes (proves it fits)
+  · compiled.cost_analysis()    — per-device FLOPs / bytes accessed
+  · collective bytes parsed from compiled.as_text() (per op kind)
+
+Results go to experiments/dryrun/<arch>__<shape>__<mesh>.json and are the
+inputs of the roofline analysis (repro.roofline.analyze).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh both [--quant] [--accum auto]
+"""
+import argparse
+import json
+import pathlib
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.configs.base import SHAPES, shape_applicable
+from repro.core.quantize import QuantMode
+from repro.launch import mesh as mesh_lib
+from repro.launch import pcontext as pctx
+from repro.launch import shardings as sh
+from repro.launch import steps as steps_lib
+from repro.training import optimizer as opt
+
+# per-arch gradient-accumulation defaults (microbatch = 1 sequence/device
+# for the giants; more for small models)
+ACCUM = {
+    # §Perf: sequence parallelism makes saved activations cheap, so the
+    # accumulation count is set by the HBM budget, not activation memory —
+    # fewer microbatches = fewer FSDP param re-gathers per step.
+    "deepseek_67b": 4, "internvl2_26b": 16, "qwen2_7b": 4,
+    "moonshot_v1_16b_a3b": 4, "qwen2_moe_a2_7b": 2, "recurrentgemma_2b": 2,
+    "hubert_xlarge": 2, "tinyllama_1_1b": 2, "qwen2_0_5b": 1,
+    "mamba2_130m": 1,
+}
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                "s8": 1, "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8,
+                "s16": 2, "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLL_RE = re.compile(
+    r"=\s+(\w+)\[([\d,]*)\][^\s]*\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum output-operand bytes of every collective op, per kind."""
+    out = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        dt, dims, kind = m.group(1), m.group(2), m.group(3)
+        n = 1
+        for tok in dims.split(","):
+            if tok:
+                n *= int(tok)
+        b = n * _DTYPE_BYTES.get(dt, 4)
+        e = out.setdefault(kind, {"count": 0, "bytes": 0})
+        e["count"] += 1
+        e["bytes"] += b
+    return out
+
+
+def build_cell(cfg, shape, mesh, quant: bool, accum: str = "auto",
+               baked: bool = False):
+    """Returns (step_fn, in_shardings, args) ready for jit().lower().
+
+    baked=True serves with *pre-quantized* weights (weight_cfg=None: GPTQ/
+    RTN already snapped them to the MX grid offline) — the deployable path;
+    baked=False re-fake-quantizes weights inside the step (the naive
+    baseline, §Perf cell 3)."""
+    dp = mesh_lib.dp_axes(mesh)
+    dp_total = 1
+    for a in dp:
+        dp_total *= mesh.shape[a]
+
+    aparams = steps_lib.abstract_params(cfg)
+    mode = "train" if shape.kind == "train" else "serve"
+    psh = sh.params_shardings(aparams, cfg, mode, mesh)
+    specs = steps_lib.input_specs(cfg, shape)
+    if quant and shape.kind != "train":
+        qm = QuantMode.mxfp4(weights=not baked)
+    else:
+        qm = QuantMode.off()
+
+    if shape.kind == "train":
+        n_acc = ACCUM.get(cfg.name.replace("-", "_").replace(".", "_"), 1) \
+            if accum == "auto" else int(accum)
+        per_dev = max(1, shape.global_batch // dp_total)
+        while n_acc > 1 and (shape.global_batch % n_acc
+                             or (shape.global_batch // n_acc) % dp_total):
+            n_acc //= 2
+        n_acc = min(n_acc, per_dev)
+        step = steps_lib.make_train_step(cfg, opt.AdamWConfig(),
+                                         accum=n_acc)
+        ost = steps_lib.abstract_opt_state(cfg)
+        osh = sh.opt_state_shardings(ost, psh, mesh)
+        bsh = sh.train_batch_shardings(cfg, shape, mesh)
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        scalar = NamedSharding(mesh, P())
+        return (step, (psh, osh, bsh), (psh, osh, scalar, scalar),
+                (aparams, ost, specs["batch"]), {"accum": n_acc})
+
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    scalar = NamedSharding(mesh, P())
+    dp_or_none = sh.batch_spec(cfg, shape.global_batch, mesh)
+    tok_sh = NamedSharding(mesh, P(dp_or_none))
+
+    if shape.kind == "prefill":
+        step = steps_lib.make_prefill_step(cfg, qm)
+        in_sh = (psh, NamedSharding(
+            mesh, P(dp_or_none, *([None] * (1 if cfg.embed_inputs else 2)))))
+        if cfg.family == "encoder":     # forward-only: (B, S) predictions
+            out_sh = NamedSharding(mesh, P(dp_or_none, None))
+            return (step, in_sh, out_sh, (aparams, specs["inputs"]), {})
+        out_cache = jax.eval_shape(step, aparams, specs["inputs"])[1]
+        csh = sh.cache_shardings(out_cache, cfg, shape.global_batch, mesh)
+        return (step, in_sh, (tok_sh, csh), (aparams, specs["inputs"]), {})
+
+    if shape.kind == "latmix":
+        # the paper's own workload: one distributed transform-learning step
+        from repro.core import latmix as lx_lib
+        lx = lx_lib.LatmixConfig(kind="lu", steps=100)
+        step = steps_lib.make_latmix_step(cfg, lx)
+        # init_omega uses scipy (LU/QR of the init matrix) — not traceable
+        # under eval_shape; build concretely once and abstract the shapes
+        omega_c = lx_lib.init_omega(jax.random.PRNGKey(0), cfg, lx)
+        omega = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), omega_c)
+        del omega_c
+        learn = {k: v["learn"] for k, v in omega.items()}
+        fixd = {k: v["fixed"] for k, v in omega.items()}
+        from repro.training import optimizer as opt_lib
+        ost = jax.eval_shape(opt_lib.init_state, learn)
+        B, S = shape.global_batch, shape.seq_len
+        batch = {"inputs": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                 "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        teacher = jax.ShapeDtypeStruct(
+            (B, S, cfg.vocab_size), steps_lib.param_dtype(cfg))
+        rep = jax.tree.map(lambda _: NamedSharding(mesh, P()), learn)
+        rep_f = jax.tree.map(lambda _: NamedSharding(mesh, P()), fixd)
+        rep_o = jax.tree.map(lambda _: NamedSharding(mesh, P()), ost)
+        bsh2 = sh.train_batch_shardings(cfg, shape, mesh)
+        tsh = NamedSharding(mesh, P(dp_or_none, None, None))
+        in_sh = (psh, rep, rep_f, rep_o, bsh2, tsh)
+        out_sh = (rep, rep_o, scalar)
+        args = (aparams, learn, fixd, ost, batch, teacher)
+        return (step, in_sh, out_sh, args, {})
+
+    # decode
+    step = steps_lib.make_serve_step(cfg, qm)
+    csh = sh.cache_shardings(specs["cache"], cfg, shape.global_batch, mesh)
+    if cfg.embed_inputs:
+        in_inp = NamedSharding(mesh, P(dp_or_none))
+    else:
+        in_inp = NamedSharding(mesh, P(dp_or_none, None))
+    in_sh = (psh, csh, in_inp, scalar)
+    args = (aparams, specs["cache"], specs["inputs"], specs["cur_len"])
+    return (step, in_sh, (tok_sh, csh), args, {})
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, quant: bool,
+             outdir: pathlib.Path, accum: str = "auto",
+             arch_cfg=None, baked: bool = True) -> dict:
+    cfg = arch_cfg or configs.get(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "multipod_2x16x16" if multi_pod else "pod_16x16"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "family": cfg.family, "quant": bool(quant and
+                                               shape.kind != "train")}
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        rec["status"] = "skipped"
+        rec["reason"] = why
+        outdir.mkdir(parents=True, exist_ok=True)
+        (outdir / f"{arch}__{shape_name}__{mesh_name}.json").write_text(
+            json.dumps(rec, indent=1))
+        return rec
+
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        step, in_sh, out_sh, args, extra = build_cell(cfg, shape, mesh,
+                                                      quant, accum,
+                                                      baked=baked)
+        rec.update(extra)
+        seq_ax = "model" if shape.kind == "train" else None
+        with mesh, pctx.activate(mesh, batch_axes=mesh_lib.dp_axes(mesh),
+                                 model_axis="model", seq_axis=seq_ax):
+            lowered = jax.jit(step, in_shardings=in_sh,
+                              out_shardings=out_sh).lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            ma = compiled.memory_analysis()
+            ca = compiled.cost_analysis() or {}
+            hlo = compiled.as_text()
+        # CPU-backend bf16 emulation (f32 operand converts, loop-hoisted)
+        # inflates temp memory with phantom buffers absent on TPU; an
+        # all-f32 compile has no emulation, so f32/2 is the faithful bf16
+        # estimate for float-dominated programs (serve cells).
+        bf16_est = None
+        if shape.kind != "train" and cfg.dtype == "bfloat16":
+            import dataclasses as _dc
+            cfg32 = _dc.replace(cfg, dtype="float32")
+            step32, in32, out32, args32, _ = build_cell(
+                cfg32, shape, mesh, quant, accum, baked=baked)
+            with mesh, pctx.activate(mesh,
+                                     batch_axes=mesh_lib.dp_axes(mesh),
+                                     model_axis="model"):
+                c32 = jax.jit(step32, in_shardings=in32,
+                              out_shardings=out32).lower(*args32).compile()
+                m32 = c32.memory_analysis()
+            bf16_est = int((m32.argument_size_in_bytes
+                            + m32.temp_size_in_bytes) / 2)
+        rec.update({
+            "status": "ok",
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "flops_per_device": float(ca.get("flops", 0.0)),
+            "bytes_accessed_per_device": float(ca.get("bytes accessed",
+                                                      0.0)),
+            "transcendentals": float(ca.get("transcendentals", 0.0)),
+            "memory": {
+                "argument_bytes": int(ma.argument_size_in_bytes),
+                "output_bytes": int(ma.output_size_in_bytes),
+                "temp_bytes": int(ma.temp_size_in_bytes),
+                "generated_code_bytes": int(
+                    ma.generated_code_size_in_bytes),
+            },
+            "collectives": parse_collectives(hlo),
+            "memory_bf16_estimate_bytes": bf16_est,
+            "n_devices": int(mesh.size),
+            "param_count": cfg.param_count(),
+            "param_count_active": cfg.param_count(active_only=True),
+        })
+    except Exception as e:  # noqa: BLE001 — record the failure, keep going
+        rec["status"] = "failed"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    outdir.mkdir(parents=True, exist_ok=True)
+    path = outdir / f"{arch}__{shape_name}__{mesh_name}.json"
+    path.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--quant", action="store_true", default=True)
+    ap.add_argument("--no-quant", dest="quant", action="store_false")
+    ap.add_argument("--accum", default="auto")
+    ap.add_argument("--baked", action="store_true", default=True,
+                    help="serve with pre-quantized weights (deployable)")
+    ap.add_argument("--no-baked", dest="baked", action="store_false")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    from repro.configs.base import ASSIGNED_SHAPES
+    archs = configs.ARCH_IDS if args.arch == "all" else [
+        configs.canonical(args.arch)]
+    shapes = (list(ASSIGNED_SHAPES) if args.shape == "all"
+              else [args.shape])
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    outdir = pathlib.Path(args.out)
+
+    summary = []
+    for arch in archs:
+        for shp in shapes:
+            for mp in meshes:
+                t0 = time.time()
+                rec = run_cell(arch, shp, mp, args.quant, outdir,
+                               args.accum, baked=args.baked)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    gb = (rec["memory"]["argument_bytes"]
+                          + rec["memory"]["temp_bytes"]) / 2**30
+                    est = rec.get("memory_bf16_estimate_bytes")
+                    if est:
+                        gb = est / 2**30
+                    extra = (f" mem/dev={gb:.2f}GiB "
+                             f"flops/dev={rec['flops_per_device']:.3e} "
+                             f"({rec['compile_s']:.0f}s compile)")
+                elif status == "failed":
+                    extra = " " + rec["error"][:120]
+                elif status == "skipped":
+                    extra = " " + rec["reason"]
+                print(f"[{status:7s}] {arch:22s} {shp:12s} "
+                      f"{'multi' if mp else 'single':6s}"
+                      f"{extra} ({time.time()-t0:.0f}s)", flush=True)
+                summary.append(rec)
+    n_ok = sum(1 for r in summary if r["status"] == "ok")
+    n_skip = sum(1 for r in summary if r["status"] == "skipped")
+    n_fail = sum(1 for r in summary if r["status"] == "failed")
+    print(f"\ndry-run: {n_ok} ok, {n_skip} skipped (documented), "
+          f"{n_fail} FAILED")
+    (outdir / "summary.json").write_text(json.dumps(summary, indent=1))
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

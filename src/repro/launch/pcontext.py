@@ -1,0 +1,93 @@
+"""Lightweight partitioning context.
+
+Model code calls ``pctx.shard(x, "batch", None, "model")`` to annotate
+activation shardings without threading a mesh through every signature.
+Outside a distributed context (unit tests, single-device runs) the calls
+are no-ops. The launch layer activates the context around lowering:
+
+    with pctx.activate(mesh, batch_axes=("pod", "data"), model_axis="model"):
+        jax.jit(step, ...).lower(...)
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def _get():
+    if not hasattr(_state, "ctx"):
+        _state.ctx = None
+    return _state.ctx
+
+
+@contextlib.contextmanager
+def activate(mesh: Mesh, batch_axes: Sequence[str] = ("data",),
+             model_axis: Optional[str] = "model",
+             seq_axis: Optional[str] = None):
+    """seq_axis: mesh axis for sequence parallelism — the residual stream
+    carried between layers is sharded along sequence over this axis
+    (training only), so saved-for-backward activations shrink by the TP
+    degree; GSPMD inserts the all-gather/reduce-scatter pair per layer
+    (Megatron-SP)."""
+    prev = _get()
+    _state.ctx = {
+        "mesh": mesh,
+        "batch": tuple(batch_axes) if batch_axes else None,
+        "model": model_axis,
+        "seq": seq_axis,
+    }
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def active() -> bool:
+    return _get() is not None
+
+
+def resolve(name) -> Optional[object]:
+    """Map a logical axis name to mesh axes (or None)."""
+    ctx = _get()
+    if ctx is None or name is None:
+        return None
+    if name == "batch":
+        return ctx["batch"]
+    if name == "model":
+        return ctx["model"]
+    if name == "seq":
+        return ctx.get("seq")
+    return None
+
+
+def spec(*names) -> P:
+    return P(*[resolve(n) for n in names])
+
+
+def shard(x: jax.Array, *names) -> jax.Array:
+    """Apply a sharding constraint by logical names; no-op when inactive.
+    Divisibility-guarded: axes that do not divide the dimension are
+    dropped (e.g. batch=1 long-context decode, odd vocab sizes)."""
+    ctx = _get()
+    if ctx is None:
+        return x
+    mesh = ctx["mesh"]
+
+    def ok(dim, axes):
+        if axes is None:
+            return None
+        tup = (axes,) if isinstance(axes, str) else tuple(axes)
+        size = 1
+        for a in tup:
+            size *= mesh.shape[a]
+        return axes if dim % size == 0 else None
+
+    resolved = [ok(dim, resolve(n)) for dim, n in zip(x.shape, names)]
+    s = NamedSharding(mesh, P(*resolved))
+    return jax.lax.with_sharding_constraint(x, s)

@@ -1,0 +1,69 @@
+"""Serving entry point: PTQ a model (or load a checkpoint) and serve
+batched requests with the MX-quantized engine.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+        --reduced --method latmix-lu --fmt mxfp4 --requests 8
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--method", default="latmix-lu")
+    ap.add_argument("--fmt", default="mxfp4")
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=32)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro import configs
+    from repro.core import ptq
+    from repro.data import synthetic
+    from repro.models import api
+    from repro.serving.engine import Engine
+    from repro.training import checkpoint as ckpt
+
+    cfg = (configs.get_reduced(args.arch) if args.reduced
+           else configs.get(args.arch))
+    if args.ckpt_dir and ckpt.latest_step(args.ckpt_dir) is not None:
+        aparams = jax.eval_shape(
+            lambda k: api.init(k, cfg), jax.random.PRNGKey(0))
+        params, man = ckpt.restore(args.ckpt_dir,
+                                   {"params": aparams, "opt": None})
+        params = params["params"]
+        print(f"loaded checkpoint step {man['step']}")
+    else:
+        params = api.init(jax.random.PRNGKey(0), cfg)
+        print("no checkpoint — random init (demo mode)")
+
+    src = synthetic.make_source(cfg, 8, 64, 0)
+    calib = [{k: jnp.asarray(v) for k, v in src.batch(i).items()}
+             for i in range(3)]
+    t0 = time.time()
+    res = ptq.apply_method(args.method, params, cfg, calib, fmt=args.fmt,
+                           steps=args.steps)
+    print(f"PTQ [{args.method} / {args.fmt}] in {time.time()-t0:.0f}s")
+
+    eng = Engine(res.params, cfg, res.qm, batch_size=args.batch,
+                 max_len=args.prompt_len + args.max_new + 16)
+    stats = eng.throughput(n_requests=args.requests,
+                           prompt_len=args.prompt_len,
+                           max_new=args.max_new)
+    print(f"served {stats['tokens']} tokens in {stats['seconds']:.2f}s "
+          f"-> {stats['tok_per_s']:.1f} tok/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,169 @@
+"""Rule-based parameter / batch / cache shardings.
+
+Training: FSDP over "data" × TP over "model" (2D-sharded params; the
+"pod" axis is pure DP — params are *not* sharded across pods, gradients
+are all-reduced over it). Optimizer state mirrors the params (ZeRO-3).
+
+Serving: TP over "model" only (weights resident per pod, batch over
+data axes).
+
+Every rule is divisibility-guarded: a dimension that the mesh axis does
+not divide is left unsharded (e.g. batch=1 long-context, hubert's 504-way
+head, mamba's 3352-wide in_proj output).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from . import mesh as mesh_lib
+
+# weight-name role sets (shared by all families; path's last dict key)
+_COL = {"wq", "wk", "wv", "wg", "wu", "wx", "wy", "in_proj", "sg", "su"}
+_ROW = {"wo", "wd", "wor", "out_proj", "sd"}
+_EXP_COL = {"eg", "eu"}
+_EXP_ROW = {"ed"}
+_REPL = {"ln", "ln1", "ln2", "ln_f", "norm", "conv_b", "lam", "ga_w",
+         "ga_b", "gx_w", "gx_b", "A_log", "D", "dt_bias", "perm", "sign"}
+_BIAS = {"bq", "bk", "bv", "bo", "bg", "bu", "bd", "b_in", "b_out", "bx",
+         "by", "bor", "brouter", "bhead", "beg", "beu", "bsg", "bsu"}
+
+
+def _size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _div(dim: int, axes, mesh):
+    """axes if it divides dim, else None (unsharded)."""
+    if axes is None or dim <= 0:
+        return None
+    return axes if dim % _size(mesh, axes) == 0 else None
+
+
+def param_spec(name: str, shape, cfg: ArchConfig, mode: str, mesh) -> P:
+    fsdp = "data" if mode == "train" else None
+    tp = "model"
+    nd = len(shape)
+
+    def lead(n_extra):  # leading stacked-layer axes
+        return (None,) * (nd - n_extra)
+
+    if name in _REPL:
+        return P(*([None] * nd))
+    if name in _BIAS:
+        return P(*lead(1), _div(shape[-1], tp, mesh))
+    if name == "conv_w":          # (L, C, K)
+        return P(*lead(2), _div(shape[-2], tp, mesh), None)
+    if name in _COL:              # (..., d_in, d_out)
+        return P(*lead(2), _div(shape[-2], fsdp, mesh),
+                 _div(shape[-1], tp, mesh))
+    if name in _ROW:              # (..., d_in, d_out): d_in is the wide dim
+        return P(*lead(2), _div(shape[-2], tp, mesh),
+                 _div(shape[-1], fsdp, mesh))
+    if name in _EXP_COL:          # (L, E, d, fe)
+        if shape[-3] % _size(mesh, tp) == 0:   # expert parallel
+            return P(*lead(3), tp, _div(shape[-2], fsdp, mesh), None)
+        return P(*lead(3), None, _div(shape[-2], fsdp, mesh),
+                 _div(shape[-1], tp, mesh))
+    if name in _EXP_ROW:          # (L, E, fe, d)
+        if shape[-3] % _size(mesh, tp) == 0:
+            return P(*lead(3), tp, None, _div(shape[-1], fsdp, mesh))
+        return P(*lead(3), None, _div(shape[-2], tp, mesh),
+                 _div(shape[-1], fsdp, mesh))
+    if name == "router":          # (L, d, E)
+        return P(*lead(2), _div(shape[-2], fsdp, mesh), None)
+    if name == "embed":           # (V, d)
+        return P(_div(shape[0], tp, mesh), _div(shape[1], fsdp, mesh))
+    if name == "head":            # (d, V)
+        v_ax = _div(shape[1], tp, mesh)
+        if v_ax is None:          # odd vocab: row-parallel fallback
+            return P(_div(shape[0], tp, mesh), None)
+        return P(_div(shape[0], fsdp, mesh), v_ax)
+    if name in ("a", "v"):        # input_transform (d, d) / (d,)
+        return P(*([None] * nd))
+    # default: replicate
+    return P(*([None] * nd))
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if hasattr(entry, "key"):
+            return str(entry.key)
+    return ""
+
+
+def params_shardings(abstract_params, cfg: ArchConfig, mode: str, mesh):
+    def visit(path, leaf):
+        spec = param_spec(_leaf_name(path), leaf.shape, cfg, mode, mesh)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(visit, abstract_params)
+
+
+def opt_state_shardings(abstract_state, params_sh, mesh):
+    """AdamWState(step, m, v): m/v mirror the params."""
+    from repro.training.optimizer import AdamWState
+    return AdamWState(step=NamedSharding(mesh, P()),
+                      m=params_sh, v=jax.tree.map(lambda s: s, params_sh))
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache shardings
+# ---------------------------------------------------------------------------
+
+def batch_spec(cfg: ArchConfig, batch: int, mesh) -> P:
+    dp = mesh_lib.dp_axes(mesh)
+    return _div(batch, dp, mesh)
+
+
+def train_batch_shardings(cfg: ArchConfig, shape: ShapeConfig, mesh):
+    dp = batch_spec(cfg, shape.global_batch, mesh)
+    if cfg.embed_inputs:
+        inputs = NamedSharding(mesh, P(dp, None))
+    else:
+        inputs = NamedSharding(mesh, P(dp, None, None))
+    labels = NamedSharding(mesh, P(dp, None))
+    return {"inputs": inputs, "labels": labels}
+
+
+def cache_shardings(abstract_cache, cfg: ArchConfig, batch: int, mesh):
+    dp = batch_spec(cfg, batch, mesh)
+    tp = "model"
+
+    def visit(path, leaf):
+        name = _leaf_name(path)
+        sh = leaf.shape
+        if name in ("k", "v"):            # (L, B, S, kd)
+            return NamedSharding(mesh, P(None, dp, None,
+                                         _div(sh[-1], tp, mesh)))
+        if name in ("attn_k", "attn_v"):  # (ns, B, A, kd)
+            return NamedSharding(mesh, P(None, dp, None,
+                                         _div(sh[-1], tp, mesh)))
+        if name == "rec_h":               # (ns, 2, B, lru)
+            return NamedSharding(mesh, P(None, None, dp,
+                                         _div(sh[-1], tp, mesh)))
+        if name == "rec_conv":            # (ns, 2, B, lru, K-1)
+            return NamedSharding(mesh, P(None, None, dp,
+                                         _div(sh[-2], tp, mesh), None))
+        if name == "tail_h":              # (nt, B, lru)
+            return NamedSharding(mesh, P(None, dp,
+                                         _div(sh[-1], tp, mesh)))
+        if name == "tail_conv":           # (nt, B, lru, K-1)
+            return NamedSharding(mesh, P(None, dp,
+                                         _div(sh[-2], tp, mesh), None))
+        if name == "ssm":                 # (L, B, H, P, N)
+            return NamedSharding(mesh, P(None, dp, None, None,
+                                         _div(sh[-1], tp, mesh)))
+        if name == "conv":                # (L, B, conv_dim, K-1)
+            return NamedSharding(mesh, P(None, dp,
+                                         _div(sh[-2], tp, mesh), None))
+        return NamedSharding(mesh, P(*([None] * len(sh))))
+    return jax.tree_util.tree_map_with_path(visit, abstract_cache)

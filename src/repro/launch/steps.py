@@ -1,0 +1,163 @@
+"""Train / prefill / serve step builders + abstract input specs.
+
+The step functions are closed over the ArchConfig and are what dryrun.py,
+the trainer, and the serving engine jit. ``input_specs`` provides
+ShapeDtypeStruct stand-ins (weak-type-correct, no allocation) for every
+model input of a (arch × shape) cell.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core.quantize import QuantMode
+from repro.models import api
+from repro.training import optimizer as opt
+
+
+def param_dtype(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def abstract_params(cfg: ArchConfig):
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda k: api.init(k, cfg, param_dtype(cfg)), key)
+
+
+def abstract_opt_state(cfg: ArchConfig):
+    aparams = abstract_params(cfg)
+    return jax.eval_shape(opt.init_state, aparams)
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, max_len: int):
+    return jax.eval_shape(
+        lambda: api.init_cache(cfg, batch, max_len, param_dtype(cfg)))
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ArchConfig, ocfg: Optional[opt.AdamWConfig] = None,
+                    qm: QuantMode = QuantMode.off(), accum: int = 1):
+    """Train step with optional gradient accumulation: ``accum``
+    microbatches are processed with a lax.scan, gradients accumulated in
+    fp32 (param-sharded, so the buffer is ZeRO-sharded too), then a single
+    AdamW update. Keeps the saved-activation footprint at one microbatch
+    regardless of the global batch."""
+    ocfg = ocfg or opt.AdamWConfig()
+
+    def train_step(params, opt_state, batch):
+        if accum <= 1:
+            loss, grads = jax.value_and_grad(api.lm_loss)(params, cfg,
+                                                          batch, qm)
+        else:
+            B = jax.tree.leaves(batch)[0].shape[0]
+            mb = B // accum
+            micro = jax.tree.map(
+                lambda a: a.reshape((accum, mb) + a.shape[1:]), batch)
+
+            def body(carry, mb_batch):
+                g_acc, l_acc = carry
+                l, g = jax.value_and_grad(api.lm_loss)(params, cfg,
+                                                       mb_batch, qm)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(body, (zeros, jnp.float32(0)),
+                                            micro)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            loss = loss / accum
+        params, opt_state, info = opt.apply_updates(params, grads,
+                                                    opt_state, ocfg)
+        return params, opt_state, loss, info["grad_norm"]
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, qm: QuantMode = QuantMode.off()):
+    if cfg.family == "encoder":
+        # encoder "prefill" = the full bidirectional forward (per-frame
+        # classification); there is no cache.
+        def encoder_step(params, inputs):
+            logits = api.forward(params, cfg, inputs, qm)
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return encoder_step
+
+    def prefill_step(params, inputs):
+        logits, cache = api.prefill(params, cfg, inputs, qm)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig, qm: QuantMode = QuantMode.off()):
+    """One decode step: new token in, next token + updated cache out."""
+    def serve_step(params, cache, inputs, cur_len):
+        logits, cache = api.decode(params, cfg, cache, inputs, cur_len, qm)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+    return serve_step
+
+
+def make_latmix_step(cfg: ArchConfig, lx_cfg=None):
+    """One transform-learning step (the paper's calibration workload) —
+    lowered in the dry-run for the paper-representative cell."""
+    from repro.core import latmix as lx_lib
+    lx_cfg = lx_cfg or lx_lib.LatmixConfig()
+    qm = lx_lib.student_qm(lx_cfg)
+    ocfg = opt.AdamWConfig(lr=lx_cfg.lr, weight_decay=lx_cfg.weight_decay,
+                           total_steps=lx_cfg.steps)
+
+    def latmix_step(params, learn, fixed, ostate, batch, teacher):
+        def loss_fn(lrn):
+            om = {k: {"learn": lrn[k], "fixed": fixed[k]} for k in lrn}
+            tset = lx_lib.materialize_set(om, cfg, lx_cfg)
+            folded = api.fold(params, cfg, tset)
+            student = api.forward(folded, cfg, batch["inputs"], qm)
+            kl = api.kl_divergence(teacher, student, lx_cfg.temperature)
+            om_full = {k: {"learn": lrn[k], "fixed": fixed[k]} for k in lrn}
+            return kl + lx_lib.reg_loss(om_full, cfg, lx_cfg)
+        loss, grads = jax.value_and_grad(loss_fn)(learn)
+        learn, ostate, _ = opt.apply_updates(learn, grads, ostate, ocfg)
+        return learn, ostate, loss
+    return latmix_step
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs per (arch × shape)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every input of the cell's step."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = param_dtype(cfg)
+    tok = jnp.int32
+
+    if shape.kind == "train":
+        if cfg.embed_inputs:
+            inputs = jax.ShapeDtypeStruct((B, S), tok)
+        else:
+            inputs = jax.ShapeDtypeStruct((B, S, cfg.d_model), dt)
+        return {"batch": {"inputs": inputs,
+                          "labels": jax.ShapeDtypeStruct((B, S), tok)}}
+
+    if shape.kind == "prefill":
+        if cfg.embed_inputs:
+            inputs = jax.ShapeDtypeStruct((B, S), tok)
+        else:
+            inputs = jax.ShapeDtypeStruct((B, S, cfg.d_model), dt)
+        return {"inputs": inputs}
+
+    # decode: one new token against a cache of seq_len
+    cache = abstract_cache(cfg, B, S)
+    if cfg.embed_inputs:
+        inputs = jax.ShapeDtypeStruct((B,), tok)
+    else:
+        inputs = jax.ShapeDtypeStruct((B, cfg.d_model), dt)
+    return {"cache": cache, "inputs": inputs,
+            "cur_len": jax.ShapeDtypeStruct((), tok)}

@@ -1,0 +1,50 @@
+"""Training entry point (single-host CPU or multi-host TPU via
+``jax.distributed.initialize`` — see scripts/launch_pod.sh)."""
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the smoke config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="checkpoints")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--distributed", action="store_true")
+    ap.add_argument("--coordinator", default="")
+    ap.add_argument("--num-processes", type=int, default=1)
+    ap.add_argument("--process-id", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.distributed:
+        import jax
+        jax.distributed.initialize(
+            coordinator_address=args.coordinator,
+            num_processes=args.num_processes,
+            process_id=args.process_id)
+
+    from repro import configs
+    from repro.training import optimizer as opt
+    from repro.training.trainer import TrainConfig, Trainer
+
+    cfg = (configs.get_reduced(args.arch) if args.reduced
+           else configs.get(args.arch))
+    tc = TrainConfig(
+        steps=args.steps, batch_size=args.batch, seq_len=args.seq,
+        accum=args.accum, ckpt_every=args.ckpt_every,
+        ckpt_dir=args.ckpt_dir,
+        opt=opt.AdamWConfig(lr=args.lr, total_steps=args.steps))
+    trainer = Trainer(cfg, tc)
+    trainer.train()
+    print(f"final eval ppl: {trainer.eval_ppl():.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,164 @@
+"""Unified model API — dispatches on ``cfg.family``.
+
+Every family module exposes:
+  init(key, cfg, dtype) -> params
+  forward(params, cfg, inputs, qm) -> logits (B, S, V)
+  prefill(params, cfg, inputs, qm) -> (last_logits (B, V), cache)
+  decode(params, cfg, cache, inputs, cur_len, qm) -> (logits, cache)
+  init_cache(cfg, batch, max_len, dtype) -> cache pytree
+  fold_norms(params, cfg) / fold(params, cfg, tset)
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.quantize import QuantMode
+from . import griffin, moe, ssd, transformer
+
+_FAMILY = {
+    "dense": transformer,
+    "encoder": transformer,
+    "vlm": transformer,
+    "moe": moe,
+    "hybrid": griffin,
+    "ssm": ssd,
+}
+
+
+def module_for(cfg: ArchConfig):
+    return _FAMILY[cfg.family]
+
+
+def init(key, cfg: ArchConfig, dtype=jnp.float32):
+    return module_for(cfg).init(key, cfg, dtype)
+
+
+def forward(params, cfg: ArchConfig, inputs, qm: QuantMode = QuantMode.off()):
+    return module_for(cfg).forward(params, cfg, inputs, qm)
+
+
+def prefill(params, cfg: ArchConfig, inputs, qm: QuantMode = QuantMode.off(),
+            max_len: int | None = None):
+    if cfg.family == "encoder":
+        raise ValueError("encoder-only arch has no decode/prefill step")
+    return module_for(cfg).prefill(params, cfg, inputs, qm, max_len=max_len)
+
+
+def decode(params, cfg: ArchConfig, cache, inputs, cur_len,
+           qm: QuantMode = QuantMode.off()):
+    if cfg.family == "encoder":
+        raise ValueError("encoder-only arch has no decode step")
+    return module_for(cfg).decode(params, cfg, cache, inputs, cur_len, qm)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.float32):
+    return module_for(cfg).init_cache(cfg, batch, max_len, dtype)
+
+
+def fold_norms(params, cfg: ArchConfig):
+    return module_for(cfg).fold_norms(params, cfg)
+
+
+def fold(params, cfg: ArchConfig, tset):
+    return module_for(cfg).fold(params, cfg, tset)
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def _ce_mean_impl(logits, labels):
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, lf.shape, lf.ndim - 1)
+              == labels[..., None])
+    gold = jnp.sum(jnp.where(onehot, lf, 0.0), axis=-1)
+    return jnp.mean(lse - gold)
+
+
+@jax.custom_vjp
+def _ce_mean(logits, labels):
+    return _ce_mean_impl(logits, labels)
+
+
+def _ce_fwd(logits, labels):
+    # save only the compact residuals — the f32 softmax is *recomputed* in
+    # the backward, which keeps the (tokens × vocab) f32 buffers transient
+    # (≈8 GB/device saved on the 100k-vocab training cells).
+    return _ce_mean_impl(logits, labels), (logits, labels)
+
+
+def _ce_bwd(res, g):
+    logits, labels = res
+    lf = logits.astype(jnp.float32)
+    p = jax.nn.softmax(lf, axis=-1)
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, lf.shape, lf.ndim - 1)
+              == labels[..., None])
+    n = 1
+    for s in labels.shape:
+        n *= s
+    d = (p - onehot.astype(jnp.float32)) * (g / n)
+    return d.astype(logits.dtype), None
+
+
+_ce_mean.defvjp(_ce_fwd, _ce_bwd)
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Token-level CE. logits (..., V); labels (...) int.
+
+    The gold logit is picked with an iota-compare masked reduce (not
+    take_along_axis): it fuses into one pass and — crucially — keeps the
+    vocab axis sharded under GSPMD (a gather over a sharded axis would
+    all-gather the logits). The unmasked path is a custom-VJP that
+    recomputes the softmax in the backward."""
+    if mask is None:
+        return _ce_mean(logits, labels)
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, lf.shape, lf.ndim - 1)
+              == labels[..., None])
+    gold = jnp.sum(jnp.where(onehot, lf, 0.0), axis=-1)
+    nll = lse - gold
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def lm_loss(params, cfg: ArchConfig, batch: dict,
+            qm: QuantMode = QuantMode.off(),
+            aux_coefs=(0.01, 1e-3)) -> jnp.ndarray:
+    """Next-token loss for causal families; per-frame CE for encoders.
+
+    batch: {"inputs": tokens (B,S) or embeds (B,S,d), "labels": (B,S)}.
+    """
+    inputs, labels = batch["inputs"], batch["labels"]
+    if cfg.family == "moe":
+        logits, (lbl, zl) = moe.forward(params, cfg, inputs, qm,
+                                        return_aux=True)
+        ce = cross_entropy(logits, labels, batch.get("mask"))
+        return ce + aux_coefs[0] * lbl + aux_coefs[1] * zl
+    logits = forward(params, cfg, inputs, qm)
+    return cross_entropy(logits, labels, batch.get("mask"))
+
+
+def kl_divergence(teacher_logits: jnp.ndarray, student_logits: jnp.ndarray,
+                  temperature: float = 1.0) -> jnp.ndarray:
+    """KL(teacher || student) averaged over tokens (Eq. 8)."""
+    t = teacher_logits.astype(jnp.float32) / temperature
+    s = student_logits.astype(jnp.float32) / temperature
+    pt = jax.nn.softmax(t, axis=-1)
+    return jnp.mean(jnp.sum(pt * (jax.nn.log_softmax(t, axis=-1)
+                                  - jax.nn.log_softmax(s, axis=-1)),
+                            axis=-1))
+
+
+def perplexity(params, cfg: ArchConfig, tokens: jnp.ndarray,
+               qm: QuantMode = QuantMode.off(), chunk: int = 0) -> float:
+    """exp(mean NLL) of next-token prediction over a (B, S) token batch."""
+    logits = forward(params, cfg, tokens[:, :-1], qm)
+    nll = cross_entropy(logits, tokens[:, 1:])
+    return float(jnp.exp(nll))

@@ -1,0 +1,460 @@
+"""Griffin / RecurrentGemma hybrid: RG-LRU recurrent blocks + local (MQA)
+attention in a (rec, rec, attn) pattern, each followed by a GeGLU MLP.
+
+26 layers = 8 scanned super-blocks of (rec, rec, attn) + 2 trailing
+recurrent layers — the 1:2 attention:recurrence ratio of the paper.
+
+RG-LRU:  r_t = σ(w_a ⊙ u_t + b_a);  i_t = σ(w_x ⊙ u_t + b_x)
+         log a_t = −c · softplus(Λ) · r_t           (c = 8)
+         h_t = a_t h_{t−1} + √(1 − a_t²) · (i_t ⊙ u_t)
+computed with an associative scan (log-depth over sequence length; the
+diagonal recurrence is what makes the 500k-token shapes linear-time).
+Gates are per-channel (diagonal) — a documented simplification of the
+block-diagonal gates in the original (DESIGN.md §7).
+
+Decode uses a **ring-buffer** KV cache of window size for attention layers
+and O(1) recurrent state for RG-LRU layers.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import folding as fold_lib
+from repro.core.quantize import QuantMode, qlinear
+from repro.launch import pcontext as pctx
+from .layers import (apply_rope, attention, causal_conv1d, conv1d_step,
+                     dense_init, flash_attention, gated_mlp, rms_norm,
+                     scan_layers)
+
+C_RGLRU = 8.0
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _rec_layer(key, cfg: ArchConfig, dtype):
+    d, lru, K = cfg.d_model, cfg.lru_width, cfg.conv_kernel
+    ks = jax.random.split(key, 8)
+    # init Λ so that a^(c·r) with r≈0.5 sits in [0.9, 0.999]
+    a0 = jax.random.uniform(ks[3], (lru,), minval=0.9, maxval=0.999)
+    sp = -jnp.log(a0) / (C_RGLRU * 0.5)
+    lam = jnp.log(jnp.expm1(sp))
+    return {
+        "ln1": jnp.ones((d,), dtype),
+        "wx": dense_init(ks[0], d, lru, dtype),
+        "wy": dense_init(ks[1], d, lru, dtype),
+        "conv_w": (jax.random.normal(ks[2], (lru, K), jnp.float32) * 0.1
+                   ).astype(dtype),
+        "conv_b": jnp.zeros((lru,), dtype),
+        "lam": lam.astype(jnp.float32),
+        "ga_w": jnp.full((lru,), 1.0, jnp.float32),
+        "ga_b": jnp.zeros((lru,), jnp.float32),
+        "gx_w": jnp.full((lru,), 1.0, jnp.float32),
+        "gx_b": jnp.zeros((lru,), jnp.float32),
+        "wor": dense_init(ks[4], lru, d, dtype,
+                          scale=1.0 / jnp.sqrt(2.0 * cfg.n_layers)),
+        "ln2": jnp.ones((d,), dtype),
+        "wg": dense_init(ks[5], d, cfg.d_ff, dtype),
+        "wu": dense_init(ks[6], d, cfg.d_ff, dtype),
+        "wd": dense_init(ks[7], cfg.d_ff, d, dtype,
+                         scale=1.0 / jnp.sqrt(2.0 * cfg.n_layers)),
+    }
+
+
+def _attn_layer(key, cfg: ArchConfig, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    return {
+        "ln1": jnp.ones((d,), dtype),
+        "wq": dense_init(ks[0], d, cfg.q_dim, dtype),
+        "wk": dense_init(ks[1], d, cfg.kv_dim, dtype),
+        "wv": dense_init(ks[2], d, cfg.kv_dim, dtype),
+        "wo": dense_init(ks[3], cfg.q_dim, d, dtype,
+                         scale=1.0 / jnp.sqrt(2.0 * cfg.n_layers)),
+        "ln2": jnp.ones((d,), dtype),
+        "wg": dense_init(ks[4], d, cfg.d_ff, dtype),
+        "wu": dense_init(ks[5], d, cfg.d_ff, dtype),
+        "wd": dense_init(ks[6], cfg.d_ff, d, dtype,
+                         scale=1.0 / jnp.sqrt(2.0 * cfg.n_layers)),
+    }
+
+
+def _stack(maker, key, n, cfg, dtype):
+    keys = jax.random.split(key, n)
+    layers = [maker(keys[i], cfg, dtype) for i in range(n)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+
+
+def init(key: jax.Array, cfg: ArchConfig, dtype=jnp.float32):
+    ns, nt = cfg.n_super_blocks, cfg.n_tail_rec
+    ks = jax.random.split(key, 8)
+    params = {
+        "super": {
+            "r1": _stack(_rec_layer, ks[0], ns, cfg, dtype),
+            "r2": _stack(_rec_layer, ks[1], ns, cfg, dtype),
+            "at": _stack(_attn_layer, ks[2], ns, cfg, dtype),
+        },
+        "ln_f": jnp.ones((cfg.d_model,), dtype),
+        "embed": (jax.random.normal(ks[3], (cfg.vocab_size, cfg.d_model),
+                                    jnp.float32) * 0.02).astype(dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = dense_init(ks[4], cfg.d_model, cfg.vocab_size, dtype)
+    if nt:
+        params["tail"] = _stack(_rec_layer, ks[5], nt, cfg, dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU sublayer
+# ---------------------------------------------------------------------------
+
+def _rglru_gates(u, p):
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf * p["ga_w"] + p["ga_b"])
+    i = jax.nn.sigmoid(uf * p["gx_w"] + p["gx_b"])
+    log_a = -C_RGLRU * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = beta * (i * uf)
+    return a, b
+
+
+def rec_sublayer(x, p, cfg: ArchConfig, qm: QuantMode, h0=None):
+    """x: (B, S, d). Returns (x', (h_last, conv_tail))."""
+    K = cfg.conv_kernel
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    u = qlinear(h, p["wx"], p.get("bx"), qm, "rec_in")
+    gate = jax.nn.gelu(qlinear(h, p["wy"], p.get("by"), qm,
+                               "rec_in").astype(jnp.float32))
+    conv_tail = jnp.moveaxis(u[:, -(K - 1):, :], 1, 2)     # (B, lru, K-1)
+    u = causal_conv1d(u, p["conv_w"], p["conv_b"])
+    a, b = _rglru_gates(u, p)
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def op(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, b1 * a2 + b2
+
+    _, hs = jax.lax.associative_scan(op, (a, b), axis=1)
+    out = (hs * gate).astype(x.dtype)
+    out = qlinear(out, p["wor"], p.get("bor"), qm, "rec_out")
+    return x + out, (hs[:, -1], conv_tail)
+
+
+def rec_sublayer_decode(x, p, cfg: ArchConfig, qm: QuantMode, h_state,
+                        conv_state):
+    """x: (B, 1, d); h_state: (B, lru) f32; conv_state: (B, lru, K-1)."""
+    h = rms_norm(x[:, 0], p["ln1"], cfg.norm_eps)
+    u = qlinear(h, p["wx"], p.get("bx"), qm, "rec_in")
+    gate = jax.nn.gelu(qlinear(h, p["wy"], p.get("by"), qm,
+                               "rec_in").astype(jnp.float32))
+    u, conv_state = conv1d_step(conv_state, u, p["conv_w"], p["conv_b"])
+    a, b = _rglru_gates(u, p)
+    h_new = a * h_state + b
+    out = (h_new * gate).astype(x.dtype)
+    out = qlinear(out, p["wor"], p.get("bor"), qm, "rec_out")
+    return x + out[:, None, :], h_new, conv_state
+
+
+def mlp_sublayer(x, p, cfg: ArchConfig, qm: QuantMode):
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    return x + gated_mlp(h, p["wg"], p["wu"], p["wd"], qm, act="gelu",
+                         bg=p.get("bg"), bu=p.get("bu"))
+
+
+# ---------------------------------------------------------------------------
+# Local attention sublayer (MQA, windowed) — full-seq and ring-decode
+# ---------------------------------------------------------------------------
+
+def attn_sublayer(x, p, cfg: ArchConfig, qm: QuantMode, pos):
+    B, S, _ = x.shape
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q = qlinear(h, p["wq"], p.get("bq"), qm, "qkv")
+    k = qlinear(h, p["wk"], p.get("bk"), qm, "qkv")
+    v = qlinear(h, p["wv"], p.get("bv"), qm, "qkv")
+    q = apply_rope(q.reshape(B, S, cfg.n_heads, cfg.head_dim), pos,
+                   cfg.rope_theta)
+    kh = apply_rope(k.reshape(B, S, cfg.n_kv_heads, cfg.head_dim), pos,
+                    cfg.rope_theta)
+    out = flash_attention(
+        q, kh, v.reshape(B, S, cfg.n_kv_heads, cfg.head_dim),
+        causal=True, q_pos=pos, window=cfg.window, chunk=cfg.attn_chunk)
+    out = qlinear(out.reshape(B, S, cfg.q_dim), p["wo"], p.get("bo"), qm,
+                  "attn_out")
+    return x + out, kh.reshape(B, S, cfg.kv_dim), v
+
+
+def attn_sublayer_decode(x, p, cfg: ArchConfig, qm: QuantMode,
+                         ck, cv, cur_len):
+    """Ring-buffer decode. ck/cv: (B, A, kv_dim); slot = cur_len % A."""
+    B = x.shape[0]
+    A = ck.shape[1]
+    pos = jnp.reshape(cur_len, (1,)).astype(jnp.int32)
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q = qlinear(h, p["wq"], p.get("bq"), qm, "qkv")
+    k = qlinear(h, p["wk"], p.get("bk"), qm, "qkv")
+    v = qlinear(h, p["wv"], p.get("bv"), qm, "qkv")
+    q = apply_rope(q.reshape(B, 1, cfg.n_heads, cfg.head_dim), pos,
+                   cfg.rope_theta)
+    kh = apply_rope(k.reshape(B, 1, cfg.n_kv_heads, cfg.head_dim), pos,
+                    cfg.rope_theta).reshape(B, 1, cfg.kv_dim)
+    slot = jnp.mod(cur_len, A)
+    ck = jax.lax.dynamic_update_slice(ck, kh, (0, slot, 0))
+    cv = jax.lax.dynamic_update_slice(cv, v, (0, slot, 0))
+    # slot s holds absolute position: cur_len - ((cur_len - s) mod A)
+    s_idx = jnp.arange(A, dtype=jnp.int32)
+    k_pos = cur_len - jnp.mod(cur_len - s_idx, A)
+    k_pos = jnp.where(k_pos >= 0, k_pos, -1)
+    out = attention(q, ck.reshape(B, A, cfg.n_kv_heads, cfg.head_dim),
+                    cv.reshape(B, A, cfg.n_kv_heads, cfg.head_dim),
+                    causal=True, q_pos=pos, window=cfg.window,
+                    k_positions=k_pos, chunk=cfg.attn_chunk)
+    out = qlinear(out.reshape(B, 1, cfg.q_dim), p["wo"], p.get("bo"), qm,
+                  "attn_out")
+    return x + out, ck, cv
+
+
+# ---------------------------------------------------------------------------
+# Model API
+# ---------------------------------------------------------------------------
+
+def head_matrix(params, cfg):
+    return params["head"] if "head" in params else params["embed"].T
+
+
+def head_out(x, params, cfg, qm):
+    return qlinear(x, head_matrix(params, cfg), params.get("bhead"), qm,
+                   "head")
+
+
+def _super_fwd(x, pl, cfg, qm, pos, collect: bool):
+    x, _ = rec_sublayer(x, pl["r1"], cfg, qm)
+    x = mlp_sublayer(x, pl["r1"], cfg, qm)
+    x, _ = rec_sublayer(x, pl["r2"], cfg, qm)
+    x = mlp_sublayer(x, pl["r2"], cfg, qm)
+    x, k, v = attn_sublayer(x, pl["at"], cfg, qm, pos)
+    x = mlp_sublayer(x, pl["at"], cfg, qm)
+    return x, (k, v)
+
+
+def forward(params, cfg: ArchConfig, inputs,
+            qm: QuantMode = QuantMode.off()):
+    x = jnp.take(params["embed"], inputs, axis=0)
+    x = pctx.shard(x, "batch", None, None)
+    S = x.shape[1]
+    pos = jnp.arange(S, dtype=jnp.int32)
+
+    def body(xc, pl):
+        xc, _ = _super_fwd(xc, pl, cfg, qm, pos, False)
+        return pctx.shard(xc, "batch", "seq", None), None
+
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = scan_layers(body, x, params["super"], cfg.scan_layers)
+
+    if "tail" in params:
+        def tail_body(xc, pl):
+            xc, _ = rec_sublayer(xc, pl, cfg, qm)
+            xc = mlp_sublayer(xc, pl, cfg, qm)
+            return xc, None
+        x, _ = scan_layers(tail_body, x, params["tail"], cfg.scan_layers)
+
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return head_out(x, params, cfg, qm)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.float32):
+    ns, nt = cfg.n_super_blocks, cfg.n_tail_rec
+    A = min(max_len, cfg.window)
+    lru, K = cfg.lru_width, cfg.conv_kernel
+    cache = {
+        "attn_k": jnp.zeros((ns, batch, A, cfg.kv_dim), dtype),
+        "attn_v": jnp.zeros((ns, batch, A, cfg.kv_dim), dtype),
+        "rec_h": jnp.zeros((ns, 2, batch, lru), jnp.float32),
+        "rec_conv": jnp.zeros((ns, 2, batch, lru, K - 1), dtype),
+    }
+    if nt:
+        cache["tail_h"] = jnp.zeros((nt, batch, lru), jnp.float32)
+        cache["tail_conv"] = jnp.zeros((nt, batch, lru, K - 1), dtype)
+    return cache
+
+
+def prefill(params, cfg: ArchConfig, inputs,
+            qm: QuantMode = QuantMode.off(), max_len: int | None = None):
+    x = jnp.take(params["embed"], inputs, axis=0)
+    x = pctx.shard(x, "batch", None, None)
+    B, S = x.shape[0], x.shape[1]
+    pos = jnp.arange(S, dtype=jnp.int32)
+    A = min(max(S, max_len or S), cfg.window)
+
+    def body(xc, pl):
+        xc, (h1, c1) = rec_sublayer(xc, pl["r1"], cfg, qm)
+        xc = mlp_sublayer(xc, pl["r1"], cfg, qm)
+        xc, (h2, c2) = rec_sublayer(xc, pl["r2"], cfg, qm)
+        xc = mlp_sublayer(xc, pl["r2"], cfg, qm)
+        xc, k, v = attn_sublayer(xc, pl["at"], cfg, qm, pos)
+        xc = mlp_sublayer(xc, pl["at"], cfg, qm)
+        xc = pctx.shard(xc, "batch", "seq", None)
+        # ring-pack the last min(S, A) keys: slot = pos % A
+        W = min(S, A)
+        sel = jnp.arange(S - W, S, dtype=jnp.int32)
+        slots = jnp.mod(sel, A)
+        ck = jnp.zeros((B, A, cfg.kv_dim), k.dtype).at[:, slots].set(
+            k[:, S - W:])
+        cv = jnp.zeros((B, A, cfg.kv_dim), v.dtype).at[:, slots].set(
+            v[:, S - W:])
+        xc = pctx.shard(xc, "batch", None, None)
+        return xc, (ck, cv, jnp.stack([h1, h2]), jnp.stack([c1, c2]))
+
+    x, (cks, cvs, hs, cs) = scan_layers(body, x, params["super"],
+                                        cfg.scan_layers)
+    cache = {"attn_k": cks, "attn_v": cvs, "rec_h": hs.astype(jnp.float32),
+             "rec_conv": cs}
+
+    if "tail" in params:
+        def tail_body(xc, pl):
+            xc, (h, c) = rec_sublayer(xc, pl, cfg, qm)
+            xc = mlp_sublayer(xc, pl, cfg, qm)
+            return xc, (h, c)
+        x, (th, tc) = scan_layers(tail_body, x, params["tail"],
+                                  cfg.scan_layers)
+        cache["tail_h"] = th.astype(jnp.float32)
+        cache["tail_conv"] = tc
+
+    x = rms_norm(x[:, -1:], params["ln_f"], cfg.norm_eps)
+    return head_out(x[:, 0], params, cfg, qm), cache
+
+
+def decode(params, cfg: ArchConfig, cache, inputs, cur_len,
+           qm: QuantMode = QuantMode.off()):
+    x = jnp.take(params["embed"], inputs[:, None], axis=0)
+    x = pctx.shard(x.astype(cache["attn_k"].dtype), "batch", None, None)
+
+    def body(xc, inp):
+        pl, ck, cv, hs, cs = inp
+        xc, h1, c1 = rec_sublayer_decode(xc, pl["r1"], cfg, qm, hs[0], cs[0])
+        xc = mlp_sublayer(xc, pl["r1"], cfg, qm)
+        xc, h2, c2 = rec_sublayer_decode(xc, pl["r2"], cfg, qm, hs[1], cs[1])
+        xc = mlp_sublayer(xc, pl["r2"], cfg, qm)
+        xc, ck, cv = attn_sublayer_decode(xc, pl["at"], cfg, qm, ck, cv,
+                                          cur_len)
+        xc = mlp_sublayer(xc, pl["at"], cfg, qm)
+        return xc, (ck, cv, jnp.stack([h1, h2]), jnp.stack([c1, c2]))
+
+    x, (cks, cvs, hs, cs) = scan_layers(
+        body, x, (params["super"], cache["attn_k"], cache["attn_v"],
+                  cache["rec_h"], cache["rec_conv"]), cfg.scan_layers)
+    new_cache = {"attn_k": cks, "attn_v": cvs, "rec_h": hs, "rec_conv": cs}
+
+    if "tail" in params:
+        def tail_body(xc, inp):
+            pl, h, c = inp
+            xc, h, c = rec_sublayer_decode(xc, pl, cfg, qm, h, c)
+            xc = mlp_sublayer(xc, pl, cfg, qm)
+            return xc, (h, c)
+        x, (th, tc) = scan_layers(
+            tail_body, x, (params["tail"], cache["tail_h"],
+                           cache["tail_conv"]), cfg.scan_layers)
+        new_cache["tail_h"], new_cache["tail_conv"] = th, tc
+
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return head_out(x[:, 0], params, cfg, qm), new_cache
+
+
+# ---------------------------------------------------------------------------
+# PTQ integration
+# ---------------------------------------------------------------------------
+
+def _fold_norms_rec(p):
+    p = dict(p)
+    p["ln1"], (p["wx"], p["wy"]) = fold_lib.fold_norm_into(
+        p["ln1"], p["wx"], p["wy"])
+    p["ln2"], (p["wg"], p["wu"]) = fold_lib.fold_norm_into(
+        p["ln2"], p["wg"], p["wu"])
+    return p
+
+
+def _fold_norms_attn(p):
+    p = dict(p)
+    p["ln1"], (p["wq"], p["wk"], p["wv"]) = fold_lib.fold_norm_into(
+        p["ln1"], p["wq"], p["wk"], p["wv"])
+    p["ln2"], (p["wg"], p["wu"]) = fold_lib.fold_norm_into(
+        p["ln2"], p["wg"], p["wu"])
+    return p
+
+
+def fold_norms(params, cfg: ArchConfig):
+    p = dict(params)
+    sup = dict(p["super"])
+    sup["r1"] = _fold_norms_rec(sup["r1"])
+    sup["r2"] = _fold_norms_rec(sup["r2"])
+    sup["at"] = _fold_norms_attn(sup["at"])
+    p["super"] = sup
+    if "tail" in p:
+        p["tail"] = _fold_norms_rec(p["tail"])
+    lnf, (head,) = fold_lib.fold_norm_into(p["ln_f"], head_matrix(p, cfg))
+    p["ln_f"], p["head"] = lnf, head
+    return p
+
+
+def _fold_rec(p, a1, a1i, v1, t3_block):
+    p = dict(p)
+    p["wx"], p["bx"] = fold_lib.fold_read(p["wx"], None, a1i, v1)
+    p["wy"], p["by"] = fold_lib.fold_read(p["wy"], None, a1i, v1)
+    p["wor"], p["bor"] = fold_lib.fold_write(
+        p["wor"], jnp.zeros(p["wor"].shape[:-2] + (p["wor"].shape[-1],),
+                            p["wor"].dtype), a1)
+    return _fold_mlp(p, a1, a1i, v1, t3_block)
+
+
+def _fold_mlp(p, a1, a1i, v1, t3_block):
+    p["wg"], p["bg"] = fold_lib.fold_read(p["wg"], None, a1i, v1)
+    p["wu"], p["bu"] = fold_lib.fold_read(p["wu"], None, a1i, v1)
+    wd, _ = fold_lib.fold_write(p["wd"], None, a1)
+    if t3_block:
+        wd = fold_lib.fold_t3(wd, t3_block)
+    p["wd"] = wd
+    return p
+
+
+def _fold_attn(p, cfg, a1, a1i, v1, a2, v2, a2i, t3_block):
+    p = dict(p)
+    p["wq"], p["bq"] = fold_lib.fold_read(p["wq"], None, a1i, v1)
+    p["wk"], p["bk"] = fold_lib.fold_read(p["wk"], None, a1i, v1)
+    p["wv"], p["bv"] = fold_lib.fold_value(
+        p["wv"], jnp.zeros(p["wk"].shape[:-2] + (p["wk"].shape[-1],),
+                           p["wk"].dtype), a1i, v1, a2, v2, cfg.n_kv_heads)
+    p["wo"], p["bo"] = fold_lib.fold_attn_out(
+        p["wo"], None, a1, a2i, v2, cfg.n_heads)
+    return _fold_mlp(p, a1, a1i, v1, t3_block)
+
+
+def fold(params, cfg: ArchConfig, tset: fold_lib.TransformSet):
+    """T1 everywhere; T2 on the attention layers (a2 stacked over the
+    n_super attention layers)."""
+    p = dict(params)
+    a1i = tset.a1_inv
+    a2i = tset.a2_inv()
+    sup = dict(p["super"])
+    sup["r1"] = _fold_rec(sup["r1"], tset.a1, a1i, tset.v1, tset.t3_block)
+    sup["r2"] = _fold_rec(sup["r2"], tset.a1, a1i, tset.v1, tset.t3_block)
+    sup["at"] = _fold_attn(sup["at"], cfg, tset.a1, a1i, tset.v1,
+                           tset.a2, tset.v2, a2i, tset.t3_block)
+    p["super"] = sup
+    if "tail" in p:
+        p["tail"] = _fold_rec(dict(p["tail"]), tset.a1, a1i, tset.v1,
+                              tset.t3_block)
+    head0 = head_matrix(p, cfg)
+    p["embed"] = fold_lib.fold_embed(p["embed"], tset.a1, tset.v1)
+    head, bh = fold_lib.fold_read(head0, None, a1i, tset.v1)
+    p["head"], p["bhead"] = head, bh
+    return p

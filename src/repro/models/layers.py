@@ -1,0 +1,347 @@
+"""Shared neural-net layers: norms, RoPE, GQA attention (online-softmax
+chunked), gated MLPs. Pure functions; params are plain dict pytrees."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quantize import QuantMode, qlinear
+from repro.launch import pcontext as pctx
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, gamma: jnp.ndarray, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * gamma.astype(jnp.float32)).astype(x.dtype)
+
+
+def rms_norm_gated(x, z, gamma, eps: float = 1e-5):
+    """Mamba2 gated norm: rmsnorm(x * silu(z)) * gamma."""
+    return rms_norm(x * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                    gamma, eps)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def apply_rope(x: jnp.ndarray, pos: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, S, N, Dh); pos: (S,) int32 positions. Rotates pairs
+    (x[..., :half], x[..., half:]) — llama convention."""
+    dh = x.shape[-1]
+    half = dh // 2
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    freqs = pos.astype(jnp.float32)[:, None] * inv_freq[None, :]  # (S, half)
+    cos = jnp.cos(freqs)[None, :, None, :]
+    sin = jnp.sin(freqs)[None, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention — grouped-query, online-softmax over KV chunks.
+# ---------------------------------------------------------------------------
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+              causal: bool, q_pos: jnp.ndarray, k_start: int = 0,
+              window: int = 0, kv_len: Optional[jnp.ndarray] = None,
+              k_positions: Optional[jnp.ndarray] = None,
+              chunk: int = 1024) -> jnp.ndarray:
+    """Memory-bounded attention.
+
+    q: (B, Sq, H, Dh);  k, v: (B, Sk, K, Dh) with H % K == 0.
+    q_pos: (Sq,) absolute positions of the queries.
+    k_start: absolute position of k[:, 0] (keys are contiguous).
+    window: if > 0, keys with pos <= q_pos - window are masked (local attn).
+    kv_len: optional traced scalar — keys at index >= kv_len are invalid
+            (decode with a partially-filled cache).
+    k_positions: optional (Sk,) explicit key positions (ring-buffer caches);
+            overrides k_start, and entries < 0 are invalid.
+    Output: (B, Sq, H, Dh).
+    """
+    B, Sq, H, Dh = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    G = H // K
+    qg = q.reshape(B, Sq, K, G, Dh).astype(k.dtype)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(Dh, jnp.float32))
+
+    if Sk % chunk != 0 or Sk <= chunk:
+        chunk = Sk
+    nc = Sk // chunk
+
+    qp = q_pos.astype(jnp.int32)  # (Sq,)
+
+    def mask_for(kp):
+        ok = kp[None, :] >= 0
+        if causal:
+            ok &= kp[None, :] <= qp[:, None]
+        if window:
+            ok &= kp[None, :] > qp[:, None] - window
+        if kv_len is not None:
+            ok &= kp[None, :] - k_start < kv_len
+        return ok
+
+    # fori_loop + dynamic_slice (not scan over a moveaxis'd copy): the
+    # cache is read in place, once, in its storage dtype — no hoisted f32
+    # conversion and no reordered copy of the whole KV cache (§Perf).
+    def body(i, carry):
+        m, l, acc = carry
+        kci = jax.lax.dynamic_slice_in_dim(k, i * chunk, chunk, 1)
+        vci = jax.lax.dynamic_slice_in_dim(v, i * chunk, chunk, 1)
+        if jax.default_backend() == "cpu":
+            # block XLA-CPU from hoisting its f32-emulation converts of
+            # bf16 dots above the loop (whole-cache phantom copies)
+            kci, vci = jax.lax.optimization_barrier((kci, vci))
+        if k_positions is not None:
+            kp = jax.lax.dynamic_slice_in_dim(
+                k_positions.astype(jnp.int32), i * chunk, chunk, 0)
+        else:
+            kp = (k_start + i * chunk
+                  + jnp.arange(chunk, dtype=jnp.int32))
+        s = jnp.einsum("bqkgd,bckd->bqkgc", qg, kci,
+                       preferred_element_type=jnp.float32) * scale
+        ok = mask_for(kp)[None, :, None, None, :]
+        s = jnp.where(ok, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.where(ok, jnp.exp(s - m_new[..., None]), 0.0)
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bqkgc,bckd->bqkgd", p.astype(k.dtype), vci,
+            preferred_element_type=jnp.float32)
+        return (m_new, l, acc)
+
+    m0 = jnp.full((B, Sq, K, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, K, G), jnp.float32)
+    a0 = jnp.zeros((B, Sq, K, G, Dh), jnp.float32)
+    if nc == 1:
+        m, l, acc = body(0, (m0, l0, a0))
+    else:
+        m, l, acc = jax.lax.fori_loop(0, nc, body, (m0, l0, a0))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, Sq, H, Dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flash-style differentiable attention (custom VJP).
+#
+# A plain lax.scan over KV chunks is memory-efficient *forward*, but its
+# backward stacks the per-chunk score residuals — the full S×S attention
+# matrix in f32. The custom VJP below recomputes scores per chunk from the
+# saved (q, k, v, out, lse), which keeps the training-time footprint at
+# O(S·d) like FlashAttention.
+# ---------------------------------------------------------------------------
+
+def _fa_masks(q_pos, k_pos, causal, window):
+    # no in-place ops: operands may be host numpy constants
+    ok = k_pos[None, :] >= 0
+    if causal:
+        ok = ok & (k_pos[None, :] <= q_pos[:, None])
+    if window:
+        ok = ok & (k_pos[None, :] > q_pos[:, None] - window)
+    return ok
+
+
+def _fa_forward(qg, kc, vc, kpos_c, q_pos, causal, window, scale):
+    """qg: (B,Sq,K,G,D); kc/vc: (nc,B,chunk,K,D). Returns (out, lse)."""
+    B, Sq, K, G, Dh = qg.shape
+    m0 = jnp.full((B, Sq, K, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, K, G), jnp.float32)
+    a0 = jnp.zeros((B, Sq, K, G, Dh), jnp.float32)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kci, vci, kp = inp
+        s = jnp.einsum("bqkgd,bckd->bqkgc", qg.astype(jnp.float32),
+                       kci.astype(jnp.float32)) * scale
+        ok = _fa_masks(q_pos, kp, causal, window)[None, :, None, None, :]
+        s = jnp.where(ok, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.where(ok, jnp.exp(s - m_new[..., None]), 0.0)
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bqkgc,bckd->bqkgd", p, vci.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    if kc.shape[0] == 1:
+        (m, l, acc), _ = body((m0, l0, a0), (kc[0], vc[0], kpos_c[0]))
+    else:
+        (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                      (kc, vc, kpos_c))
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out, lse
+
+
+def flash_attention(q, k, v, *, causal, window, chunk, q_pos=None):
+    """Differentiable memory-efficient attention. Keys are contiguous from
+    position 0; positions are host-side numpy constants (a custom_vjp may
+    not close over tracers), so this path is for full-sequence train /
+    prefill — decode uses :func:`attention`."""
+    del q_pos  # positions are always 0..Sq-1 here
+    B, Sq, H, Dh = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    G = H // K
+    if Sk % chunk != 0 or Sk <= chunk:
+        chunk = Sk
+    nc = Sk // chunk
+    scale = float(1.0 / np.sqrt(Dh))
+    q_pos = np.arange(Sq, dtype=np.int32)
+    kpos_c = (np.arange(nc, dtype=np.int32)[:, None] * chunk
+              + np.arange(chunk, dtype=np.int32)[None, :])
+
+    @jax.custom_vjp
+    def fa(qg, kk, vv):
+        kc = jnp.moveaxis(kk.reshape(B, nc, chunk, K, Dh), 1, 0)
+        vc = jnp.moveaxis(vv.reshape(B, nc, chunk, K, Dh), 1, 0)
+        out, _ = _fa_forward(qg, kc, vc, kpos_c, q_pos, causal, window,
+                             scale)
+        return out
+
+    def fa_fwd(qg, kk, vv):
+        kc = jnp.moveaxis(kk.reshape(B, nc, chunk, K, Dh), 1, 0)
+        vc = jnp.moveaxis(vv.reshape(B, nc, chunk, K, Dh), 1, 0)
+        out, lse = _fa_forward(qg, kc, vc, kpos_c, q_pos, causal, window,
+                               scale)
+        return out, (qg, kk, vv, out, lse)
+
+    def fa_bwd(res, dout):
+        qg, kk, vv, out, lse = res
+        qf = qg.astype(jnp.float32)
+        do = dout.astype(jnp.float32)
+        delta = jnp.sum(do * out, axis=-1)            # (B,Sq,K,G)
+        kc = jnp.moveaxis(kk.reshape(B, nc, chunk, K, Dh), 1, 0)
+        vc = jnp.moveaxis(vv.reshape(B, nc, chunk, K, Dh), 1, 0)
+
+        def body(dq, inp):
+            kci, vci, kp = inp
+            s = jnp.einsum("bqkgd,bckd->bqkgc", qf,
+                           kci.astype(jnp.float32)) * scale
+            ok = _fa_masks(q_pos, kp, causal, window)[None, :, None,
+                                                      None, :]
+            p = jnp.where(ok, jnp.exp(s - lse[..., None]), 0.0)
+            dv_c = jnp.einsum("bqkgc,bqkgd->bckd", p, do)
+            dp = jnp.einsum("bqkgd,bckd->bqkgc", do,
+                            vci.astype(jnp.float32))
+            ds = p * (dp - delta[..., None]) * scale
+            dq = dq + jnp.einsum("bqkgc,bckd->bqkgd", ds,
+                                 kci.astype(jnp.float32))
+            dk_c = jnp.einsum("bqkgc,bqkgd->bckd", ds, qf)
+            return dq, (dk_c, dv_c)
+
+        dq0 = jnp.zeros(qg.shape, jnp.float32)
+        if nc == 1:
+            dq, (dk_c, dv_c) = body(dq0, (kc[0], vc[0], kpos_c[0]))
+            dk, dv = dk_c, dv_c
+        else:
+            dq, (dks, dvs) = jax.lax.scan(body, dq0, (kc, vc, kpos_c))
+            dk = jnp.moveaxis(dks, 0, 1).reshape(B, Sk, K, Dh)
+            dv = jnp.moveaxis(dvs, 0, 1).reshape(B, Sk, K, Dh)
+        return (dq.astype(qg.dtype), dk.astype(kk.dtype),
+                dv.astype(vv.dtype))
+
+    fa.defvjp(fa_fwd, fa_bwd)
+    out = fa(q.reshape(B, Sq, K, G, Dh), k, v)
+    return out.reshape(B, Sq, H, Dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLPs
+# ---------------------------------------------------------------------------
+
+def gated_mlp(x: jnp.ndarray, wg, wu, wd, qm: QuantMode,
+              act: str = "silu", bg=None, bu=None, bd=None) -> jnp.ndarray:
+    """SwiGLU / GeGLU: down( act(x@wg) * (x@wu) ). Optional biases appear
+    after transformation folding (Eq. 30)."""
+    g = qlinear(x, wg, bg, qm, "ffn_in")
+    u = qlinear(x, wu, bu, qm, "ffn_in")
+    fn = jax.nn.silu if act == "silu" else jax.nn.gelu
+    h = fn(g.astype(jnp.float32)).astype(x.dtype) * u
+    return qlinear(h, wd, bd, qm, "ffn_down")
+
+
+# ---------------------------------------------------------------------------
+# Depthwise causal conv (Mamba/Griffin temporal conv)
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(x: jnp.ndarray, w: jnp.ndarray,
+                  b: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """x: (B, L, C); w: (C, K) depthwise; left-pad K-1 (causal)."""
+    K = w.shape[-1]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    # gather K shifted views and contract — avoids conv lowering pitfalls
+    views = jnp.stack([xp[:, i:i + x.shape[1], :] for i in range(K)], axis=-1)
+    y = jnp.einsum("blck,ck->blc", views, w.astype(x.dtype))
+    if b is not None:
+        y = y + b.astype(x.dtype)
+    return y
+
+
+def conv1d_step(conv_state: jnp.ndarray, x_t: jnp.ndarray, w: jnp.ndarray,
+                b: Optional[jnp.ndarray]):
+    """Single decode step. conv_state: (B, C, K-1) previous inputs,
+    x_t: (B, C). Returns (y_t (B, C), new_state)."""
+    K = w.shape[-1]
+    full = jnp.concatenate([conv_state, x_t[:, :, None]], axis=-1)  # (B,C,K)
+    y = jnp.einsum("bck,ck->bc", full, w.astype(x_t.dtype))
+    if b is not None:
+        y = y + b.astype(x_t.dtype)
+    return y, full[:, :, 1:]
+
+
+# ---------------------------------------------------------------------------
+# Parameter init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float = 1.0):
+    std = scale / jnp.sqrt(jnp.asarray(d_in, jnp.float32))
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * std).astype(dtype)
+
+
+def shard_batch(x, *rest):
+    """Annotate (B, ...) activation with batch sharding."""
+    return pctx.shard(x, "batch", *rest)
+
+
+def scan_layers(body, carry, xs, use_scan: bool = True):
+    """lax.scan or an unrolled python loop (identical semantics).
+
+    The unrolled form exists for roofline analysis: XLA's cost_analysis
+    counts a while-loop body once, so per-layer FLOPs/bytes/collectives are
+    measured from unrolled 1- and 2-layer lowerings and extrapolated.
+
+    On the CPU backend the per-layer slices are wrapped in an
+    optimization_barrier: XLA-CPU emulates bf16 dots by converting operands
+    to f32 and hoists the converts above the while loop, materializing
+    f32 copies of *all* layers' weights/caches — phantom buffers that do
+    not exist on TPU (native bf16 MXU). The barrier keeps the dry-run
+    memory_analysis faithful to the TPU target."""
+    if use_scan:
+        if jax.default_backend() == "cpu":
+            def body_b(c, x):
+                return body(c, jax.lax.optimization_barrier(x))
+            return jax.lax.scan(body_b, carry, xs)
+        return jax.lax.scan(body, carry, xs)
+    L = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(L):
+        xi = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, xi)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        stacked = jax.tree.map(lambda *e: jnp.stack(e), *ys)
+    else:
+        stacked = None
+    return carry, stacked

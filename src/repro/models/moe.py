@@ -1,0 +1,284 @@
+"""Mixture-of-Experts transformer (Qwen1.5-MoE / Moonlight style):
+GQA attention + top-k routed experts with capacity-based dispatch and
+optional shared experts.
+
+Routing is grouped (``cfg.moe_groups``): tokens are split into G groups,
+each with its own capacity buffer — G is set to the data-parallel degree at
+production scale so dispatch stays group-local and the expert all-to-all is
+the only cross-device traffic (GShard discipline). Dispatch/combine are
+static-shaped scatter/gathers (capacity-dropped overflow), so the whole
+block is pjit-compatible.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import folding as fold_lib
+from repro.core.quantize import QuantMode, qeinsum, qlinear
+from repro.launch import pcontext as pctx
+from .layers import dense_init, gated_mlp, rms_norm, scan_layers
+from . import transformer as dense
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def init(key: jax.Array, cfg: ArchConfig, dtype=jnp.float32):
+    L, d, fe = cfg.n_layers, cfg.d_model, cfg.d_ff
+    E, ns = cfg.n_experts, cfg.n_shared_experts
+    params = dense.init(key, cfg, dtype)
+    b = dict(params["blocks"])
+    # replace the dense FFN with router + experts (+ shared fused FFN)
+    for k in ("wg", "wu", "wd"):
+        del b[k]
+    ks = jax.random.split(jax.random.fold_in(key, 17), 8)
+    std_in = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    std_out = 1.0 / jnp.sqrt(jnp.asarray(fe, jnp.float32)) / jnp.sqrt(2.0 * L)
+    b["router"] = (jax.random.normal(ks[0], (L, d, E), jnp.float32)
+                   * 0.02).astype(dtype)
+    b["eg"] = (jax.random.normal(ks[1], (L, E, d, fe), jnp.float32)
+               * std_in).astype(dtype)
+    b["eu"] = (jax.random.normal(ks[2], (L, E, d, fe), jnp.float32)
+               * std_in).astype(dtype)
+    b["ed"] = (jax.random.normal(ks[3], (L, E, fe, d), jnp.float32)
+               * std_out).astype(dtype)
+    if ns:
+        fs = ns * fe  # shared experts fused into one wide FFN
+        b["sg"] = (jax.random.normal(ks[4], (L, d, fs), jnp.float32)
+                   * std_in).astype(dtype)
+        b["su"] = (jax.random.normal(ks[5], (L, d, fs), jnp.float32)
+                   * std_in).astype(dtype)
+        b["sd"] = (jax.random.normal(ks[6], (L, fs, d), jnp.float32)
+                   * std_out).astype(dtype)
+    params["blocks"] = b
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Routed FFN
+# ---------------------------------------------------------------------------
+
+def capacity(cfg: ArchConfig, tokens_per_group: int) -> int:
+    c = int(cfg.capacity_factor * tokens_per_group * cfg.top_k
+            / cfg.n_experts)
+    return max(8, (c + 7) // 8 * 8)
+
+
+def moe_ffn(x, p, cfg: ArchConfig, qm: QuantMode):
+    """x: (B, S, d) -> (B, S, d) routed expert mix (+ shared experts).
+
+    Returns (y, aux) with aux = (load_balance_loss, router_z_loss)."""
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    G = min(cfg.moe_groups, T)
+    while T % G != 0:
+        G -= 1
+    Tg = T // G
+    C = capacity(cfg, Tg)
+
+    xt = x.reshape(G, Tg, d)
+    logits = qlinear(xt, p["router"], p.get("brouter"), qm,
+                     "router").astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                    # (G, Tg, E)
+    top_p, top_i = jax.lax.top_k(probs, K)                     # (G, Tg, K)
+    top_p = top_p / jnp.sum(top_p, -1, keepdims=True)
+
+    # --- aux losses (Switch LBL + z-loss) ---
+    dense_mask = jnp.sum(jax.nn.one_hot(top_i, E, dtype=jnp.float32), axis=2)
+    frac_tokens = jnp.mean(dense_mask, axis=1)                 # (G, E)
+    frac_probs = jnp.mean(probs, axis=1)                       # (G, E)
+    lbl = E * jnp.mean(jnp.sum(frac_tokens * frac_probs, -1))
+    zloss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+
+    # --- capacity positions: rank of each (token, slot) inside its expert ---
+    flat_e = top_i.reshape(G, Tg * K)                          # (G, TK)
+    flat_p = top_p.reshape(G, Tg * K).astype(x.dtype)
+    oh = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)            # (G, TK, E)
+    pos = jnp.take_along_axis(jnp.cumsum(oh, axis=1) - 1,
+                              flat_e[..., None], axis=-1)[..., 0]  # (G, TK)
+    keep = (pos < C).astype(x.dtype)
+    pos_c = jnp.clip(pos, 0, C - 1)
+    tok_idx = jnp.repeat(jnp.arange(Tg, dtype=jnp.int32)[None, :], G, 0)
+    tok_idx = jnp.repeat(tok_idx[..., None], K, axis=-1).reshape(G, Tg * K)
+
+    # --- dispatch: (G, E, C, d) buffers ---
+    # sharding discipline (§Perf): the scatter runs with the expert axis
+    # REPLICATED and only the group axis sharded (each device builds full
+    # expert buffers for its own token groups — purely local); the
+    # transition to expert-parallel layout afterwards is a plain slice /
+    # all-to-all-shaped reshard instead of GSPMD falling back to full
+    # replication of the updates.
+    src = jnp.take_along_axis(xt, tok_idx[..., None], axis=1)  # (G, TK, d)
+    src = pctx.shard(src * keep[..., None], "batch", None, None)
+    buf = jnp.zeros((G, E, C, d), x.dtype)
+    gidx = jnp.repeat(jnp.arange(G, dtype=jnp.int32)[:, None], Tg * K, 1)
+    buf = buf.at[gidx, flat_e, pos_c].add(src)
+    buf = pctx.shard(buf, "batch", None, None, None)   # scatter stays local
+    buf = pctx.shard(buf, "batch", "model", None, None)  # -> EP layout
+
+    # --- expert compute (EP over the E axis when divisible) ---
+    g = qeinsum("gecd,edf->gecf", buf, p["eg"], qm, "ffn_in")
+    u = qeinsum("gecd,edf->gecf", buf, p["eu"], qm, "ffn_in")
+    if "beg" in p:  # folded-transform biases (per expert)
+        g = g + p["beg"][None, :, None, :].astype(g.dtype)
+        u = u + p["beu"][None, :, None, :].astype(u.dtype)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    eo = qeinsum("gecf,efd->gecd", h, p["ed"], qm, "ffn_down")
+    eo = pctx.shard(eo, "batch", "model", None, None)
+    eo = pctx.shard(eo, "batch", None, None, None)     # gather for combine
+
+    # --- combine (local per group once eo is expert-replicated) ---
+    gathered = eo[gidx, flat_e, pos_c]                         # (G, TK, d)
+    contrib = gathered * (flat_p * keep)[..., None]
+    out = jnp.zeros((G, Tg, d), x.dtype).at[gidx, tok_idx].add(contrib)
+    out = pctx.shard(out, "batch", None, None)
+    return out.reshape(B, S, d), (lbl, zloss)
+
+
+def ffn_sublayer(x, p, cfg: ArchConfig, qm: QuantMode):
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    y, aux = moe_ffn(h, p, cfg, qm)
+    if "sg" in p:
+        y = y + gated_mlp(h, p["sg"], p["su"], p["sd"], qm,
+                          bg=p.get("bsg"), bu=p.get("bsu"))
+    return x + y, aux
+
+
+# ---------------------------------------------------------------------------
+# Forward / prefill / decode
+# ---------------------------------------------------------------------------
+
+def forward(params, cfg: ArchConfig, inputs, qm: QuantMode = QuantMode.off(),
+            return_aux: bool = False):
+    x = dense.embed_inputs(params, cfg, inputs)
+    S = x.shape[1]
+    pos = jnp.arange(S, dtype=jnp.int32)
+
+    def body(carry, pl):
+        xc, lbl, zl = carry
+        xc, _, _ = dense.attn_sublayer(xc, pl, cfg, qm, pos)
+        xc, (l1, z1) = ffn_sublayer(xc, pl, cfg, qm)
+        xc = pctx.shard(xc, "batch", "seq", None)
+        return (xc, lbl + l1, zl + z1), None
+
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    (x, lbl, zl), _ = scan_layers(
+        body, (x, jnp.float32(0), jnp.float32(0)), params["blocks"],
+        cfg.scan_layers)
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = dense.head_out(x, params, cfg, qm)
+    if return_aux:
+        return logits, (lbl / cfg.n_layers, zl / cfg.n_layers)
+    return logits
+
+
+init_cache = dense.init_cache
+
+
+def prefill(params, cfg: ArchConfig, inputs, qm: QuantMode = QuantMode.off(),
+            max_len: int | None = None):
+    x = dense.embed_inputs(params, cfg, inputs)
+    B, S = x.shape[0], x.shape[1]
+    pos = jnp.arange(S, dtype=jnp.int32)
+
+    def body(xc, pl):
+        xc, k, v = dense.attn_sublayer(xc, pl, cfg, qm, pos)
+        xc, _ = ffn_sublayer(xc, pl, cfg, qm)
+        return pctx.shard(xc, "batch", "seq", None), (k, v)
+
+    x, (ks, vs) = scan_layers(body, x, params["blocks"], cfg.scan_layers)
+    x = rms_norm(x[:, -1:], params["ln_f"], cfg.norm_eps)
+    logits = dense.head_out(x[:, 0], params, cfg, qm)
+    if max_len is not None and max_len > S:
+        pad = jnp.zeros((cfg.n_layers, B, max_len - S, cfg.kv_dim), ks.dtype)
+        ks = jnp.concatenate([ks, pad], axis=2)
+        vs = jnp.concatenate([vs, pad], axis=2)
+    return logits, {"k": ks, "v": vs}
+
+
+def decode(params, cfg: ArchConfig, cache, inputs, cur_len,
+           qm: QuantMode = QuantMode.off()):
+    x = jnp.take(params["embed"], inputs[:, None], axis=0)
+    x = pctx.shard(x.astype(cache["k"].dtype), "batch", None, None)
+
+    def body(xc, inp):
+        pl, ck, cv = inp
+        xc, ck, cv = dense.attn_sublayer_decode(xc, pl, cfg, qm, ck, cv,
+                                                cur_len)
+        xc, _ = ffn_sublayer(xc, pl, cfg, qm)
+        return xc, (ck, cv)
+
+    x, (ks, vs) = scan_layers(body, x, (params["blocks"],
+                               cache["k"], cache["v"]), cfg.scan_layers)
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = dense.head_out(x[:, 0], params, cfg, qm)
+    return logits, {"k": ks, "v": vs}
+
+
+# ---------------------------------------------------------------------------
+# PTQ integration
+# ---------------------------------------------------------------------------
+
+def fold_norms(params, cfg: ArchConfig):
+    p = dict(params)
+    b = dict(p["blocks"])
+    # expert weights read h through ln2; they carry an extra E axis
+    b["ln1"], (b["wq"], b["wk"], b["wv"]) = fold_lib.fold_norm_into(
+        b["ln1"], b["wq"], b["wk"], b["wv"])
+    g2 = b["ln2"]
+    b["router"] = b["router"] * g2[:, :, None].astype(b["router"].dtype)
+    b["eg"] = b["eg"] * g2[:, None, :, None].astype(b["eg"].dtype)
+    b["eu"] = b["eu"] * g2[:, None, :, None].astype(b["eu"].dtype)
+    if "sg" in b:
+        b["sg"] = b["sg"] * g2[:, :, None].astype(b["sg"].dtype)
+        b["su"] = b["su"] * g2[:, :, None].astype(b["su"].dtype)
+    b["ln2"] = jnp.ones_like(g2)
+    head = dense.head_matrix(params, cfg)
+    lnf, (head,) = fold_lib.fold_norm_into(p["ln_f"], head)
+    p["ln_f"], p["head"] = lnf, head
+    p["blocks"] = b
+    return p
+
+
+def fold(params, cfg: ArchConfig, tset: fold_lib.TransformSet):
+    p = dict(params)
+    b = dict(p["blocks"])
+    a1i = tset.a1_inv
+    a2i = tset.a2_inv()
+
+    b["wq"], b["bq"] = fold_lib.fold_read(b["wq"], b.get("bq"), a1i, tset.v1)
+    b["wk"], b["bk"] = fold_lib.fold_read(b["wk"], b.get("bk"), a1i, tset.v1)
+    b["wv"], b["bv"] = fold_lib.fold_value(
+        b["wv"], b.get("bv", jnp.zeros_like(b["wk"][..., 0, :])), a1i,
+        tset.v1, tset.a2, tset.v2, cfg.n_kv_heads)
+    b["wo"], b["bo"] = fold_lib.fold_attn_out(
+        b["wo"], None, tset.a1, a2i, tset.v2, cfg.n_heads)
+    b["router"], b["brouter"] = fold_lib.fold_read(
+        b["router"], None, a1i, tset.v1)
+    # experts: vmap the read-fold over the E axis
+    b["eg"], b["beg"] = fold_lib.fold_read(b["eg"], None, a1i, tset.v1)
+    b["eu"], b["beu"] = fold_lib.fold_read(b["eu"], None, a1i, tset.v1)
+    ed, _ = fold_lib.fold_write(b["ed"], None, tset.a1)
+    if tset.t3_block:
+        ed = fold_lib.fold_t3(ed, tset.t3_block)
+    b["ed"] = ed
+    if "sg" in b:
+        b["sg"], b["bsg"] = fold_lib.fold_read(b["sg"], None, a1i, tset.v1)
+        b["su"], b["bsu"] = fold_lib.fold_read(b["su"], None, a1i, tset.v1)
+        sd, _ = fold_lib.fold_write(b["sd"], None, tset.a1)
+        if tset.t3_block:
+            sd = fold_lib.fold_t3(sd, tset.t3_block)
+        b["sd"] = sd
+
+    p["embed"] = fold_lib.fold_embed(p["embed"], tset.a1, tset.v1)
+    head, bh = fold_lib.fold_read(dense.head_matrix(params, cfg), None,
+                                  a1i, tset.v1)
+    p["head"], p["bhead"] = head, bh
+    p["blocks"] = b
+    return p

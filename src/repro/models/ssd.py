@@ -1,0 +1,318 @@
+"""Mamba2 — State Space Duality (SSD), chunked matmul form (Dao & Gu 2024).
+
+Block layout follows the reference Mamba2 block:
+  in_proj: d -> [z (d_inner), xBC (d_inner + 2·G·N), dt (H)]
+  depthwise causal conv over xBC, SiLU
+  SSD recurrence  h_t = exp(dt·A) h_{t-1} + dt·B_t ⊗ x_t ;  y_t = C_t·h_t + D·x_t
+  gated RMSNorm(y · silu(z)), out_proj: d_inner -> d
+
+The chunked algorithm expresses everything as chunk-local matmuls (MXU
+friendly) plus a cheap inter-chunk scan — linear in sequence length, which
+is what makes the 500k-token decode/train shapes feasible.
+
+LATMiX applicability: T1 folds into in_proj (read) and out_proj (write);
+there is no value path so T2 does not apply (DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import folding as fold_lib
+from repro.core.quantize import QuantMode, qlinear
+from repro.launch import pcontext as pctx
+from .layers import causal_conv1d, conv1d_step, dense_init, rms_norm, rms_norm_gated, scan_layers
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def init(key: jax.Array, cfg: ArchConfig, dtype=jnp.float32):
+    L, d = cfg.n_layers, cfg.d_model
+    di, H = cfg.d_inner, cfg.ssm_nheads
+    G, N, K = cfg.ssm_ngroups, cfg.ssm_state, cfg.conv_kernel
+    proj_out = 2 * di + 2 * G * N + H
+    ks = jax.random.split(key, 8)
+
+    def stack(k, din, dout, scale=1.0):
+        keys = jax.random.split(k, L)
+        return jnp.stack([dense_init(keys[i], din, dout, dtype, scale)
+                          for i in range(L)])
+
+    blocks = {
+        "ln": jnp.ones((L, d), dtype),
+        "in_proj": stack(ks[0], d, proj_out),
+        "conv_w": (jax.random.normal(ks[1], (L, cfg.conv_dim, K), jnp.float32)
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((L, cfg.conv_dim), dtype),
+        "A_log": jnp.log(jnp.tile(
+            jnp.linspace(1.0, 16.0, H)[None], (L, 1))).astype(jnp.float32),
+        "D": jnp.ones((L, H), jnp.float32),
+        "dt_bias": jnp.log(jnp.tile(
+            jnp.linspace(1e-3, 1e-1, H)[None] / (1 - jnp.linspace(1e-3, 1e-1, H)[None]),
+            (L, 1))).astype(jnp.float32),
+        "norm": jnp.ones((L, di), dtype),
+        "out_proj": stack(ks[2], di, d, scale=1.0 / jnp.sqrt(2.0 * L)),
+    }
+    params = {
+        "blocks": blocks,
+        "ln_f": jnp.ones((d,), dtype),
+        "embed": (jax.random.normal(ks[3], (cfg.vocab_size, d), jnp.float32)
+                  * 0.02).astype(dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = dense_init(ks[4], d, cfg.vocab_size, dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# SSD chunked scan
+# ---------------------------------------------------------------------------
+
+def _segsum(x):
+    """(..., T) -> (..., T, T) lower-triangular cumulative segment sums:
+    out[i, j] = sum_{k=j+1..i} x[k], -inf above the diagonal."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool))
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_chunked(x, dA, B, C, chunk: int, init_state=None):
+    """SSD in chunked matmul form.
+
+    x:  (b, l, h, p)  — inputs already scaled by dt
+    dA: (b, l, h)     — log-decay per step (dt * A, A < 0)
+    B:  (b, l, h, n)  — input projections (groups already broadcast to heads)
+    C:  (b, l, h, n)  — output projections
+    Returns (y (b, l, h, p), final_state (b, h, p, n)).
+    """
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    q = min(chunk, l)
+    while l % q != 0:
+        q //= 2
+    nc = l // q
+
+    xr = x.reshape(b, nc, q, h, p)
+    Br = B.reshape(b, nc, q, h, n)
+    Cr = C.reshape(b, nc, q, h, n)
+    Ar = jnp.moveaxis(dA.reshape(b, nc, q, h), -1, -2)  # (b, nc, h, q)
+    A_cum = jnp.cumsum(Ar, axis=-1)                      # (b, nc, h, q)
+
+    # 1) intra-chunk (diagonal blocks)
+    Lmat = jnp.exp(_segsum(Ar))                          # (b, nc, h, q, q)
+    Ydiag = jnp.einsum("bcqhn,bcshn,bchqs,bcshp->bcqhp", Cr, Br, Lmat, xr)
+
+    # 2) per-chunk end states
+    decay_states = jnp.exp(A_cum[..., -1:] - A_cum)      # (b, nc, h, q)
+    states = jnp.einsum("bcqhn,bchq,bcqhp->bchpn", Br, decay_states, xr)
+
+    # 3) inter-chunk recurrence (scan over chunks) — f32 carry (stable and
+    # dtype-invariant under bf16 inputs)
+    chunk_decay = jnp.exp(A_cum[..., -1])                # (b, nc, h)
+    s0 = (jnp.zeros((b, h, p, n), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def scan_fn(s, inp):
+        st, dec = inp
+        s_new = s * dec[..., None, None] + st.astype(jnp.float32)
+        return s_new, s  # emit the state *entering* this chunk
+
+    (s_final, prev_states) = jax.lax.scan(
+        scan_fn, s0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)        # (b, nc, h, p, n)
+
+    # 4) inter-chunk (off-diagonal) contribution
+    state_decay = jnp.exp(A_cum)                         # (b, nc, h, q)
+    Yoff = jnp.einsum("bcqhn,bchpn,bchq->bcqhp", Cr, prev_states, state_decay)
+
+    y = (Ydiag + Yoff).reshape(b, l, h, p).astype(x.dtype)
+    return y, s_final
+
+
+# ---------------------------------------------------------------------------
+# Block
+# ---------------------------------------------------------------------------
+
+def _split_proj(zxbcdt, cfg: ArchConfig):
+    di, G, N, H = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di:di + cfg.conv_dim]
+    dt = zxbcdt[..., di + cfg.conv_dim:]
+    return z, xBC, dt
+
+
+def _ssm_inputs(xBC, dt_raw, p, cfg: ArchConfig):
+    di, G, N, H = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    P = cfg.ssm_headdim
+    xs = xBC[..., :di]
+    Bs = xBC[..., di:di + G * N]
+    Cs = xBC[..., di + G * N:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))          # (H,), negative
+    lead = xs.shape[:-1]
+    xh = xs.reshape(*lead, H, P)
+    rep = H // G
+    Bh = jnp.repeat(Bs.reshape(*lead, G, N), rep, axis=-2)
+    Ch = jnp.repeat(Cs.reshape(*lead, G, N), rep, axis=-2)
+    return xh, Bh, Ch, dt, a
+
+
+def block(x, p, cfg: ArchConfig, qm: QuantMode, init_state=None,
+          return_state: bool = False):
+    """x: (B, L, d). Returns (x', (final_ssm_state, conv_tail))."""
+    Bb, Lq, d = x.shape
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    zxbcdt = qlinear(h, p["in_proj"], p.get("b_in"), qm, "ssm_in")
+    z, xBC, dt_raw = _split_proj(zxbcdt, cfg)
+    conv_tail = xBC[:, -(cfg.conv_kernel - 1):, :]         # pre-conv inputs
+    xBC = causal_conv1d(xBC, p["conv_w"], p["conv_b"])
+    xBC = jax.nn.silu(xBC.astype(jnp.float32)).astype(x.dtype)
+    xh, Bh, Ch, dt, a = _ssm_inputs(xBC, dt_raw, p, cfg)
+    dA = dt * a[None, None, :]                             # (B, L, H)
+    xin = (xh.astype(jnp.float32) * dt[..., None]).astype(x.dtype)
+    y, s_final = ssd_chunked(xin, dA, Bh.astype(x.dtype), Ch.astype(x.dtype),
+                             cfg.ssm_chunk, init_state)
+    y = y + xh * p["D"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(Bb, Lq, cfg.d_inner)
+    y = rms_norm_gated(y, z, p["norm"], cfg.norm_eps)
+    out = qlinear(y, p["out_proj"], p.get("b_out"), qm, "ssm_out")
+    state = (s_final, jnp.moveaxis(conv_tail, 1, 2))       # (B, conv_dim, K-1)
+    return x + out.astype(x.dtype), state
+
+
+def block_decode(x, p, cfg: ArchConfig, qm: QuantMode, ssm_state, conv_state):
+    """One token. x: (B, 1, d); ssm_state: (B, H, P, N);
+    conv_state: (B, conv_dim, K-1)."""
+    Bb = x.shape[0]
+    h = rms_norm(x[:, 0], p["ln"], cfg.norm_eps)
+    zxbcdt = qlinear(h, p["in_proj"], p.get("b_in"), qm, "ssm_in")
+    z, xBC_t, dt_raw = _split_proj(zxbcdt, cfg)
+    xBC_t, conv_state = conv1d_step(conv_state, xBC_t, p["conv_w"],
+                                    p["conv_b"])
+    xBC_t = jax.nn.silu(xBC_t.astype(jnp.float32)).astype(x.dtype)
+    xh, Bh, Ch, dt, a = _ssm_inputs(xBC_t, dt_raw, p, cfg)   # (B, H, P) etc.
+    dA = jnp.exp(dt * a[None, :])                            # (B, H)
+    upd = jnp.einsum("bhn,bhp->bhpn", Bh.astype(jnp.float32),
+                     xh.astype(jnp.float32) * dt[..., None])
+    ssm_state = ssm_state * dA[..., None, None] + upd.astype(ssm_state.dtype)
+    y = jnp.einsum("bhn,bhpn->bhp", Ch.astype(jnp.float32),
+                   ssm_state.astype(jnp.float32)).astype(x.dtype)
+    y = y + xh * p["D"].astype(x.dtype)[None, :, None]
+    y = y.reshape(Bb, cfg.d_inner)
+    y = rms_norm_gated(y, z, p["norm"], cfg.norm_eps)
+    out = qlinear(y, p["out_proj"], p.get("b_out"), qm, "ssm_out")
+    return x + out[:, None, :], ssm_state, conv_state
+
+
+# ---------------------------------------------------------------------------
+# Model API
+# ---------------------------------------------------------------------------
+
+def head_matrix(params, cfg):
+    return params["head"] if "head" in params else params["embed"].T
+
+
+def head_out(x, params, cfg, qm):
+    return qlinear(x, head_matrix(params, cfg), params.get("bhead"),
+                   qm, "head")
+
+
+def forward(params, cfg: ArchConfig, inputs, qm: QuantMode = QuantMode.off()):
+    x = jnp.take(params["embed"], inputs, axis=0)
+    x = pctx.shard(x, "batch", None, None)
+
+    def body(xc, pl):
+        xc, _ = block(xc, pl, cfg, qm)
+        return pctx.shard(xc, "batch", "seq", None), None
+
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = scan_layers(body, x, params["blocks"], cfg.scan_layers)
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return head_out(x, params, cfg, qm)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.float32):
+    L, H, P, N = (cfg.n_layers, cfg.ssm_nheads, cfg.ssm_headdim,
+                  cfg.ssm_state)
+    return {
+        "ssm": jnp.zeros((L, batch, H, P, N), jnp.float32),
+        "conv": jnp.zeros((L, batch, cfg.conv_dim, cfg.conv_kernel - 1),
+                          dtype),
+    }
+
+
+def prefill(params, cfg: ArchConfig, inputs, qm: QuantMode = QuantMode.off(),
+            max_len: int | None = None):
+    del max_len  # state-space cache is O(1) in sequence length
+    x = jnp.take(params["embed"], inputs, axis=0)
+    x = pctx.shard(x, "batch", None, None)
+
+    def body(xc, pl):
+        xc, (s, c) = block(xc, pl, cfg, qm)
+        return pctx.shard(xc, "batch", "seq", None), (s, c)
+
+    x, (ss, cs) = scan_layers(body, x, params["blocks"], cfg.scan_layers)
+    x = rms_norm(x[:, -1:], params["ln_f"], cfg.norm_eps)
+    logits = head_out(x[:, 0], params, cfg, qm)
+    return logits, {"ssm": ss.astype(jnp.float32), "conv": cs}
+
+
+def decode(params, cfg: ArchConfig, cache, inputs, cur_len,
+           qm: QuantMode = QuantMode.off()):
+    del cur_len  # state-space cache is position-free
+    x = jnp.take(params["embed"], inputs[:, None], axis=0)
+    x = pctx.shard(x.astype(cache["conv"].dtype), "batch", None, None)
+
+    def body(xc, inp):
+        pl, s, c = inp
+        xc, s, c = block_decode(xc, pl, cfg, qm, s, c)
+        return xc, (s, c)
+
+    x, (ss, cs) = scan_layers(body, x, (params["blocks"], cache["ssm"],
+                               cache["conv"]), cfg.scan_layers)
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = head_out(x[:, 0], params, cfg, qm)
+    return logits, {"ssm": ss, "conv": cs}
+
+
+# ---------------------------------------------------------------------------
+# PTQ integration — T1 only (no value path; see DESIGN.md)
+# ---------------------------------------------------------------------------
+
+def fold_norms(params, cfg: ArchConfig):
+    p = dict(params)
+    b = dict(p["blocks"])
+    b["ln"], (b["in_proj"],) = fold_lib.fold_norm_into(b["ln"], b["in_proj"])
+    b["norm"], (b["out_proj"],) = fold_lib.fold_norm_into(
+        b["norm"], b["out_proj"])
+    head = head_matrix(params, cfg)
+    lnf, (head,) = fold_lib.fold_norm_into(p["ln_f"], head)
+    p["ln_f"], p["head"] = lnf, head
+    p["blocks"] = b
+    return p
+
+
+def fold(params, cfg: ArchConfig, tset: fold_lib.TransformSet):
+    p = dict(params)
+    b = dict(p["blocks"])
+    a1i = tset.a1_inv
+    b["in_proj"], b["b_in"] = fold_lib.fold_read(
+        b["in_proj"], None, a1i, tset.v1)
+    b["out_proj"], b["b_out"] = fold_lib.fold_write(
+        b["out_proj"], jnp.zeros((cfg.n_layers, cfg.d_model),
+                                 b["out_proj"].dtype), tset.a1)
+    p["embed"] = fold_lib.fold_embed(p["embed"], tset.a1, tset.v1)
+    head, bh = fold_lib.fold_read(head_matrix(params, cfg), None, a1i,
+                                  tset.v1)
+    p["head"], p["bhead"] = head, bh
+    p["blocks"] = b
+    return p

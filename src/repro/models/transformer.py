@@ -1,0 +1,287 @@
+"""Dense decoder-only / encoder-only transformer (llama-style: pre-RMSNorm,
+GQA + RoPE, SwiGLU). Serves families: 'dense', 'encoder' (causal=False, no
+decode path), 'vlm' (embed_inputs=False — stub frontend provides embeddings).
+
+Layers are stacked along a leading L axis and executed with ``lax.scan`` so
+95-layer configs compile as one block body (small HLO, fast compiles).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import folding as fold_lib
+from repro.core.quantize import QuantMode, qlinear
+from repro.launch import pcontext as pctx
+from .layers import (apply_rope, attention, dense_init, flash_attention,
+                     gated_mlp, rms_norm, scan_layers)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def init(key: jax.Array, cfg: ArchConfig, dtype=jnp.float32):
+    L, d, f = cfg.n_layers, cfg.d_model, cfg.d_ff
+    qd, kd = cfg.q_dim, cfg.kv_dim
+    ks = jax.random.split(key, 12)
+
+    def stack(k, din, dout, scale=1.0):
+        keys = jax.random.split(k, L)
+        return jnp.stack([dense_init(keys[i], din, dout, dtype, scale)
+                          for i in range(L)])
+
+    blocks = {
+        "ln1": jnp.ones((L, d), dtype),
+        "wq": stack(ks[0], d, qd),
+        "wk": stack(ks[1], d, kd),
+        "wv": stack(ks[2], d, kd),
+        "wo": stack(ks[3], qd, d, scale=1.0 / jnp.sqrt(2.0 * L)),
+        "ln2": jnp.ones((L, d), dtype),
+        "wg": stack(ks[4], d, f),
+        "wu": stack(ks[5], d, f),
+        "wd": stack(ks[6], f, d, scale=1.0 / jnp.sqrt(2.0 * L)),
+    }
+    if cfg.qkv_bias:
+        blocks["bq"] = jnp.zeros((L, qd), dtype)
+        blocks["bk"] = jnp.zeros((L, kd), dtype)
+        blocks["bv"] = jnp.zeros((L, kd), dtype)
+
+    params = {"blocks": blocks, "ln_f": jnp.ones((d,), dtype)}
+    if cfg.embed_inputs:
+        params["embed"] = (jax.random.normal(ks[7], (cfg.vocab_size, d),
+                                             jnp.float32) * 0.02).astype(dtype)
+        if not cfg.tie_embeddings:
+            params["head"] = dense_init(ks[8], d, cfg.vocab_size, dtype)
+    else:
+        params["head"] = dense_init(ks[8], d, cfg.vocab_size, dtype)
+    return params
+
+
+def head_matrix(params, cfg: ArchConfig):
+    if "head" in params:
+        return params["head"]
+    return params["embed"].T  # tied
+
+
+def head_out(x, params, cfg: ArchConfig, qm: QuantMode):
+    y = qlinear(x, head_matrix(params, cfg), params.get("bhead"), qm, "head")
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Block sublayers
+# ---------------------------------------------------------------------------
+
+def _qkv(x, p, cfg: ArchConfig, qm: QuantMode, pos):
+    B, S, _ = x.shape
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q = qlinear(h, p["wq"], p.get("bq"), qm, "qkv")
+    k = qlinear(h, p["wk"], p.get("bk"), qm, "qkv")
+    v = qlinear(h, p["wv"], p.get("bv"), qm, "qkv")
+    q = pctx.shard(q, "batch", None, "model")
+    q = q.reshape(B, S, cfg.n_heads, cfg.head_dim)
+    kh = k.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    kh = apply_rope(kh, pos, cfg.rope_theta)
+    return q, kh.reshape(B, S, cfg.kv_dim), v
+
+
+def attn_sublayer(x, p, cfg: ArchConfig, qm: QuantMode, pos,
+                  window: int = 0):
+    """Full-sequence attention (train / prefill). Returns (x', k, v)."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(x, p, cfg, qm, pos)
+    kh = k.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    vh = v.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.attn_repeat_kv:
+        # materialize kv to H heads: every attention tensor then carries a
+        # TP-divisible head axis, so GSPMD keeps the whole attention (fwd
+        # and custom-vjp bwd) head-sharded instead of replicating (§Perf)
+        g = cfg.n_heads // cfg.n_kv_heads
+        kh = jnp.repeat(kh, g, axis=2)
+        vh = jnp.repeat(vh, g, axis=2)
+        q = pctx.shard(q, "batch", None, "model", None)
+        kh = pctx.shard(kh, "batch", None, "model", None)
+        vh = pctx.shard(vh, "batch", None, "model", None)
+    out = flash_attention(
+        q, kh, vh,
+        causal=cfg.causal, q_pos=pos, window=window, chunk=cfg.attn_chunk)
+    if cfg.attn_repeat_kv:
+        out = pctx.shard(out, "batch", None, "model", None)
+    out = out.reshape(B, S, cfg.q_dim)
+    out = qlinear(out, p["wo"], p.get("bo"), qm, "attn_out")
+    return x + out, k, v
+
+
+def attn_sublayer_decode(x, p, cfg: ArchConfig, qm: QuantMode,
+                         cache_k, cache_v, cur_len, window: int = 0):
+    """One-token attention against a cache. x: (B, 1, d);
+    cache_k/v: (B, Smax, kv_dim). Writes the new kv at index cur_len."""
+    B = x.shape[0]
+    pos = jnp.reshape(cur_len, (1,)).astype(jnp.int32)
+    q, k, v = _qkv(x, p, cfg, qm, pos)
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k, (0, cur_len, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v, (0, cur_len, 0))
+    cache_k = pctx.shard(cache_k, "batch", None, "model")
+    cache_v = pctx.shard(cache_v, "batch", None, "model")
+    Smax = cache_k.shape[1]
+    out = attention(q,
+                    cache_k.reshape(B, Smax, cfg.n_kv_heads, cfg.head_dim),
+                    cache_v.reshape(B, Smax, cfg.n_kv_heads, cfg.head_dim),
+                    causal=True, q_pos=pos, kv_len=cur_len + 1,
+                    window=window, chunk=cfg.attn_chunk)
+    out = out.reshape(B, 1, cfg.q_dim)
+    out = qlinear(out, p["wo"], p.get("bo"), qm, "attn_out")
+    return x + out, cache_k, cache_v
+
+
+def ffn_sublayer(x, p, cfg: ArchConfig, qm: QuantMode):
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    return x + gated_mlp(h, p["wg"], p["wu"], p["wd"], qm,
+                         bg=p.get("bg"), bu=p.get("bu"), bd=p.get("bd"))
+
+
+# ---------------------------------------------------------------------------
+# Forward / prefill / decode
+# ---------------------------------------------------------------------------
+
+def embed_inputs(params, cfg: ArchConfig, inputs):
+    if cfg.embed_inputs:
+        x = jnp.take(params["embed"], inputs, axis=0)
+    else:
+        x = inputs  # (B, S, d) stub-frontend embeddings
+        if "input_transform" in params:  # folded T1 for stub-frontend archs
+            t = params["input_transform"]
+            x = x @ t["a"].astype(x.dtype) + t["v"].astype(x.dtype)
+    return pctx.shard(x, "batch", None, None)
+
+
+def forward(params, cfg: ArchConfig, inputs, qm: QuantMode = QuantMode.off()):
+    """inputs: (B, S) int tokens or (B, S, d) embeddings -> (B, S, V)."""
+    x = embed_inputs(params, cfg, inputs)
+    S = x.shape[1]
+    pos = jnp.arange(S, dtype=jnp.int32)
+
+    def body(xc, pl):
+        xc, _, _ = attn_sublayer(xc, pl, cfg, qm, pos, window=cfg.window)
+        xc = ffn_sublayer(xc, pl, cfg, qm)
+        return pctx.shard(xc, "batch", "seq", None), None
+
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = scan_layers(body, x, params["blocks"], cfg.scan_layers)
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = head_out(x, params, cfg, qm)
+    return pctx.shard(logits, "batch", None, "model")
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.float32):
+    shape = (cfg.n_layers, batch, max_len, cfg.kv_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def prefill(params, cfg: ArchConfig, inputs,
+            qm: QuantMode = QuantMode.off(), max_len: int | None = None):
+    """Run the prompt, return (last-position logits (B, V), cache).
+    ``max_len`` sizes the cache for subsequent decode steps."""
+    x = embed_inputs(params, cfg, inputs)
+    B, S = x.shape[0], x.shape[1]
+    pos = jnp.arange(S, dtype=jnp.int32)
+
+    def body(xc, pl):
+        xc, k, v = attn_sublayer(xc, pl, cfg, qm, pos, window=cfg.window)
+        xc = ffn_sublayer(xc, pl, cfg, qm)
+        return pctx.shard(xc, "batch", "seq", None), (k, v)
+
+    x, (ks, vs) = scan_layers(body, x, params["blocks"], cfg.scan_layers)
+    x = rms_norm(x[:, -1:], params["ln_f"], cfg.norm_eps)
+    logits = head_out(x[:, 0], params, cfg, qm)
+    if max_len is not None and max_len > S:
+        L = cfg.n_layers
+        pad = jnp.zeros((L, B, max_len - S, cfg.kv_dim), ks.dtype)
+        ks = jnp.concatenate([ks, pad], axis=2)
+        vs = jnp.concatenate([vs, pad], axis=2)
+    cache = {"k": pctx.shard(ks, None, "batch", None, "model"),
+             "v": pctx.shard(vs, None, "batch", None, "model")}
+    return logits, cache
+
+
+def decode(params, cfg: ArchConfig, cache, inputs, cur_len,
+           qm: QuantMode = QuantMode.off()):
+    """One decode step. inputs: (B,) tokens or (B, d) embeddings;
+    cur_len: traced int32 — current cache fill. Returns (logits, cache)."""
+    if cfg.embed_inputs:
+        x = jnp.take(params["embed"], inputs[:, None], axis=0)
+    else:
+        x = inputs[:, None, :]
+    x = pctx.shard(x.astype(cache["k"].dtype), "batch", None, None)
+
+    def body(xc, inp):
+        pl, ck, cv = inp
+        xc, ck, cv = attn_sublayer_decode(xc, pl, cfg, qm, ck, cv, cur_len,
+                                          window=cfg.window)
+        xc = ffn_sublayer(xc, pl, cfg, qm)
+        return xc, (ck, cv)
+
+    x, (ks, vs) = scan_layers(body, x, (params["blocks"],
+                               cache["k"], cache["v"]), cfg.scan_layers)
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = head_out(x[:, 0], params, cfg, qm)
+    return logits, {"k": ks, "v": vs}
+
+
+# ---------------------------------------------------------------------------
+# PTQ integration: norm folding + transform folding (Appendix C)
+# ---------------------------------------------------------------------------
+
+def fold_norms(params, cfg: ArchConfig):
+    """Fold RMSNorm γ's into adjacent linears (exact)."""
+    p = dict(params)
+    b = dict(p["blocks"])
+    b["ln1"], (b["wq"], b["wk"], b["wv"]) = fold_lib.fold_norm_into(
+        b["ln1"], b["wq"], b["wk"], b["wv"])
+    b["ln2"], (b["wg"], b["wu"]) = fold_lib.fold_norm_into(
+        b["ln2"], b["wg"], b["wu"])
+    head = head_matrix(params, cfg)
+    lnf, (head,) = fold_lib.fold_norm_into(p["ln_f"], head)
+    p["ln_f"] = lnf
+    p["head"] = head  # unties if tied
+    p["blocks"] = b
+    return p
+
+
+def fold(params, cfg: ArchConfig, tset: fold_lib.TransformSet):
+    """Fold T1/T2 (+T3 inverse) into the weights. Differentiable — the
+    LATMiX student runs this inside its loss. Requires fold_norms first."""
+    p = dict(params)
+    b = dict(p["blocks"])
+    a1i = tset.a1_inv
+    a2i = tset.a2_inv()
+
+    b["wq"], b["bq"] = fold_lib.fold_read(b["wq"], b.get("bq"), a1i, tset.v1)
+    b["wk"], b["bk"] = fold_lib.fold_read(b["wk"], b.get("bk"), a1i, tset.v1)
+    b["wv"], b["bv"] = fold_lib.fold_value(
+        b["wv"], b.get("bv", jnp.zeros_like(b["wk"][..., 0, :])), a1i,
+        tset.v1, tset.a2, tset.v2, cfg.n_kv_heads)
+    b["wo"], b["bo"] = fold_lib.fold_attn_out(
+        b["wo"], None, tset.a1, a2i, tset.v2, cfg.n_heads)
+    b["wg"], b["bg"] = fold_lib.fold_read(b["wg"], None, a1i, tset.v1)
+    b["wu"], b["bu"] = fold_lib.fold_read(b["wu"], None, a1i, tset.v1)
+    wd, bd = fold_lib.fold_write(b["wd"], None, tset.a1)
+    if tset.t3_block:
+        wd = fold_lib.fold_t3(wd, tset.t3_block)
+    b["wd"] = wd
+
+    if cfg.embed_inputs:
+        p["embed"] = fold_lib.fold_embed(p["embed"], tset.a1, tset.v1)
+    else:
+        p["input_transform"] = {"a": tset.a1, "v": tset.v1}
+    head, bh = fold_lib.fold_read(head_matrix(params, cfg), None, a1i, tset.v1)
+    p["head"], p["bhead"] = head, bh
+    p["blocks"] = b
+    return p

@@ -1,0 +1,222 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+"""Roofline analysis (EXPERIMENTS.md §Roofline).
+
+Hardware model (TPU v5e):  peak 197 TFLOP/s bf16 / chip, 819 GB/s HBM,
+~50 GB/s/link ICI.
+
+Terms per (arch × shape) on the single-pod mesh, all per-device:
+
+  compute    = FLOPs / 197e12
+  memory     = HBM bytes accessed / 819e9
+  collective = collective bytes / 50e9
+
+XLA's cost_analysis counts a while-loop body ONCE, so the scanned dry-run
+numbers undercount by the trip count. We therefore lower *unrolled*
+reduced-layer variants (L₁ and L₂ layers) of every cell on the same mesh
+and extrapolate:  total = f(L₁) + (units − 1)·(f(L₂) − f(L₁)), where a
+"unit" is a layer (dense/moe/ssm/encoder/vlm) or a (rec,rec,attn)
+super-block (hybrid; the rec tail is inside both lowerings and lands in
+the intercept). Gradient-accumulation scans are handled the same way: the
+variants run one microbatch (accum=1) and the result is scaled by accum,
+with the (once-per-step) optimizer bytes added back analytically.
+
+MODEL_FLOPS = 6·N·D (train) / 2·N·D (prefill & decode), N_active for MoE —
+the "useful" fraction MODEL_FLOPS / HLO_FLOPS exposes remat/attention/
+quantizer overhead.
+"""
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+
+import jax
+
+from repro import configs
+from repro.configs.base import SHAPES, ShapeConfig, shape_applicable
+from repro.launch import dryrun as dr
+from repro.launch import mesh as mesh_lib
+from repro.launch import pcontext as pctx
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+def _variant_layers(cfg):
+    if cfg.family == "hybrid":
+        # keep the rec tail in both variants: units = super-blocks
+        tail = cfg.n_tail_rec
+        return 3 + tail, 6 + tail, cfg.n_super_blocks
+    return 1, 2, cfg.n_layers
+
+
+def _lower_variant(cfg, shape, mesh, quant, accum_used, baked=False):
+    """Lower one unrolled variant; return per-device (flops, bytes, coll)."""
+    step_shape = shape
+    if shape.kind == "train" and accum_used > 1:
+        step_shape = ShapeConfig(shape.name, shape.seq_len,
+                                 shape.global_batch // accum_used, "train")
+    step, in_sh, out_sh, args, _ = dr.build_cell(cfg, step_shape, mesh,
+                                                 quant, accum="1",
+                                                 baked=baked)
+    seq_ax = "model" if shape.kind == "train" else None
+    with mesh, pctx.activate(mesh, batch_axes=mesh_lib.dp_axes(mesh),
+                             model_axis="model", seq_axis=seq_ax):
+        compiled = jax.jit(step, in_shardings=in_sh,
+                           out_shardings=out_sh).lower(*args).compile()
+        ca = compiled.cost_analysis() or {}
+        coll = dr.parse_collectives(compiled.as_text())
+    coll_bytes = sum(v["bytes"] for v in coll.values())
+    return (float(ca.get("flops", 0.0)),
+            float(ca.get("bytes accessed", 0.0)), coll_bytes, coll)
+
+
+def analyze_cell(arch: str, shape_name: str, quant: bool = True,
+                 arch_cfg=None, label: str = "", baked: bool = False) -> dict:
+    cfg0 = arch_cfg or configs.get(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg0, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": "skipped",
+                "reason": why}
+    mesh = mesh_lib.make_production_mesh(multi_pod=False)
+    l1, l2, units = _variant_layers(cfg0)
+    accum = 1
+    if shape.kind == "train":
+        aid = arch.replace("-", "_").replace(".", "_")
+        accum = dr.ACCUM.get(aid, 1)
+        dp_total = mesh.shape["data"]
+        per_dev = max(1, shape.global_batch // dp_total)
+        while accum > 1 and (shape.global_batch % accum
+                             or (shape.global_batch // accum) % dp_total):
+            accum //= 2
+        accum = min(accum, per_dev)
+
+    res = {}
+    for tag, L in (("l1", l1), ("l2", l2)):
+        cfg = dataclasses.replace(cfg0, n_layers=L, scan_layers=False)
+        res[tag] = _lower_variant(cfg, shape, mesh, quant, accum, baked)
+
+    def extrap(i):
+        per_unit = res["l2"][i] - res["l1"][i]
+        return res["l1"][i] + (units - 1) * per_unit
+
+    flops = extrap(0) * accum
+    bytes_hbm = extrap(1) * accum
+    coll_bytes = extrap(2) * accum
+    n_dev = mesh.size
+
+    if shape.kind == "train":
+        # optimizer runs once per step but is inside each variant: remove
+        # the double count and re-add once (analytic: p bf16 r/w, m,v f32
+        # r/w, grad f32 read ≈ 24 B/param, per-device share).
+        opt_bytes = 24.0 * cfg0.param_count() / n_dev
+        bytes_hbm = bytes_hbm - (accum - 1) * opt_bytes
+
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_hbm / HBM_BW
+    t_coll = coll_bytes / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+
+    n_param = cfg0.param_count(active_only=True)
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        model_flops = 6.0 * n_param * B * S
+    elif shape.kind == "prefill":
+        model_flops = 2.0 * n_param * B * S
+    else:
+        model_flops = 2.0 * n_param * B        # one token per sequence
+    model_flops_dev = model_flops / n_dev
+    useful = model_flops_dev / max(flops, 1.0)
+    bound = max(terms.values())
+    if shape.kind == "decode":
+        # decode is bandwidth-bound by construction: the right roofline
+        # fraction is ideal bytes (params once + cache once) / HLO bytes.
+        from repro.core import mx as mxlib
+        if quant:
+            pbytes = cfg0.param_count() * (4.25 / 8)   # packed 4-bit + scales
+        else:
+            pbytes = cfg0.param_count() * 2            # bf16
+        cache_bytes = _cache_bytes(cfg0, B, S)
+        ideal = (pbytes + cache_bytes) / n_dev
+        roofline_frac = ideal / max(bytes_hbm, 1.0)
+    else:
+        roofline_frac = (model_flops_dev / PEAK_FLOPS) / max(bound, 1e-30)
+
+    return {
+        "arch": arch, "shape": shape_name, "status": "ok",
+        "label": label or "baseline",
+        "quant": bool(quant and shape.kind != "train"),
+        "accum": accum, "units": units,
+        "flops_per_device": flops,
+        "hbm_bytes_per_device": bytes_hbm,
+        "collective_bytes_per_device": coll_bytes,
+        "collectives_l2": res["l2"][3],
+        "terms_s": {k: v for k, v in terms.items()},
+        "dominant": dominant,
+        "model_flops": model_flops,
+        "useful_flops_ratio": useful,
+        "roofline_fraction": roofline_frac,
+        "step_time_lower_bound_s": bound,
+    }
+
+
+def _cache_bytes(cfg, batch: int, seq: int) -> float:
+    """Bytes of the decode cache (read once per step, ideally)."""
+    if cfg.family == "ssm":
+        return (cfg.n_layers * batch
+                * (cfg.ssm_nheads * cfg.ssm_headdim * cfg.ssm_state * 4
+                   + cfg.conv_dim * (cfg.conv_kernel - 1) * 2))
+    if cfg.family == "hybrid":
+        a = min(seq, cfg.window)
+        return (cfg.n_super_blocks * batch * a * cfg.kv_dim * 2 * 2
+                + cfg.n_rec_layers * batch * cfg.lru_width
+                * (4 + 2 * (cfg.conv_kernel - 1)))
+    return cfg.n_layers * batch * seq * cfg.kv_dim * 2 * 2
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--out", default="experiments/roofline")
+    args = ap.parse_args()
+    from repro.configs.base import ASSIGNED_SHAPES
+    archs = configs.ARCH_IDS if args.arch == "all" else [
+        configs.canonical(args.arch)]
+    shapes = (list(ASSIGNED_SHAPES) if args.shape == "all"
+              else [args.shape])
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    rows = []
+    for arch in archs:
+        for shp in shapes:
+            t0 = time.time()
+            try:
+                r = analyze_cell(arch, shp, baked=True)
+            except Exception as e:  # noqa: BLE001
+                r = {"arch": arch, "shape": shp, "status": "failed",
+                     "error": f"{type(e).__name__}: {e}"}
+            rows.append(r)
+            if r["status"] == "ok":
+                print(f"{arch:22s} {shp:12s} dom={r['dominant']:10s} "
+                      f"cmp={r['terms_s']['compute']*1e3:8.2f}ms "
+                      f"mem={r['terms_s']['memory']*1e3:8.2f}ms "
+                      f"col={r['terms_s']['collective']*1e3:8.2f}ms "
+                      f"frac={r['roofline_fraction']:.3f} "
+                      f"({time.time()-t0:.0f}s)", flush=True)
+            else:
+                print(f"{arch:22s} {shp:12s} {r['status']}: "
+                      f"{r.get('reason', r.get('error', ''))[:80]}",
+                      flush=True)
+            (outdir / f"{arch}__{shp}.json").write_text(
+                json.dumps(r, indent=1))
+    (outdir / "table.json").write_text(json.dumps(rows, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""AdamW + gradient clipping + schedules, from scratch (no optax here).
+
+Optimizer state is a pytree mirroring the params (so it inherits the param
+sharding — ZeRO-3-equivalent under our FSDP param specs)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: dict
+    v: dict
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"     # 'cosine' | 'constant' | 'linear'
+    min_lr_frac: float = 0.1
+
+
+def schedule_lr(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (s + 1.0) / max(cfg.warmup_steps, 1))
+    # cosine warmup starts at 0.1x (paper D.1: start/end factors 0.1 -> 1)
+    warm = 0.1 + 0.9 * warm
+    if cfg.schedule == "constant":
+        decay = 1.0
+    elif cfg.schedule == "linear":
+        frac = jnp.clip(s / max(cfg.total_steps, 1), 0.0, 1.0)
+        decay = 1.0 - (1.0 - cfg.min_lr_frac) * frac
+    else:
+        frac = jnp.clip(s / max(cfg.total_steps, 1), 0.0, 1.0)
+        decay = (cfg.min_lr_frac + (1.0 - cfg.min_lr_frac)
+                 * 0.5 * (1.0 + jnp.cos(jnp.pi * frac)))
+    return cfg.lr * warm * decay
+
+
+def init_state(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32),
+                         params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                      v=jax.tree.map(jnp.copy, zeros))
+
+
+def global_norm(tree) -> jnp.ndarray:
+    sq = jax.tree.reduce(
+        lambda a, g: a + jnp.sum(jnp.square(g.astype(jnp.float32))),
+        tree, jnp.float32(0))
+    return jnp.sqrt(sq)
+
+
+def apply_updates(params, grads, state: AdamWState, cfg: AdamWConfig,
+                  mask: Optional[Callable] = None):
+    """One AdamW step. ``mask(path_leaf)`` may disable weight decay (we
+    decay only >=2D leaves by default, the usual matrix-only rule)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9)) \
+        if cfg.grad_clip else 1.0
+    step = state.step + 1
+    lr = schedule_lr(cfg, state.step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m / b1c
+        vhat = v / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay:
+            decay_on = p.ndim >= 2 if mask is None else mask(p)
+            delta = delta + (cfg.weight_decay * p.astype(jnp.float32)
+                             if decay_on else 0.0)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step=step, m=new_m, v=new_v), \
+        {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,158 @@
+"""Distributed training loop: pjit'd train step, gradient accumulation,
+activation checkpointing (cfg.remat), deterministic-by-step data,
+checkpoint/resume, straggler watchdog, and a failure-injection hook used
+by the fault-tolerance tests.
+
+Single-process on CPU here; on a cluster the same code runs under
+``jax.distributed.initialize`` (scripts/launch_pod.sh) with the mesh from
+``make_production_mesh`` — nothing in the loop is host-count-dependent.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.data import synthetic
+from repro.launch import mesh as mesh_lib
+from repro.launch import pcontext as pctx
+from repro.launch import shardings as sh
+from repro.launch import steps as steps_lib
+from repro.models import api
+from repro.training import checkpoint as ckpt_lib
+from repro.training import optimizer as opt
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 200
+    batch_size: int = 8
+    seq_len: int = 128
+    accum: int = 1
+    ckpt_every: int = 50
+    ckpt_dir: str = "checkpoints"
+    keep: int = 3
+    log_every: int = 10
+    seed: int = 0
+    watchdog_factor: float = 10.0   # straggler alarm: step > factor×median
+    opt: opt.AdamWConfig = dataclasses.field(default_factory=opt.AdamWConfig)
+
+
+class Trainer:
+    def __init__(self, cfg: ArchConfig, tc: TrainConfig,
+                 mesh=None, log: Callable[[str], None] = print):
+        self.cfg, self.tc, self.log = cfg, tc, log
+        self.mesh = mesh or mesh_lib.make_host_mesh(
+            data=len(jax.devices()), model=1)
+        self.source = synthetic.make_source(cfg, tc.batch_size, tc.seq_len,
+                                            tc.seed)
+        self.step_fn = None
+        self.params = None
+        self.opt_state = None
+        self.step = 0
+        self.metrics = []
+
+    # -- setup ---------------------------------------------------------------
+    def init_or_resume(self):
+        key = jax.random.PRNGKey(self.tc.seed)
+        dtype = steps_lib.param_dtype(self.cfg)
+        aparams = steps_lib.abstract_params(self.cfg)
+        psh = sh.params_shardings(aparams, self.cfg, "train", self.mesh)
+        latest = ckpt_lib.latest_step(self.tc.ckpt_dir)
+        if latest is not None:
+            tree_like = {"params": aparams,
+                         "opt": steps_lib.abstract_opt_state(self.cfg)}
+            shards = {"params": psh,
+                      "opt": sh.opt_state_shardings(
+                          tree_like["opt"], psh, self.mesh)}
+            restored, manifest = ckpt_lib.restore(
+                self.tc.ckpt_dir, tree_like, shardings=shards)
+            self.params = restored["params"]
+            self.opt_state = restored["opt"]
+            self.step = int(manifest["step"])
+            self.log(f"[trainer] resumed from step {self.step}")
+        else:
+            init = jax.jit(lambda k: api.init(k, self.cfg, dtype),
+                           out_shardings=psh)
+            self.params = init(key)
+            self.opt_state = jax.jit(opt.init_state,
+                                     out_shardings=sh.opt_state_shardings(
+                                         steps_lib.abstract_opt_state(
+                                             self.cfg), psh,
+                                         self.mesh))(self.params)
+        raw = steps_lib.make_train_step(self.cfg, self.tc.opt,
+                                        accum=self.tc.accum)
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        scalar = NamedSharding(self.mesh, P())
+        osh = sh.opt_state_shardings(
+            steps_lib.abstract_opt_state(self.cfg), psh, self.mesh)
+        self.step_fn = jax.jit(
+            raw, in_shardings=(psh, osh, sh.train_batch_shardings(
+                self.cfg, _shape_of(self.tc), self.mesh)),
+            out_shardings=(psh, osh, scalar, scalar),
+            donate_argnums=(0, 1))
+
+    # -- loop ----------------------------------------------------------------
+    def train(self, fail_at: Optional[int] = None):
+        """Run to tc.steps. ``fail_at`` raises mid-run (fault-injection for
+        the restart tests)."""
+        if self.step_fn is None:
+            self.init_or_resume()
+        times = []
+        with self.mesh, pctx.activate(
+                self.mesh, batch_axes=mesh_lib.dp_axes(self.mesh),
+                model_axis=mesh_lib.model_axis(self.mesh),
+                seq_axis=None):
+            while self.step < self.tc.steps:
+                if fail_at is not None and self.step == fail_at:
+                    raise RuntimeError(f"injected failure at {self.step}")
+                t0 = time.time()
+                batch = {k: jnp.asarray(v) for k, v in
+                         self.source.batch(self.step).items()}
+                self.params, self.opt_state, loss, gnorm = self.step_fn(
+                    self.params, self.opt_state, batch)
+                loss = float(loss)
+                dt = time.time() - t0
+                times.append(dt)
+                med = sorted(times)[len(times) // 2]
+                if (len(times) > 5 and dt > self.tc.watchdog_factor * med):
+                    self.log(f"[watchdog] step {self.step} took {dt:.2f}s "
+                             f"(median {med:.2f}s) — straggler suspected")
+                self.step += 1
+                if self.step % self.tc.log_every == 0:
+                    self.metrics.append({"step": self.step, "loss": loss})
+                    self.log(f"[trainer] step {self.step:5d} "
+                             f"loss={loss:.4f} ({dt:.2f}s)")
+                if self.step % self.tc.ckpt_every == 0 or \
+                        self.step == self.tc.steps:
+                    self.save()
+        return self.metrics
+
+    def save(self):
+        ckpt_lib.save(self.tc.ckpt_dir, self.step,
+                      {"params": self.params, "opt": self.opt_state},
+                      keep=self.tc.keep,
+                      extra={"arch": self.cfg.name})
+
+    def eval_ppl(self, n_batches: int = 2) -> float:
+        tot, cnt = 0.0, 0
+        for i in range(1000, 1000 + n_batches):
+            b = self.source.batch(i)
+            logits = api.forward(self.params, self.cfg,
+                                 jnp.asarray(b["inputs"]))
+            nll = api.cross_entropy(logits, jnp.asarray(b["labels"]))
+            tot += float(nll)
+            cnt += 1
+        import math
+        return math.exp(tot / cnt)
+
+
+def _shape_of(tc: TrainConfig):
+    from repro.configs.base import ShapeConfig
+    return ShapeConfig("custom", tc.seq_len, tc.batch_size, "train")

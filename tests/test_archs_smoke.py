@@ -1,0 +1,113 @@
+"""Per-architecture smoke tests: reduced config of the same family, one
+forward + one train (grad) step on CPU, asserting output shapes + no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs.base import ASSIGNED_SHAPES, SHAPES, shape_applicable
+from repro.data import synthetic
+from repro.models import api
+
+
+def _batch(cfg, B=2, S=32, seed=0):
+    src = synthetic.make_source(cfg, B, S, seed)
+    b = src.batch(0)
+    return {k: jnp.asarray(v) for k, v in b.items()}
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_forward_and_grad_step(arch):
+    cfg = configs.get_reduced(arch)
+    key = jax.random.PRNGKey(0)
+    params = api.init(key, cfg)
+    batch = _batch(cfg)
+    logits = api.forward(params, cfg, batch["inputs"])
+    B, S = batch["labels"].shape
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any()), "NaN in forward"
+
+    loss, grads = jax.value_and_grad(api.lm_loss)(params, cfg, batch)
+    assert np.isfinite(float(loss)), "non-finite loss"
+    gnorm = jax.tree.reduce(
+        lambda a, g: a + jnp.sum(jnp.square(g.astype(jnp.float32))),
+        grads, jnp.float32(0))
+    assert np.isfinite(float(gnorm)) and float(gnorm) > 0
+
+    # one SGD step moves the loss
+    lr = 0.5
+    params2 = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype),
+                           params, grads)
+    loss2 = api.lm_loss(params2, cfg, batch)
+    assert np.isfinite(float(loss2))
+
+
+@pytest.mark.parametrize("arch", [a for a in configs.ARCH_IDS
+                                  if configs.get(a).family != "encoder"])
+def test_prefill_decode_consistency(arch):
+    cfg = configs.get_reduced(arch)
+    key = jax.random.PRNGKey(1)
+    params = api.init(key, cfg)
+    batch = _batch(cfg, B=2, S=16)
+    inputs = batch["inputs"]
+    full = api.forward(params, cfg, inputs)
+    last, cache = api.prefill(params, cfg, inputs, max_len=32)
+    np.testing.assert_allclose(np.asarray(last), np.asarray(full[:, -1]),
+                               atol=2e-4, rtol=2e-3)
+    if cfg.embed_inputs:
+        nxt = jnp.asarray([3, 5], jnp.int32)
+        ext = jnp.concatenate([inputs, nxt[:, None]], axis=1)
+    else:
+        nxt = jnp.asarray(_batch(cfg, B=2, S=1, seed=3)["inputs"][:, 0])
+        ext = jnp.concatenate([inputs, nxt[:, None, :]], axis=1)
+    lg, _ = api.decode(params, cfg, cache, nxt, jnp.int32(16))
+    full2 = api.forward(params, cfg, ext)
+    # MoE capacity drops can perturb; tolerance reflects that
+    tol = 5e-2 if cfg.family == "moe" else 2e-4
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(full2[:, -1]),
+                               atol=tol, rtol=tol)
+
+
+def test_full_configs_match_assignment():
+    spec = {
+        "deepseek_67b": (95, 8192, 64, 8, 22016, 102400),
+        "qwen2_7b": (28, 3584, 28, 4, 18944, 152064),
+        "qwen2_0_5b": (24, 896, 14, 2, 4864, 151936),
+        "tinyllama_1_1b": (22, 2048, 32, 4, 5632, 32000),
+        "recurrentgemma_2b": (26, 2560, 10, 1, 7680, 256000),
+        "moonshot_v1_16b_a3b": (48, 2048, 16, 16, 1408, 163840),
+        "qwen2_moe_a2_7b": (24, 2048, 16, 16, 1408, 151936),
+        "hubert_xlarge": (48, 1280, 16, 16, 5120, 504),
+        "internvl2_26b": (48, 6144, 48, 8, 16384, 92553),
+    }
+    for aid, (L, d, H, K, f, V) in spec.items():
+        c = configs.get(aid)
+        assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads,
+                c.d_ff, c.vocab_size) == (L, d, H, K, f, V), aid
+    m = configs.get("mamba2_130m")
+    assert (m.n_layers, m.d_model, m.vocab_size, m.ssm_state) == \
+        (24, 768, 50280, 128)
+    assert configs.get("moonshot_v1_16b_a3b").n_experts == 64
+    assert configs.get("moonshot_v1_16b_a3b").top_k == 6
+    assert configs.get("qwen2_moe_a2_7b").n_experts == 60
+    assert configs.get("qwen2_moe_a2_7b").top_k == 4
+    assert configs.get("qwen2_moe_a2_7b").n_shared_experts == 4
+
+
+def test_shape_skip_matrix():
+    cells = 0
+    skips = []
+    for aid in configs.ARCH_IDS:
+        cfg = configs.get(aid)
+        for name in ASSIGNED_SHAPES:
+            sh = SHAPES[name]
+            ok, why = shape_applicable(cfg, sh)
+            if ok:
+                cells += 1
+            else:
+                skips.append((aid, sh.name, why))
+    assert cells == 31, (cells, skips)
+    assert ("hubert_xlarge", "decode_32k",
+            "encoder-only arch has no decode step") in skips
+    assert sum(1 for s in skips if s[1] == "long_500k") == 8

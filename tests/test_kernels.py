@@ -1,0 +1,77 @@
+"""Pallas kernel validation: shape/dtype sweeps vs pure-jnp oracles
+(interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+
+SHAPES = [(8, 32), (16, 64), (64, 256), (128, 512), (33 * 8, 96)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+FMTS = ["mxfp4", "mxint4"]
+
+
+def _data(shape, dtype, seed=0, outliers=True):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(k1, shape, jnp.float32)
+    if outliers:
+        x = x * jnp.exp(jax.random.normal(k2, shape, jnp.float32))
+    return x.astype(dtype)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("fmt", FMTS)
+def test_mx_quant_matches_ref(shape, dtype, fmt):
+    x = _data(shape, dtype)
+    c, s = ops.mx_quantize(x, fmt, interpret=True)
+    cr, sr = ops.mx_quant_ref(x, fmt)
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(cr))
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(sr))
+
+
+@pytest.mark.parametrize("mkn", [(8, 32, 16), (64, 128, 64),
+                                 (128, 512, 256), (72, 96, 40)])
+@pytest.mark.parametrize("fmt", FMTS)
+def test_mx_matmul_matches_ref(mkn, fmt):
+    m, k, n = mkn
+    x = _data((m, k), jnp.float32, seed=1)
+    w = _data((k, n), jnp.float32, seed=2, outliers=False) * 0.3
+    wc, ws = ops.quantize_weight_for_kernel(w, fmt)
+    y = ops.mx_gemm(x, wc, ws, fmt, interpret=True)
+    yr = ops.mx_matmul_ref(x, wc, ws, fmt)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=1e-4, rtol=1e-5)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("fmt", FMTS)
+def test_hadamard_quant_matches_ref(shape, fmt):
+    x = _data(shape, jnp.float32, seed=3)
+    c, s = ops.t3_quantize(x, fmt, interpret=True)
+    cr, sr = ops.hadamard_quant_ref(x, fmt)
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(cr))
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(sr))
+
+
+def test_mx_matmul_quant_error_bounded():
+    """The fused-quant GEMM must stay within the analytic MX error bound
+    of the exact product."""
+    x = _data((64, 256), jnp.float32, seed=4)
+    w = _data((256, 64), jnp.float32, seed=5, outliers=False) * 0.2
+    wc, ws = ops.quantize_weight_for_kernel(w)
+    y = ops.mx_gemm(x, wc, ws, interpret=True)
+    exact = x @ w
+    rel = float(jnp.linalg.norm(y - exact) / jnp.linalg.norm(exact))
+    assert rel < 0.2, rel
+
+
+def test_gemm_bf16_inputs():
+    x = _data((32, 128), jnp.bfloat16, seed=6)
+    w = _data((128, 32), jnp.float32, seed=7, outliers=False) * 0.3
+    wc, ws = ops.quantize_weight_for_kernel(w)
+    y = ops.mx_gemm(x, wc, ws, interpret=True)
+    yr = ops.mx_matmul_ref(x.astype(jnp.float32), wc, ws)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=2e-2, rtol=2e-2)

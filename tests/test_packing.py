@@ -1,0 +1,58 @@
+"""4-bit packing layout: roundtrip exactness + byte accounting +
+hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import mx as mxlib
+from repro.kernels import packing, ref
+
+
+def test_pack_unpack_codes_roundtrip():
+    rng = np.random.default_rng(0)
+    c = jnp.asarray(rng.integers(0, 15, (16, 64)), jnp.uint8)
+    np.testing.assert_array_equal(
+        np.asarray(packing.unpack_codes(packing.pack_codes(c))),
+        np.asarray(c))
+
+
+def test_scale_e8m0_roundtrip():
+    e = jnp.asarray([-20, -3, 0, 1, 7, 30], jnp.float32)
+    s = jnp.exp2(e)
+    b = packing.pack_scales_e8m0(s)
+    np.testing.assert_allclose(np.asarray(packing.unpack_scales_e8m0(b)),
+                               np.asarray(s))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_property_weight_bundle_exact(seed):
+    """pack -> unpack == fake-quantized weight, and the byte count matches
+    mx.packed_nbytes (the roofline accounting)."""
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.standard_normal((64, 32)), jnp.float32)
+    bundle = packing.pack_weight(w)
+    wq = packing.unpack_weight(bundle)
+    cfg = mxlib.MXConfig(fmt="mxfp4", block_size=32)
+    expect = mxlib.quantize(w.T, cfg, ste=False).T
+    np.testing.assert_allclose(np.asarray(wq), np.asarray(expect),
+                               atol=1e-6)
+    assert packing.packed_bundle_nbytes(bundle) == \
+        mxlib.packed_nbytes(w.shape, cfg)
+
+
+def test_bundle_feeds_kernel():
+    """Unpacked bundle codes/scales drive the mx_matmul oracle."""
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((16, 64)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((64, 32)) * 0.2, jnp.float32)
+    bundle = packing.pack_weight(w)
+    codes = packing.unpack_codes(bundle["codes_packed"].T).T
+    scales = packing.unpack_scales_e8m0(bundle["scales_e8m0"])
+    y = ref.mx_matmul_ref(x, codes, scales)
+    cfg = mxlib.MXConfig(fmt="mxfp4")
+    expect = mxlib.quantize(x, cfg, ste=False) @ \
+        mxlib.quantize(w.T, cfg, ste=False).T
+    np.testing.assert_allclose(np.asarray(y), np.asarray(expect),
+                               atol=1e-4, rtol=1e-5)

@@ -1,0 +1,126 @@
+"""Training substrate: optimizer, trainer convergence, checkpoint/restart
+fault tolerance, deterministic data replay."""
+import math
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig
+from repro.data import synthetic
+from repro.training import checkpoint as ckpt
+from repro.training import optimizer as opt
+from repro.training.trainer import TrainConfig, Trainer
+
+
+def _tiny():
+    return ArchConfig(name="tiny", family="dense", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                      attn_chunk=64)
+
+
+def test_adamw_quadratic():
+    """AdamW minimizes a quadratic."""
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = opt.init_state(params)
+    cfg = opt.AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=1,
+                          total_steps=200, schedule="constant")
+    for _ in range(200):
+        g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        params, state, _ = opt.apply_updates(params, g, state, cfg)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 1e-2
+
+
+def test_trainer_learns_synthetic_structure(tmp_path):
+    cfg = _tiny()
+    tc = TrainConfig(steps=60, batch_size=8, seq_len=64, ckpt_every=1000,
+                     ckpt_dir=str(tmp_path / "ck"), log_every=1000,
+                     opt=opt.AdamWConfig(lr=3e-3, warmup_steps=5,
+                                         total_steps=60))
+    tr = Trainer(cfg, tc, log=lambda *_: None)
+    tr.init_or_resume()
+    b0 = tr.source.batch(0)
+    from repro.models import api
+    ppl0 = api.perplexity(tr.params, cfg, jnp.asarray(b0["inputs"]))
+    tr.train()
+    ppl1 = tr.eval_ppl()
+    # must beat the untrained model decisively (planted bigram structure)
+    assert ppl1 < 0.7 * ppl0, (ppl0, ppl1)
+
+
+def test_checkpoint_restart_exact_replay(tmp_path):
+    """Fault tolerance: crash mid-run, restart from checkpoint, end state
+    identical to an uninterrupted run (deterministic-by-step data)."""
+    cfg = _tiny()
+
+    def make(tcdir):
+        return TrainConfig(steps=20, batch_size=4, seq_len=32,
+                           ckpt_every=10, ckpt_dir=tcdir, log_every=1000,
+                           opt=opt.AdamWConfig(lr=1e-3, warmup_steps=2,
+                                               total_steps=20))
+
+    # uninterrupted
+    tr_a = Trainer(cfg, make(str(tmp_path / "a")), log=lambda *_: None)
+    tr_a.train()
+    # interrupted at step 13 (checkpoint exists at 10), then resumed
+    tr_b = Trainer(cfg, make(str(tmp_path / "b")), log=lambda *_: None)
+    with pytest.raises(RuntimeError):
+        tr_b.train(fail_at=13)
+    tr_b2 = Trainer(cfg, make(str(tmp_path / "b")), log=lambda *_: None)
+    tr_b2.train()
+    assert tr_b2.step == 20
+
+    la = jax.tree.leaves(tr_a.params)
+    lb = jax.tree.leaves(tr_b2.params)
+    for a, b in zip(la, lb):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_checkpoint_atomicity_and_retention(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "b": {"c": jnp.ones((4,))}}
+    for s in [1, 2, 3, 4]:
+        ckpt.save(tmp_path, s, tree, keep=2)
+    steps = sorted(p.name for p in pathlib.Path(tmp_path).iterdir())
+    assert steps == ["step_00000003", "step_00000004"]
+    restored, man = ckpt.restore(tmp_path, tree)
+    assert man["step"] == 4
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(tree["a"]))
+
+
+def test_data_determinism():
+    cfg = _tiny()
+    s1 = synthetic.make_source(cfg, 4, 32, seed=7)
+    s2 = synthetic.make_source(cfg, 4, 32, seed=7)
+    for i in [0, 3, 17]:
+        a, b = s1.batch(i), s2.batch(i)
+        np.testing.assert_array_equal(a["inputs"], b["inputs"])
+        np.testing.assert_array_equal(a["labels"], b["labels"])
+    # different steps differ
+    assert not np.array_equal(s1.batch(0)["inputs"], s1.batch(1)["inputs"])
+
+
+def test_grad_accum_equivalence():
+    """accum=4 must equal accum=1 up to numerics."""
+    from repro.launch import steps as steps_lib
+    cfg = _tiny()
+    key = jax.random.PRNGKey(0)
+    from repro.models import api
+    params = api.init(key, cfg)
+    state = opt.init_state(params)
+    src = synthetic.make_source(cfg, 8, 32, 0)
+    batch = {k: jnp.asarray(v) for k, v in src.batch(0).items()}
+    ocfg = opt.AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    s1 = steps_lib.make_train_step(cfg, ocfg, accum=1)
+    s4 = steps_lib.make_train_step(cfg, ocfg, accum=4)
+    p1, _, l1, _ = s1(params, state, batch)
+    p4, _, l4, _ = s4(params, state, batch)
+    assert abs(float(l1) - float(l4)) < 1e-4
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=2e-4, rtol=2e-3)

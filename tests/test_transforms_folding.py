@@ -1,0 +1,142 @@
+"""Transform parameterizations, volume regularizer, folding exactness,
+computational invariance — unit + hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import ArchConfig
+from repro.core import folding as fl
+from repro.core import mx as mxlib
+from repro.core import transforms as tfm
+from repro.core.quantize import QuantMode
+from repro.models import api, transformer as dense
+
+KINDS = ["lu", "qr", "orthogonal", "invertible", "hadamard",
+         "block_hadamard", "kron", "identity"]
+
+
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("granularity", ["full", "block"])
+def test_invertibility(kind, granularity):
+    if granularity == "block" and kind in ("hadamard", "kron", "identity",
+                                           "block_hadamard"):
+        pytest.skip("granularity applies to learned kinds")
+    spec = tfm.TransformSpec(kind=kind, d=64, block=32,
+                             granularity=granularity)
+    p = tfm.init_params(jax.random.PRNGKey(0), spec)
+    a, v = tfm.materialize(p, spec)
+    err = float(jnp.max(jnp.abs(a @ tfm.inverse(a) - jnp.eye(64))))
+    assert err < 1e-3
+    x = jax.random.normal(jax.random.PRNGKey(1), (5, 64))
+    rt = tfm.backward(tfm.forward(x, a, v), tfm.inverse(a), v)
+    np.testing.assert_allclose(np.asarray(rt), np.asarray(x), atol=1e-3)
+
+
+def test_volume_regularizer_zero_at_rotation_init():
+    spec = tfm.TransformSpec(kind="lu", d=64, block=32, init_noise=0.0)
+    p = tfm.init_params(jax.random.PRNGKey(2), spec)
+    assert float(tfm.loss_vol(p, spec)) < 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_property_lu_determinant_matches_logs(seed):
+    """|det A| == exp(Σ log|s|) for the LU parameterization."""
+    spec = tfm.TransformSpec(kind="lu", d=32, block=16)
+    p = tfm.init_params(jax.random.PRNGKey(seed), spec)
+    a, _ = tfm.materialize(p, spec)
+    logdet = float(jnp.linalg.slogdet(a)[1])
+    assert abs(logdet - float(jnp.sum(p["learn"]["logs"]))) < 1e-3
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_property_hadamard_preserves_norm(seed):
+    x = np.random.default_rng(seed).standard_normal((4, 64)).astype(np.float32)
+    h = tfm.random_hadamard(jax.random.PRNGKey(seed), 64)
+    y = jnp.asarray(x) @ h
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(y), axis=-1),
+                               np.linalg.norm(x, axis=-1), rtol=1e-4)
+
+
+def test_theorem_ordering_on_outlier_data():
+    """Numerical check of the Section 3.1 ordering: learned-affine-style
+    full transforms can beat block-Hadamard which beats identity on
+    outlier-heavy data (C1)."""
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (256, 128))
+    x = x.at[:, 3].mul(40.0).at[:, 77].mul(25.0)
+    cfg = mxlib.MXConfig(fmt="mxfp4")
+    errs = {}
+    for kind in ["identity", "hadamard", "block_hadamard"]:
+        spec = tfm.TransformSpec(kind=kind, d=128, block=32)
+        p = tfm.init_params(jax.random.PRNGKey(1), spec)
+        a, v = tfm.materialize(p, spec)
+        errs[kind] = float(tfm.transform_mse(x, a, v, cfg))
+    assert errs["block_hadamard"] < errs["identity"]
+    assert errs["hadamard"] < errs["identity"]
+
+
+def _tiny_cfg(**kw):
+    return ArchConfig(name="t", family="dense", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=97,
+                      attn_chunk=64, **kw)
+
+
+def test_identity_fold_is_exact():
+    cfg = _tiny_cfg(qkv_bias=True)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, 97)
+    ref = api.forward(params, cfg, toks)
+    pn = api.fold_norms(params, cfg)
+    ts = fl.identity_set(cfg.d_model, cfg.n_layers, cfg.head_dim,
+                         t3_block=32)
+    pf = api.fold(pn, cfg, ts)
+    out = api.forward(pf, cfg, toks, QuantMode.off(t3=32))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
+
+
+def test_rotation_fold_computational_invariance():
+    """Orthogonal T1/T2 with zero bias keep the FP model exactly
+    equivalent (Ashkboos et al. invariance; paper Section 3.2)."""
+    cfg = _tiny_cfg()
+    params = api.init(jax.random.PRNGKey(2), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(3), (2, 16), 0, 97)
+    ref = api.forward(params, cfg, toks)
+    pn = api.fold_norms(params, cfg)
+    s1 = tfm.TransformSpec(kind="orthogonal", d=cfg.d_model, block=32,
+                           learn_bias=False)
+    a1, _ = tfm.materialize(tfm.init_params(jax.random.PRNGKey(4), s1), s1)
+    s2 = tfm.TransformSpec(kind="orthogonal", d=cfg.head_dim, block=16,
+                           learn_bias=False)
+    a2, _ = tfm.materialize(tfm.init_params(jax.random.PRNGKey(5), s2), s2)
+    ts = fl.TransformSet(
+        a1=a1, v1=jnp.zeros(cfg.d_model),
+        a2=jnp.tile(a2[None], (cfg.n_layers, 1, 1)),
+        v2=jnp.zeros((cfg.n_layers, cfg.head_dim)), t3_block=32)
+    pf = api.fold(pn, cfg, ts)
+    out = api.forward(pf, cfg, toks, QuantMode.off(t3=32))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-4)
+
+
+@pytest.mark.parametrize("family,arch", [("moe", "moonshot_v1_16b_a3b"),
+                                         ("ssm", "mamba2_130m"),
+                                         ("hybrid", "recurrentgemma_2b")])
+def test_identity_fold_other_families(family, arch):
+    from repro import configs
+    cfg = configs.get_reduced(arch)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    from repro.data import synthetic
+    b = synthetic.make_source(cfg, 2, 16, 0).batch(0)
+    inp = jnp.asarray(b["inputs"])
+    ref = api.forward(params, cfg, inp)
+    pn = api.fold_norms(params, cfg)
+    n_t2 = cfg.n_super_blocks if family == "hybrid" else cfg.n_layers
+    hd = cfg.head_dim if cfg.n_heads else 16
+    ts = fl.identity_set(cfg.d_model, n_t2, hd, t3_block=32)
+    pf = api.fold(pn, cfg, ts)
+    out = api.forward(pf, cfg, inp, QuantMode.off(t3=32))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=5e-4, rtol=1e-3)
