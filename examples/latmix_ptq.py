@@ -8,6 +8,10 @@ model). Compares RTN / GPTQ / QuaRot / block-Hadamard / SpinQuant-like /
 LATMiX-LU / LATMiX-QR under MXFP4.
 
     PYTHONPATH=src python examples/latmix_ptq.py [--fmt mxint4] [--steps 80]
+
+With --export DIR, each quantized method's result is additionally written
+as a packed artifact under DIR/<method> — the deployable checkpoint that
+examples/serve.py --artifact serves with zero re-quantization.
 """
 import argparse
 import sys
@@ -25,6 +29,9 @@ def main():
     ap.add_argument("--steps", type=int, default=80)
     ap.add_argument("--methods", default="rtn,gptq,quarot,block_hadamard,"
                                          "spinquant,latmix-lu,latmix-qr")
+    ap.add_argument("--export", default="",
+                    help="export each method's packed artifact under "
+                         "<dir>/<method>")
     args = ap.parse_args()
 
     from benchmarks import common
@@ -40,6 +47,10 @@ def main():
                                steps=args.steps)
         ppl = ptq.eval_ppl(res, cfg, ev)
         print(f"{m:16s} {ppl:9.3f} {100*fp/ppl:7.1f}%")
+        if args.export:
+            import pathlib
+            out = res.export(cfg, pathlib.Path(args.export) / m)
+            print(f"{'':16s}   exported -> {out}")
         if res.tset is not None and m.startswith("latmix"):
             from repro.core import transforms as tfm
             dev = float(tfm.orthogonality_deviation(res.tset.a1))

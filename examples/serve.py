@@ -3,6 +3,11 @@ targets — LATMiX-folded weights, online T3 block-Hadamard, MX fake-quant
 matmuls, batched KV-cache decode.
 
     PYTHONPATH=src python examples/serve.py [--quant mxfp4|off] [--batch 4]
+
+Pass --artifact DIR to skip PTQ entirely and serve a packed artifact
+exported earlier (examples/latmix_ptq.py --export or
+`python -m repro.artifacts export`): weights load 4-bit packed and are
+dequantized lazily per layer inside the compiled step.
 """
 import argparse
 
@@ -24,7 +29,20 @@ def main():
     ap.add_argument("--new", type=int, default=24)
     ap.add_argument("--latmix", action="store_true",
                     help="learn+fold LATMiX transforms before serving")
+    ap.add_argument("--artifact", default="",
+                    help="serve a packed artifact directory (skips PTQ)")
+    ap.add_argument("--eager", action="store_true",
+                    help="with --artifact: dequantize all weights at load")
     args = ap.parse_args()
+
+    if args.artifact:
+        eng = Engine.from_artifact(args.artifact, batch_size=args.batch,
+                                   max_len=128, eager=args.eager)
+        cfg = eng.cfg
+        print(f"serving artifact {args.artifact} "
+              f"({'eager' if args.eager else 'packed-lazy'} weights)")
+        _run(eng, cfg, args)
+        return
 
     cfg = ArchConfig(name="serve-demo", family="dense", n_layers=3,
                      d_model=128, n_heads=8, n_kv_heads=4, head_dim=16,
@@ -48,6 +66,10 @@ def main():
               else QuantMode.mxint4(t3=False))
 
     eng = Engine(params, cfg, qm, batch_size=args.batch, max_len=128)
+    _run(eng, cfg, args)
+
+
+def _run(eng, cfg, args):
     rng = np.random.default_rng(0)
     reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, 16)
                     .astype(np.int32), max_new=args.new)
@@ -59,8 +81,9 @@ def main():
               f"({len(r.out)} tokens in {r.t_done-r.t_submit:.2f}s)")
     stats = eng.throughput(n_requests=args.batch, prompt_len=16,
                            max_new=args.new)
-    print(f"\nthroughput: {stats['tok_per_s']:.1f} tok/s "
-          f"({args.quant}{' + LATMiX' if args.latmix else ''})")
+    src = (f"artifact {args.artifact}" if args.artifact
+           else f"{args.quant}{' + LATMiX' if args.latmix else ''}")
+    print(f"\nthroughput: {stats['tok_per_s']:.1f} tok/s ({src})")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,55 @@
+"""Summarize exported MX artifacts: packed footprint vs the fp16/fp32
+equivalent, per artifact directory (the deployment-side view of the
+roofline's 3.76x weight-traffic reduction).
+
+    PYTHONPATH=src python scripts/artifact_report.py artifacts/ [more dirs]
+
+Each argument may be an artifact directory (contains manifest.json) or a
+parent directory scanned one level deep.
+"""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
+
+import jax  # noqa: E402,F401  (registers bfloat16 et al. with np.dtype)
+import numpy as np  # noqa: E402
+
+from repro.artifacts.manifest import MANIFEST_FILE, ArtifactError, Manifest  # noqa: E402
+
+
+def _find(paths):
+    for p in map(pathlib.Path, paths):
+        if (p / MANIFEST_FILE).exists():
+            yield p
+        elif p.is_dir():
+            for c in sorted(p.iterdir()):
+                if (c / MANIFEST_FILE).exists():
+                    yield c
+
+
+def main(argv):
+    roots = list(_find(argv or ["artifacts"]))
+    if not roots:
+        print("no artifact directories found", file=sys.stderr)
+        return 1
+    print(f"{'artifact':40s} {'method':14s} {'fmt':7s} "
+          f"{'packed MiB':>10s} {'fp MiB':>8s} {'ratio':>6s}")
+    for root in roots:
+        try:
+            man = Manifest.load(root / MANIFEST_FILE)
+        except ArtifactError as e:
+            print(f"{str(root):40s} SKIP ({e})")
+            continue
+        packed = man.packed_total_nbytes
+        # fp equivalent of the quantized tensors, at their logical dtype
+        fp = sum(int(np.prod(t.shape)) * np.dtype(t.dtype).itemsize
+                 for t in man.tensors if t.kind == "packed")
+        print(f"{str(root):40s} {man.method:14s} {man.fmt:7s} "
+              f"{packed/2**20:10.2f} {fp/2**20:8.2f} "
+              f"{fp/max(packed,1):5.2f}x")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -1,0 +1,15 @@
+"""MX artifact store — the deployable layer between PTQ and serving.
+
+Calibrate once, fold the learned transforms, quantize to MX, then
+``export_artifact`` the result; every serving run thereafter loads the
+packed bytes directly (``load_artifact`` / ``Engine.from_artifact``)
+with zero re-quantization and bit-identical logits.
+"""
+from .manifest import (ArtifactError, IntegrityError, Manifest,
+                       TensorRecord, array_sha256)
+from .store import (export_artifact, load_artifact, quant_mode_from_json,
+                    quant_mode_to_json, verify_artifact)
+
+__all__ = ["ArtifactError", "IntegrityError", "Manifest", "TensorRecord",
+           "array_sha256", "export_artifact", "load_artifact",
+           "quant_mode_from_json", "quant_mode_to_json", "verify_artifact"]

@@ -1,0 +1,299 @@
+"""Export / load of MX-quantized artifacts.
+
+Export takes an in-memory :class:`~repro.core.ptq.PTQResult` (weights
+already on the MX grid — GPTQ/RTN output) and writes the deployable
+layout: 4-bit packed codes + E8M0 scale bytes per quantized weight, fp
+for everything else, plus a manifest with content hashes. Packing an
+on-grid weight is bitwise lossless (checked at export), so a load does
+**zero re-quantization** and serving an artifact reproduces the
+in-memory result's logits exactly.
+
+Load returns a servable ``(params, cfg, qm)`` triple. By default the
+quantized weights come back as :class:`~repro.kernels.packing.PackedWeight`
+leaves — packed uint8 stays in HBM and the dense weight is reconstructed
+lazily inside the compiled step (per layer under ``lax.scan``).
+``eager=True`` dequantizes everything at load instead.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import pathlib
+import shutil
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import mx as mxlib
+from repro.core.gptq import WEIGHT_KEYS
+from repro.core.quantize import QuantMode
+from repro.kernels import packing
+
+from .manifest import (AUX_FILE, MANIFEST_FILE, WEIGHTS_FILE, ArtifactError,
+                       IntegrityError, Manifest, TensorRecord, array_sha256)
+
+
+# ---------------------------------------------------------------------------
+# Tree <-> flat-key helpers (params trees are nested dicts)
+# ---------------------------------------------------------------------------
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(p.key) if hasattr(p, "key") else str(p)
+                       for p in path)
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def _nest(flat: dict) -> dict:
+    tree: dict = {}
+    for key, value in flat.items():
+        parts = key.split("/")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = value
+    return tree
+
+
+def _is_quantized_key(key: str, leaf: np.ndarray) -> bool:
+    """Mirror of gptq.quantize_weights_rtn's traversal: a leaf is a
+    quantized linear weight iff its name is a known weight key and it is
+    at least 2-D (contraction axis = -2)."""
+    return key.split("/")[-1] in WEIGHT_KEYS and leaf.ndim >= 2
+
+
+# ---------------------------------------------------------------------------
+# QuantMode (de)serialization
+# ---------------------------------------------------------------------------
+
+def _mxcfg_to_json(c):
+    if c is None:
+        return None
+    return {"fmt": c.fmt, "block_size": c.block_size,
+            "scale_mode": c.scale_mode, "stochastic": c.stochastic}
+
+
+def _mxcfg_from_json(d):
+    return None if d is None else mxlib.MXConfig(**d)
+
+
+def quant_mode_to_json(qm: QuantMode) -> dict:
+    return {"enabled": qm.enabled,
+            "act_cfg": _mxcfg_to_json(qm.act_cfg),
+            "weight_cfg": _mxcfg_to_json(qm.weight_cfg),
+            "t3_block": qm.t3_block,
+            "quantize_head": qm.quantize_head}
+
+
+def quant_mode_from_json(d: dict) -> QuantMode:
+    return QuantMode(enabled=d["enabled"],
+                     act_cfg=_mxcfg_from_json(d["act_cfg"]),
+                     weight_cfg=_mxcfg_from_json(d["weight_cfg"]),
+                     t3_block=d["t3_block"],
+                     quantize_head=d["quantize_head"])
+
+
+# ---------------------------------------------------------------------------
+# Export
+# ---------------------------------------------------------------------------
+
+def export_artifact(result, cfg: ArchConfig, out_dir, *,
+                    extra: dict | None = None) -> pathlib.Path:
+    """Write ``result`` (a PTQResult) as an artifact directory.
+
+    Raises ArtifactError if the result is unquantized ('fp' teacher), the
+    format is not 4-bit packable, or any supposedly-quantized weight is
+    not bitwise-exactly representable in the packed layout (which would
+    mean serving the artifact diverges from serving the PTQResult).
+    """
+    qm = result.qm
+    if not qm.enabled:
+        raise ArtifactError(
+            "PTQResult is unquantized (method 'fp'); the artifact store "
+            "only ships quantized deployments — run a PTQ method first")
+    wcfg = qm.weight_cfg or qm.act_cfg
+    if wcfg is None:
+        raise ArtifactError("QuantMode carries no MXConfig to pack with")
+    packing._check_packable(wcfg.fmt, wcfg.block_size, wcfg.scale_mode)
+    fmt = wcfg.fmt
+
+    flat = _flatten(result.params)
+    weights_npz: Dict[str, np.ndarray] = {}
+    aux_npz: Dict[str, np.ndarray] = {}
+    records = []
+    for key in sorted(flat):
+        leaf = flat[key]
+        if _is_quantized_key(key, leaf):
+            bundle = packing.pack_weight(jnp.asarray(leaf), fmt)
+            rt = np.asarray(packing.unpack_weight(bundle, leaf.dtype))
+            if not np.array_equal(rt, leaf):
+                raise ArtifactError(
+                    f"weight {key!r} is not on the {fmt} grid — packing "
+                    f"would silently re-quantize it; export only accepts "
+                    f"quantized PTQ results")
+            codes = np.asarray(bundle["codes_packed"])
+            scales = np.asarray(bundle["scales_e8m0"])
+            nb = packing.packed_bundle_nbytes(bundle)
+            acct = mxlib.packed_nbytes(
+                leaf.shape, mxlib.MXConfig(fmt=fmt, block_size=32))
+            if nb != acct:
+                raise ArtifactError(
+                    f"{key}: packed bytes {nb} != roofline accounting {acct}")
+            weights_npz[f"{key}.codes"] = codes
+            weights_npz[f"{key}.scales"] = scales
+            records.append(TensorRecord(
+                key=key, kind="packed", shape=list(leaf.shape),
+                dtype=str(leaf.dtype), fmt=fmt, packed_nbytes=nb,
+                sha256_codes=array_sha256(codes),
+                sha256_scales=array_sha256(scales)))
+        else:
+            # npz cannot round-trip ml_dtypes (bfloat16 lands as void and
+            # poisons the artifact): store the raw bytes, keep the logical
+            # dtype in the record, and hash the *logical* array.
+            store = leaf.view(np.uint8) if leaf.dtype.kind == "V" else leaf
+            aux_npz[key] = store
+            records.append(TensorRecord(
+                key=key, kind="raw", shape=list(leaf.shape),
+                dtype=str(leaf.dtype), nbytes=int(leaf.nbytes),
+                sha256=array_sha256(leaf)))
+    if not weights_npz:
+        raise ArtifactError("no quantized weights found in PTQResult params")
+
+    man = Manifest(method=result.method, fmt=fmt,
+                   arch=dataclasses.asdict(cfg),
+                   quant_mode=quant_mode_to_json(qm),
+                   tensors=records, extra=extra)
+
+    out = pathlib.Path(out_dir)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    tmp = out.parent / f".tmp_artifact_{out.name}_{os.getpid()}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+    np.savez(tmp / WEIGHTS_FILE, **weights_npz)
+    np.savez(tmp / AUX_FILE, **aux_npz)
+    man.save(tmp / MANIFEST_FILE)
+    if out.exists():
+        shutil.rmtree(out)
+    os.replace(tmp, out)              # atomic on POSIX
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Load / verify
+# ---------------------------------------------------------------------------
+
+def _load_npz(path: pathlib.Path) -> dict:
+    try:
+        with np.load(path) as z:
+            return {k: z[k] for k in z.files}
+    except FileNotFoundError:
+        raise ArtifactError(f"missing {path.name} in artifact directory")
+    except Exception as e:  # BadZipFile / truncated / bit-flipped stores
+        raise IntegrityError(f"corrupt {path.name}: {e}")
+
+
+def _decode_raw(t: TensorRecord, arr: np.ndarray) -> np.ndarray:
+    """Undo the uint8 byte-encoding of ml_dtypes leaves (importing jax
+    registers their names with numpy, so np.dtype(t.dtype) resolves)."""
+    want = np.dtype(t.dtype)
+    if arr.dtype == np.uint8 and want.kind == "V":
+        return arr.view(want).reshape(t.shape)
+    return arr
+
+
+def _read_arrays(root: pathlib.Path, man: Manifest,
+                 verify: bool) -> Tuple[dict, dict]:
+    weights = _load_npz(root / WEIGHTS_FILE)
+    aux = _load_npz(root / AUX_FILE)
+    expect_w, expect_a = set(), set()
+    for t in man.tensors:
+        if t.kind == "packed":
+            expect_w.update((f"{t.key}.codes", f"{t.key}.scales"))
+        else:
+            expect_a.add(t.key)
+    if set(weights) != expect_w or set(aux) != expect_a:
+        raise IntegrityError(
+            f"stored arrays do not match manifest: weights "
+            f"{sorted(set(weights) ^ expect_w)}, aux "
+            f"{sorted(set(aux) ^ expect_a)} differ")
+    for t in man.tensors:
+        if t.kind != "packed":
+            aux[t.key] = _decode_raw(t, aux[t.key])
+    if verify:
+        for t in man.tensors:
+            if t.kind == "packed":
+                if (array_sha256(weights[f"{t.key}.codes"]) != t.sha256_codes
+                        or array_sha256(weights[f"{t.key}.scales"])
+                        != t.sha256_scales):
+                    raise IntegrityError(
+                        f"content hash mismatch for packed tensor {t.key!r}")
+            else:
+                if array_sha256(aux[t.key]) != t.sha256:
+                    raise IntegrityError(
+                        f"content hash mismatch for tensor {t.key!r}")
+    return weights, aux
+
+
+def load_artifact(path, *, eager: bool = False, verify: bool = True
+                  ) -> Tuple[dict, ArchConfig, QuantMode]:
+    """Load an artifact into a servable ``(params, cfg, qm)`` triple.
+
+    eager=False (default): quantized weights are PackedWeight leaves —
+    packed bytes in HBM, dequantized lazily at each use site.
+    eager=True: dense fp weights are materialized once at load.
+    verify=True: recompute content hashes before trusting the bytes.
+    """
+    root = pathlib.Path(path)
+    man = Manifest.load(root / MANIFEST_FILE)
+    weights, aux = _read_arrays(root, man, verify)
+
+    cfg = ArchConfig(**man.arch)
+    qm = quant_mode_from_json(man.quant_mode)
+
+    flat = {}
+    for t in man.tensors:
+        if t.kind == "packed":
+            pw = packing.PackedWeight(
+                jnp.asarray(weights[f"{t.key}.codes"]),
+                jnp.asarray(weights[f"{t.key}.scales"]),
+                t.fmt, t.dtype)
+            if list(pw.shape) != list(t.shape):
+                raise IntegrityError(
+                    f"{t.key}: packed arrays imply shape {pw.shape}, "
+                    f"manifest says {t.shape}")
+            flat[t.key] = pw.to_dense() if eager else pw
+        else:
+            flat[t.key] = jnp.asarray(aux[t.key], dtype=jnp.dtype(t.dtype))
+    return _nest(flat), cfg, qm
+
+
+def verify_artifact(path) -> dict:
+    """Full integrity + accounting check. Raises on any mismatch; returns
+    a summary dict (used by the CLI)."""
+    root = pathlib.Path(path)
+    man = Manifest.load(root / MANIFEST_FILE)
+    weights, _ = _read_arrays(root, man, verify=True)
+    stored_packed = sum(int(a.nbytes) for a in weights.values())
+    if stored_packed != man.packed_total_nbytes:
+        raise IntegrityError(
+            f"stored packed bytes {stored_packed} != manifest total "
+            f"{man.packed_total_nbytes}")
+    for t in man.tensors:
+        if t.kind != "packed":
+            continue
+        acct = mxlib.packed_nbytes(
+            t.shape, mxlib.MXConfig(fmt=t.fmt, block_size=32))
+        if t.packed_nbytes != acct:
+            raise IntegrityError(
+                f"{t.key}: manifest packed_nbytes {t.packed_nbytes} != "
+                f"roofline accounting {acct}")
+    return {"ok": True, "method": man.method, "fmt": man.fmt,
+            "n_tensors": len(man.tensors),
+            "packed_nbytes": man.packed_total_nbytes,
+            "raw_nbytes": man.raw_total_nbytes}

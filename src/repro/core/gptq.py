@@ -181,9 +181,10 @@ def quantize_weights_gptq(params, cfg: ArchConfig, stats: HessianStats,
 # RTN for any family (generic tree traversal)
 # ---------------------------------------------------------------------------
 
-_WEIGHT_KEYS = {"wq", "wk", "wv", "wo", "wg", "wu", "wd", "router",
-                "eg", "eu", "ed", "sg", "su", "sd", "in_proj", "out_proj",
-                "wx", "wy", "wor"}
+WEIGHT_KEYS = {"wq", "wk", "wv", "wo", "wg", "wu", "wd", "router",
+               "eg", "eu", "ed", "sg", "su", "sd", "in_proj", "out_proj",
+               "wx", "wy", "wor"}
+_WEIGHT_KEYS = WEIGHT_KEYS  # back-compat alias
 
 
 def quantize_weights_rtn(params, cfg: ArchConfig, mxcfg: mxlib.MXConfig):

@@ -49,6 +49,12 @@ class PTQResult:
     history: list
     method: str
 
+    def export(self, cfg: ArchConfig, out_dir, **kw):
+        """Persist as a deployable packed artifact directory (see
+        repro.artifacts): calibrate once, export, serve many times."""
+        from repro.artifacts import export_artifact  # deferred: no cycle
+        return export_artifact(self, cfg, out_dir, **kw)
+
 
 def _mx_cfg(fmt: str) -> mxlib.MXConfig:
     if fmt == "nvfp4":

@@ -16,6 +16,8 @@ from typing import Optional
 
 import jax.numpy as jnp
 
+from repro.kernels.packing import maybe_dense
+
 from . import mx as mxlib
 from . import transforms as tfm
 
@@ -91,7 +93,12 @@ def qlinear(x: jnp.ndarray, w: jnp.ndarray, b: Optional[jnp.ndarray],
 
     role='ffn_down' additionally applies the online T3 block-Hadamard to the
     activation *before* quantization (its inverse is folded into w offline,
-    see core.folding.fold_t3)."""
+    see core.folding.fold_t3).
+
+    ``w`` may be a :class:`repro.kernels.packing.PackedWeight` (artifact
+    serving): it is dequantized here, inside the compiled step, so HBM
+    holds only the 4-bit layout."""
+    w = maybe_dense(w)
     if qm.t3_block and role == "ffn_down":
         h = tfm.hadamard_matrix(qm.t3_block, dtype=x.dtype)
         x = tfm.apply_blockwise(x, h)
@@ -109,7 +116,9 @@ def qeinsum(spec: str, x: jnp.ndarray, w: jnp.ndarray,
     """Quantized einsum for expert-batched weights, e.g. 'ecd,edf->ecf'.
 
     Activation is quantized along its last axis; the weight along the
-    einsum contraction axis (assumed to be its second-to-last axis)."""
+    einsum contraction axis (assumed to be its second-to-last axis).
+    ``w`` may be a PackedWeight (see :func:`qlinear`)."""
+    w = maybe_dense(w)
     if qm.t3_block and role == "ffn_down":
         h = tfm.hadamard_matrix(qm.t3_block, dtype=x.dtype)
         x = tfm.apply_blockwise(x, h)

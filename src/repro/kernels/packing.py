@@ -5,19 +5,48 @@ stores two 4-bit codes per byte plus one E8M0 (biased power-of-two
 exponent) scale byte per 32-block. These utilities convert between the
 layouts and are the source of the roofline packed-byte accounting
 (`mx.packed_nbytes`).
+
+``pack_weight``/``unpack_weight`` operate on the *contraction* axis
+(axis -2, matching the qlinear weight orientation) and accept arbitrary
+leading batch dims, so layer-stacked ``(L, K, N)`` and expert-batched
+``(L, E, K, N)`` weights pack in one call. ``PackedWeight`` wraps the
+packed arrays as a pytree so packed weights can live inside a params
+tree: jit carries only the uint8 codes + scales in HBM and the dense
+fp weight is reconstructed on the fly at each use site (layer-sliced
+under ``lax.scan``, i.e. one layer dequantized at a time).
 """
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import mx as mxlib
 
+# Formats that fit two codes per byte. The full symmetric code range of a
+# 4-bit element grid is 2*8-1 = 15 values (codes 0..14 < 16).
+PACKABLE_FMTS = ("mxfp4", "mxint4")
+
+
+def _check_packable(fmt: str, block_size: int = 32, scale_mode: str = "pow2"):
+    if fmt not in PACKABLE_FMTS:
+        raise ValueError(
+            f"fmt {fmt!r} is not 4-bit packable (supported: {PACKABLE_FMTS})")
+    if scale_mode != "pow2":
+        raise ValueError(
+            f"E8M0 scale bytes require pow2 scales, got {scale_mode!r}")
+    if block_size != 32:
+        raise ValueError(f"packed layout is fixed at 32-blocks, "
+                         f"got block_size={block_size}")
+
 
 def pack_codes(codes: jnp.ndarray) -> jnp.ndarray:
     """uint8 codes in [0, 15] -> packed uint8, two per byte (even index in
     the low nibble). Last axis must be even."""
     *lead, d = codes.shape
+    if d % 2 != 0:
+        raise ValueError(f"packing axis must be even, got {d}")
     c = codes.reshape(*lead, d // 2, 2).astype(jnp.uint8)
     return (c[..., 0] | (c[..., 1] << 4)).astype(jnp.uint8)
 
@@ -41,24 +70,99 @@ def unpack_scales_e8m0(b: jnp.ndarray) -> jnp.ndarray:
 
 
 def pack_weight(w: jnp.ndarray, fmt: str = "mxfp4"):
-    """(K, N) float weight -> deployable bundle:
-    {codes_packed (K//2, N) uint8, scales_e8m0 (K//32, N) uint8}."""
+    """(*lead, K, N) float weight -> deployable bundle:
+    {codes_packed (*lead, K//2, N) uint8,
+     scales_e8m0 (*lead, K//32, N) uint8}.
+
+    Blocked/packed along the contraction axis K (axis -2). Exact for any
+    weight already on the MX grid (pack∘unpack is the identity there);
+    otherwise it quantizes (RTN) as a side effect.
+    """
+    _check_packable(fmt)
     cfg = mxlib.MXConfig(fmt=fmt, block_size=32)
-    codes_t, scales_t = mxlib.encode(w.T, cfg)     # blocked along K
-    codes, scales = codes_t.T, scales_t.T          # (K, N), (K//32, N)
-    packed = pack_codes(codes.T).T                 # pack along K
-    return {"codes_packed": packed,
-            "scales_e8m0": pack_scales_e8m0(scales),
-            "fmt": fmt, "shape": w.shape}
+    wt = jnp.swapaxes(w, -1, -2)                 # (*lead, N, K)
+    if wt.shape[-1] % cfg.block_size != 0:
+        raise ValueError(f"contraction dim {wt.shape[-1]} not divisible by "
+                         f"block size {cfg.block_size}")
+    codes_t, scales_t = mxlib.encode(wt, cfg)    # blocked along K
+    packed_t = pack_codes(codes_t)               # (*lead, N, K//2)
+    return {"codes_packed": jnp.swapaxes(packed_t, -1, -2),
+            "scales_e8m0": jnp.swapaxes(pack_scales_e8m0(scales_t), -1, -2),
+            "fmt": fmt, "shape": tuple(w.shape)}
 
 
 def unpack_weight(bundle, dtype=jnp.float32) -> jnp.ndarray:
     cfg = mxlib.MXConfig(fmt=bundle["fmt"], block_size=32)
-    codes = unpack_codes(bundle["codes_packed"].T).T
-    scales = unpack_scales_e8m0(bundle["scales_e8m0"])
-    return mxlib.decode(codes.T, scales.T, cfg, dtype).T
+    codes_t = unpack_codes(jnp.swapaxes(bundle["codes_packed"], -1, -2))
+    scales_t = jnp.swapaxes(bundle["scales_e8m0"], -1, -2)
+    out_t = mxlib.decode(codes_t, unpack_scales_e8m0(scales_t), cfg, dtype)
+    return jnp.swapaxes(out_t, -1, -2)
 
 
 def packed_bundle_nbytes(bundle) -> int:
-    return (bundle["codes_packed"].size
-            + bundle["scales_e8m0"].size)
+    codes = bundle["codes_packed"]
+    scales = bundle["scales_e8m0"]
+    return int(codes.size) + int(scales.size)
+
+
+# ---------------------------------------------------------------------------
+# PackedWeight: packed bundle as a pytree leaf-group inside a params tree
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PackedWeight:
+    """An MX-packed linear weight usable in place of a dense array.
+
+    The codes/scales are pytree children (they flow through jit/scan and
+    are layer-sliced like any stacked leaf); fmt and target dtype are
+    static aux data. ``qlinear``/``qeinsum`` call :func:`maybe_dense` so
+    a params tree holding PackedWeight leaves serves directly: HBM keeps
+    the 4-bit layout and the fp weight exists only transiently inside
+    the compiled step.
+    """
+
+    codes_packed: jnp.ndarray   # (*lead, K//2, N) uint8
+    scales_e8m0: jnp.ndarray    # (*lead, K//32, N) uint8
+    fmt: str = "mxfp4"
+    dtype: str = "float32"
+
+    def tree_flatten(self):
+        return (self.codes_packed, self.scales_e8m0), (self.fmt, self.dtype)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], *aux)
+
+    @property
+    def shape(self):
+        """Logical dense shape (*lead, K, N)."""
+        *lead, k2, n = self.codes_packed.shape
+        return tuple(lead) + (k2 * 2, n)
+
+    @property
+    def ndim(self) -> int:
+        return self.codes_packed.ndim
+
+    @property
+    def nbytes_packed(self) -> int:
+        return int(self.codes_packed.size) + int(self.scales_e8m0.size)
+
+    def to_dense(self, dtype=None) -> jnp.ndarray:
+        return unpack_weight(
+            {"codes_packed": self.codes_packed,
+             "scales_e8m0": self.scales_e8m0, "fmt": self.fmt},
+            dtype if dtype is not None else jnp.dtype(self.dtype))
+
+    @classmethod
+    def from_dense(cls, w: jnp.ndarray, fmt: str = "mxfp4") -> "PackedWeight":
+        b = pack_weight(w, fmt)
+        return cls(b["codes_packed"], b["scales_e8m0"], fmt,
+                   str(jnp.asarray(w).dtype))
+
+
+def maybe_dense(w):
+    """Resolve a PackedWeight to its dense fp array; pass others through."""
+    if isinstance(w, PackedWeight):
+        return w.to_dense()
+    return w

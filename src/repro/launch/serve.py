@@ -3,6 +3,10 @@ batched requests with the MX-quantized engine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
         --reduced --method latmix-lu --fmt mxfp4 --requests 8
+
+Artifact workflow (calibrate once, serve many times): add --export DIR
+to persist the packed quantized checkpoint after PTQ, and start future
+runs with --artifact DIR to skip calibration/quantization entirely.
 """
 from __future__ import annotations
 
@@ -23,6 +27,12 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--artifact", default="",
+                    help="serve a packed artifact directory (skips PTQ)")
+    ap.add_argument("--export", default="",
+                    help="export the PTQ result as a packed artifact")
+    ap.add_argument("--eager", action="store_true",
+                    help="with --artifact: dequantize weights at load")
     args = ap.parse_args()
 
     import jax
@@ -34,6 +44,21 @@ def main():
     from repro.models import api
     from repro.serving.engine import Engine
     from repro.training import checkpoint as ckpt
+
+    if args.artifact:
+        t0 = time.time()
+        eng = Engine.from_artifact(
+            args.artifact, batch_size=args.batch,
+            max_len=args.prompt_len + args.max_new + 16, eager=args.eager)
+        print(f"loaded artifact {args.artifact} in {time.time()-t0:.1f}s "
+              f"({'eager' if args.eager else 'packed-lazy'} weights, "
+              f"no re-quantization)")
+        stats = eng.throughput(n_requests=args.requests,
+                               prompt_len=args.prompt_len,
+                               max_new=args.max_new)
+        print(f"served {stats['tokens']} tokens in {stats['seconds']:.2f}s "
+              f"-> {stats['tok_per_s']:.1f} tok/s")
+        return
 
     cfg = (configs.get_reduced(args.arch) if args.reduced
            else configs.get(args.arch))
@@ -55,6 +80,9 @@ def main():
     res = ptq.apply_method(args.method, params, cfg, calib, fmt=args.fmt,
                            steps=args.steps)
     print(f"PTQ [{args.method} / {args.fmt}] in {time.time()-t0:.0f}s")
+    if args.export:
+        out = res.export(cfg, args.export)
+        print(f"exported artifact -> {out}")
 
     eng = Engine(res.params, cfg, res.qm, batch_size=args.batch,
                  max_len=args.prompt_len + args.max_new + 16)

@@ -315,6 +315,19 @@ def shard_batch(x, *rest):
     return pctx.shard(x, "batch", *rest)
 
 
+@jax.custom_jvp
+def _grad_transparent_barrier(xs):
+    return jax.lax.optimization_barrier(xs)
+
+
+@_grad_transparent_barrier.defjvp
+def _barrier_jvp(primals, tangents):
+    # identity semantics: the barrier only pins XLA scheduling, so the
+    # tangent passes straight through (optimization_barrier itself has no
+    # differentiation rule, which would break transform learning on CPU)
+    return _grad_transparent_barrier(primals[0]), tangents[0]
+
+
 def scan_layers(body, carry, xs, use_scan: bool = True):
     """lax.scan or an unrolled python loop (identical semantics).
 
@@ -331,7 +344,7 @@ def scan_layers(body, carry, xs, use_scan: bool = True):
     if use_scan:
         if jax.default_backend() == "cpu":
             def body_b(c, x):
-                return body(c, jax.lax.optimization_barrier(x))
+                return body(c, _grad_transparent_barrier(x))
             return jax.lax.scan(body_b, carry, xs)
         return jax.lax.scan(body, carry, xs)
     L = jax.tree.leaves(xs)[0].shape[0]

@@ -35,6 +35,11 @@ class Request:
 
 
 class Engine:
+    """``params`` may hold dense arrays or packed-HBM ``PackedWeight``
+    leaves (artifact serving, see :meth:`from_artifact`): the quantized
+    execution path dequantizes packed weights lazily inside the compiled
+    prefill/decode steps."""
+
     def __init__(self, params, cfg: ArchConfig, qm: QuantMode,
                  batch_size: int = 4, max_len: int = 256):
         if cfg.family == "encoder":
@@ -54,6 +59,19 @@ class Engine:
         self._prefill = jax.jit(prefill)
         self._decode = jax.jit(decode)
 
+    @classmethod
+    def from_artifact(cls, path, batch_size: int = 4, max_len: int = 256,
+                      eager: bool = False, verify: bool = True) -> "Engine":
+        """Serve directly from an exported artifact directory: no
+        calibration, no re-quantization — load packed bytes and go.
+
+        eager=False keeps quantized weights 4-bit packed in HBM
+        (dequantized per layer inside the compiled step); eager=True
+        materializes dense fp weights once at load."""
+        from repro.artifacts import load_artifact
+        params, cfg, qm = load_artifact(path, eager=eager, verify=verify)
+        return cls(params, cfg, qm, batch_size=batch_size, max_len=max_len)
+
     def generate(self, requests: List[Request]) -> List[Request]:
         """Serve a list of requests with static batching per wave (prompts
         padded to a common length)."""
@@ -72,21 +90,21 @@ class Engine:
 
         last_logits, cache = self._prefill(self.params, jnp.asarray(toks))
         nxt = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
-        outs = [[] for _ in range(B)]
+        # accumulate sampled tokens on device; one host transfer at the end
+        # (a per-step np.asarray would sync the dispatch pipeline every
+        # decode step)
+        toks_dev = [nxt]
         max_new = max(r.max_new for r in reqs)
         pos = S
-        for step in range(max_new):
-            host = np.asarray(nxt)
-            for i in range(B):
-                outs[i].append(int(host[i]))
-            if step == max_new - 1:
-                break
+        for _ in range(max_new - 1):
             nxt, cache = self._decode(self.params, cache, nxt,
                                       jnp.int32(pos))
+            toks_dev.append(nxt)
             pos += 1
+        host = np.asarray(jnp.stack(toks_dev, axis=1))  # (B, max_new)
         t1 = time.time()
         for i, r in enumerate(reqs):
-            r.out = np.asarray(outs[i][:r.max_new], np.int32)
+            r.out = host[i, :r.max_new].astype(np.int32)
             r.t_submit, r.t_done = t0, t1
         return reqs
 
@@ -101,4 +119,5 @@ class Engine:
         done = self.generate(reqs)
         dt = time.time() - t0
         toks = sum(len(r.out) for r in done)
-        return {"tokens": toks, "seconds": dt, "tok_per_s": toks / dt}
+        rate = toks / dt if dt > 0 else float("inf")  # clock can tick 0
+        return {"tokens": toks, "seconds": dt, "tok_per_s": rate}

@@ -1,0 +1,34 @@
+"""Shared test helpers: property-test decorators that use hypothesis when
+installed (dev extra) and degrade to fixed-seed parametrization on clean
+machines, so tier-1 runs everywhere with the same test set."""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+_FALLBACK_SEEDS = (0, 1, 7, 12345)
+
+
+def seed_property(max_examples=20):
+    """@given(seed=...) or parametrize over fixed seeds."""
+    def deco(f):
+        if HAVE_HYPOTHESIS:
+            return settings(max_examples=max_examples, deadline=None)(
+                given(seed=st.integers(0, 2 ** 16))(f))
+        return pytest.mark.parametrize("seed", list(_FALLBACK_SEEDS))(f)
+    return deco
+
+
+def scale_seed_property(max_examples=30):
+    """@given(scale=..., seed=...) or fixed (scale, seed) pairs."""
+    def deco(f):
+        if HAVE_HYPOTHESIS:
+            return settings(max_examples=max_examples, deadline=None)(
+                given(scale=st.floats(min_value=1e-3, max_value=1e3),
+                      seed=st.integers(0, 2 ** 16))(f))
+        return pytest.mark.parametrize(
+            "scale,seed", [(1e-3, 0), (0.5, 1), (12.0, 7), (1e3, 12345)])(f)
+    return deco

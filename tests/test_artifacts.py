@@ -1,0 +1,239 @@
+"""MX artifact store: export -> load -> forward bit-exactness vs the
+in-memory PTQResult (dense + MoE), manifest/hash tamper detection, packed
+byte accounting, engine + CLI integration."""
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.artifacts import (ArtifactError, IntegrityError, export_artifact,
+                             load_artifact, verify_artifact)
+from repro.artifacts.cli import main as cli_main
+from repro.artifacts.manifest import MANIFEST_FILE, WEIGHTS_FILE
+from repro.configs.base import ArchConfig
+from repro.core import mx as mxlib, ptq
+from repro.core.quantize import QuantMode
+from repro.data import synthetic
+from repro.kernels.packing import PackedWeight
+from repro.models import api
+from repro.serving.engine import Engine, Request
+
+
+def _dense_cfg():
+    return ArchConfig(name="t", family="dense", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=128,
+                      attn_chunk=64)
+
+
+def _moe_cfg():
+    return ArchConfig(name="tm", family="moe", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=128,
+                      n_experts=4, top_k=2, n_shared_experts=1,
+                      attn_chunk=64)
+
+
+def _quantized(cfg, method="rtn", fmt="mxfp4", seed=0):
+    params = api.init(jax.random.PRNGKey(seed), cfg)
+    src = synthetic.make_source(cfg, 4, 32, 0)
+    calib = [{k: jnp.asarray(v) for k, v in src.batch(i).items()}
+             for i in range(2)]
+    toks = jnp.asarray(src.batch(50)["inputs"])[:, :16]
+    res = ptq.apply_method(method, params, cfg, calib, fmt=fmt, steps=6)
+    return res, toks
+
+
+@pytest.fixture(scope="module")
+def dense_artifact(tmp_path_factory):
+    cfg = _dense_cfg()
+    res, toks = _quantized(cfg)
+    out = tmp_path_factory.mktemp("art") / "dense"
+    export_artifact(res, cfg, out)
+    return cfg, res, toks, out
+
+
+@pytest.mark.parametrize("eager", [False, True])
+def test_export_load_forward_bit_exact_dense(dense_artifact, eager):
+    cfg, res, toks, out = dense_artifact
+    ref = np.asarray(api.forward(res.params, cfg, toks, res.qm))
+    params, cfg2, qm = load_artifact(out, eager=eager)
+    assert cfg2 == cfg
+    got = np.asarray(api.forward(params, cfg2, toks, qm))
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_lazy_load_keeps_weights_packed(dense_artifact):
+    _, _, _, out = dense_artifact
+    params, _, _ = load_artifact(out)
+    assert isinstance(params["blocks"]["wq"], PackedWeight)
+    assert params["blocks"]["wq"].codes_packed.dtype == jnp.uint8
+    assert isinstance(params["head"], jax.Array)  # head stays fp
+    eager, _, _ = load_artifact(out, eager=True)
+    assert isinstance(eager["blocks"]["wq"], jax.Array)
+
+
+def test_export_load_forward_bit_exact_moe(tmp_path):
+    cfg = _moe_cfg()
+    res, toks = _quantized(cfg, seed=1)
+    out = tmp_path / "moe"
+    export_artifact(res, cfg, out)
+    ref = np.asarray(api.forward(res.params, cfg, toks, res.qm))
+    params, cfg2, qm = load_artifact(out)
+    for k in ("router", "eg", "eu", "ed", "sg"):
+        assert isinstance(params["blocks"][k], PackedWeight)
+    got = np.asarray(api.forward(params, cfg2, toks, qm))
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_export_mxint4(tmp_path):
+    cfg = _dense_cfg()
+    res, toks = _quantized(cfg, fmt="mxint4", seed=2)
+    out = tmp_path / "int4"
+    export_artifact(res, cfg, out)
+    ref = np.asarray(api.forward(res.params, cfg, toks, res.qm))
+    params, cfg2, qm = load_artifact(out)
+    np.testing.assert_array_equal(
+        np.asarray(api.forward(params, cfg2, toks, qm)), ref)
+
+
+def test_export_load_bfloat16_params(tmp_path):
+    """bf16 params (the full-size config default) must survive the npz
+    store: ml_dtypes leaves are byte-encoded, and the load reconstructs
+    the logical dtype with bitwise-identical values."""
+    cfg = _dense_cfg()
+    params = api.init(jax.random.PRNGKey(3), cfg, dtype=jnp.bfloat16)
+    src = synthetic.make_source(cfg, 4, 32, 0)
+    calib = [{k: jnp.asarray(v) for k, v in src.batch(0).items()}]
+    toks = jnp.asarray(src.batch(50)["inputs"])[:, :16]
+    res = ptq.apply_method("rtn", params, cfg, calib, fmt="mxfp4")
+    out = tmp_path / "bf16"
+    export_artifact(res, cfg, out)
+    p2, cfg2, qm2 = load_artifact(out)
+    assert p2["blocks"]["ln1"].dtype == jnp.bfloat16
+    assert p2["blocks"]["wq"].to_dense().dtype == jnp.bfloat16
+    ref = np.asarray(api.forward(res.params, cfg, toks, res.qm),
+                     dtype=np.float32)
+    got = np.asarray(api.forward(p2, cfg2, toks, qm2), dtype=np.float32)
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_packed_bytes_match_roofline_accounting(dense_artifact):
+    """No fp copies of quantized weights in the artifact: stored bytes ==
+    mx.packed_nbytes for every packed tensor."""
+    cfg, res, _, out = dense_artifact
+    man = json.loads((out / MANIFEST_FILE).read_text())
+    mxcfg = mxlib.MXConfig(fmt=man["fmt"], block_size=32)
+    with np.load(out / WEIGHTS_FILE) as z:
+        stored = {k: z[k] for k in z.files}
+    total = 0
+    for t in man["tensors"]:
+        if t["kind"] != "packed":
+            continue
+        nb = (stored[t["key"] + ".codes"].nbytes
+              + stored[t["key"] + ".scales"].nbytes)
+        assert nb == t["packed_nbytes"] == mxlib.packed_nbytes(
+            t["shape"], mxcfg)
+        total += nb
+    assert total == man["totals"]["packed_nbytes"]
+    assert verify_artifact(out)["packed_nbytes"] == total
+
+
+def test_export_rejects_fp_result(tmp_path):
+    cfg = _dense_cfg()
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    res = ptq.PTQResult(params, QuantMode.off(), None, [], "fp")
+    with pytest.raises(ArtifactError, match="unquantized"):
+        export_artifact(res, cfg, tmp_path / "fp")
+
+
+def test_export_rejects_off_grid_weights(tmp_path):
+    """Unquantized fp weights under a quantized QuantMode must not be
+    silently re-quantized at export."""
+    cfg = _dense_cfg()
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    qm = QuantMode(enabled=True,
+                   act_cfg=mxlib.MXConfig(fmt="mxfp4", block_size=32))
+    res = ptq.PTQResult(params, qm, None, [], "rtn")
+    with pytest.raises(ArtifactError, match="grid"):
+        export_artifact(res, cfg, tmp_path / "offgrid")
+
+
+def test_tamper_detection_weights(dense_artifact, tmp_path):
+    import shutil
+    _, _, _, src = dense_artifact
+    art = tmp_path / "tampered"
+    shutil.copytree(src, art)
+    wz = art / WEIGHTS_FILE
+    data = bytearray(wz.read_bytes())
+    data[len(data) // 2] ^= 0xFF
+    wz.write_bytes(bytes(data))
+    with pytest.raises(IntegrityError):
+        load_artifact(art)
+
+
+def test_tamper_detection_manifest(dense_artifact, tmp_path):
+    import shutil
+    _, _, _, src = dense_artifact
+    art = tmp_path / "tampered_man"
+    shutil.copytree(src, art)
+    man = json.loads((art / MANIFEST_FILE).read_text())
+    packed = [t for t in man["tensors"] if t["kind"] == "packed"]
+    packed[0]["sha256_codes"] = "0" * 64
+    (art / MANIFEST_FILE).write_text(json.dumps(man))
+    with pytest.raises(IntegrityError, match="hash mismatch"):
+        load_artifact(art)
+
+
+def test_load_rejects_wrong_schema(dense_artifact, tmp_path):
+    import shutil
+    _, _, _, src = dense_artifact
+    art = tmp_path / "schema"
+    shutil.copytree(src, art)
+    man = json.loads((art / MANIFEST_FILE).read_text())
+    man["schema_version"] = 99
+    (art / MANIFEST_FILE).write_text(json.dumps(man))
+    with pytest.raises(ArtifactError, match="schema_version"):
+        load_artifact(art)
+
+
+@pytest.mark.parametrize("eager", [False, True])
+def test_engine_from_artifact_matches_in_memory(dense_artifact, eager):
+    cfg, res, _, out = dense_artifact
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, 12).astype(np.int32)
+               for _ in range(2)]
+    ref_eng = Engine(res.params, cfg, res.qm, batch_size=2, max_len=64)
+    ref = ref_eng.generate([Request(prompt=p, max_new=6) for p in prompts])
+    eng = Engine.from_artifact(out, batch_size=2, max_len=64, eager=eager)
+    got = eng.generate([Request(prompt=p, max_new=6) for p in prompts])
+    for r, g in zip(ref, got):
+        np.testing.assert_array_equal(g.out, r.out)
+
+
+def test_throughput_zero_dt_guard(dense_artifact, monkeypatch):
+    cfg, res, _, _ = dense_artifact
+    eng = Engine(res.params, cfg, res.qm, batch_size=2, max_len=64)
+    monkeypatch.setattr("repro.serving.engine.time.time", lambda: 42.0)
+    stats = eng.throughput(n_requests=2, prompt_len=8, max_new=2)
+    assert stats["tok_per_s"] == float("inf")  # no ZeroDivisionError
+
+
+def test_cli_inspect_and_verify(dense_artifact, capsys, tmp_path):
+    _, _, _, out = dense_artifact
+    assert cli_main(["inspect", str(out), "--tensors"]) == 0
+    text = capsys.readouterr().out
+    assert "blocks/wq" in text and "packed" in text
+    assert cli_main(["verify", str(out)]) == 0
+    assert "OK" in capsys.readouterr().out
+    # corrupt -> verify fails with exit 1
+    import shutil
+    art = tmp_path / "bad"
+    shutil.copytree(out, art)
+    man = json.loads((art / MANIFEST_FILE).read_text())
+    [t for t in man["tensors"] if t["kind"] == "packed"][0][
+        "sha256_scales"] = "f" * 64
+    (art / MANIFEST_FILE).write_text(json.dumps(man))
+    assert cli_main(["verify", str(art)]) == 1
+    assert "FAIL" in capsys.readouterr().err

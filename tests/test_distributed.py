@@ -29,8 +29,7 @@ _SCRIPT = textwrap.dedent("""
     cfg = ArchConfig(name="t", family="dense", n_layers=2, d_model=64,
                      n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=128,
                      attn_chunk=64)
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = mesh_lib.make_mesh((4, 2), ("data", "model"))
     params = api.init(jax.random.PRNGKey(0), cfg)
     state = opt.init_state(params)
     src = synthetic.make_source(cfg, 8, 32, 0)
@@ -105,8 +104,8 @@ def test_elastic_checkpoint_reload(tmp_path):
                          n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=128)
         params = api.init(jax.random.PRNGKey(0), cfg)
         ckpt.save({str(tmp_path)!r}, 7, params)
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch import mesh as mesh_lib
+        mesh = mesh_lib.make_mesh((2, 4), ("data", "model"))
         psh = sh.params_shardings(params, cfg, "train", mesh)
         restored, man = ckpt.restore({str(tmp_path)!r}, params, shardings=psh)
         assert man["step"] == 7

@@ -3,7 +3,11 @@ helpers (exact identities, independent of any model)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                                         "(pip install .[dev])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import folding as fl
 from repro.core import transforms as tfm

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from conftest import scale_seed_property, seed_property
 
 from repro.core import mx as mxlib
 
@@ -47,9 +47,7 @@ def test_nvfp4_block16():
     assert np.isfinite(np.asarray(q)).all()
 
 
-@settings(max_examples=30, deadline=None)
-@given(scale=st.floats(min_value=1e-3, max_value=1e3),
-       seed=st.integers(0, 2**16))
+@scale_seed_property(max_examples=30)
 def test_property_relative_error_bound(scale, seed):
     """MX FP4 relative block error is bounded: per-element error <= half the
     largest grid step times the block scale => block-relative error < 2/3."""
@@ -65,8 +63,7 @@ def test_property_relative_error_bound(scale, seed):
     assert (np.abs(xb - qb) <= amax / 4 + 1e-6).all()
 
 
-@settings(max_examples=30, deadline=None)
-@given(seed=st.integers(0, 2**16))
+@seed_property(max_examples=30)
 def test_property_quantized_value_magnitude(seed):
     """|Q(x)| never exceeds max-grid x scale and sign is preserved."""
     cfg = mxlib.MXConfig(fmt="mxint4")

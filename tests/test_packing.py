@@ -1,9 +1,10 @@
 """4-bit packing layout: roundtrip exactness + byte accounting +
-hypothesis property tests."""
+property tests (hypothesis-driven when available, fixed seeds otherwise)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+from conftest import seed_property
 
 from repro.core import mx as mxlib
 from repro.kernels import packing, ref
@@ -17,6 +18,19 @@ def test_pack_unpack_codes_roundtrip():
         np.asarray(c))
 
 
+def test_pack_codes_odd_axis_raises():
+    with pytest.raises(ValueError, match="even"):
+        packing.pack_codes(jnp.zeros((4, 33), jnp.uint8))
+
+
+def test_pack_weight_rejects_unpackable():
+    w = jnp.zeros((64, 8), jnp.float32)
+    with pytest.raises(ValueError, match="packable"):
+        packing.pack_weight(w, fmt="mxfp8")
+    with pytest.raises(ValueError, match="divisible"):
+        packing.pack_weight(jnp.zeros((48, 8), jnp.float32))
+
+
 def test_scale_e8m0_roundtrip():
     e = jnp.asarray([-20, -3, 0, 1, 7, 30], jnp.float32)
     s = jnp.exp2(e)
@@ -25,21 +39,68 @@ def test_scale_e8m0_roundtrip():
                                np.asarray(s))
 
 
-@settings(max_examples=20, deadline=None)
-@given(seed=st.integers(0, 2**16))
+@seed_property(max_examples=20)
 def test_property_weight_bundle_exact(seed):
     """pack -> unpack == fake-quantized weight, and the byte count matches
-    mx.packed_nbytes (the roofline accounting)."""
+    mx.packed_nbytes (the roofline accounting) — for every packable fmt."""
     rng = np.random.default_rng(seed)
     w = jnp.asarray(rng.standard_normal((64, 32)), jnp.float32)
-    bundle = packing.pack_weight(w)
-    wq = packing.unpack_weight(bundle)
+    for fmt in packing.PACKABLE_FMTS:
+        cfg = mxlib.MXConfig(fmt=fmt, block_size=32)
+        bundle = packing.pack_weight(w, fmt)
+        wq = packing.unpack_weight(bundle)
+        expect = mxlib.quantize(w.T, cfg, ste=False).T
+        np.testing.assert_array_equal(np.asarray(wq), np.asarray(expect))
+        assert packing.packed_bundle_nbytes(bundle) == \
+            mxlib.packed_nbytes(w.shape, cfg)
+
+
+@seed_property(max_examples=20)
+def test_property_pack_idempotent_on_grid(seed):
+    """An already-quantized weight packs losslessly (bitwise) — the
+    invariant the artifact store's zero-requantization load relies on."""
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.standard_normal((96, 16)), jnp.float32)
+    for fmt in packing.PACKABLE_FMTS:
+        cfg = mxlib.MXConfig(fmt=fmt, block_size=32)
+        wq = mxlib.quantize(w.T, cfg, ste=False).T
+        back = packing.unpack_weight(packing.pack_weight(wq, fmt))
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(wq))
+
+
+def test_pack_weight_leading_dims():
+    """Layer-stacked (L, K, N) and expert-batched (L, E, K, N) weights
+    pack along the contraction axis; per-slice results match 2-D packs."""
+    rng = np.random.default_rng(3)
+    w = jnp.asarray(rng.standard_normal((2, 3, 64, 16)), jnp.float32)
+    bundle = packing.pack_weight(w, "mxfp4")
+    assert bundle["codes_packed"].shape == (2, 3, 32, 16)
+    assert bundle["scales_e8m0"].shape == (2, 3, 2, 16)
+    full = packing.unpack_weight(bundle)
+    for l in range(2):
+        for e in range(3):
+            single = packing.unpack_weight(packing.pack_weight(w[l, e]))
+            np.testing.assert_array_equal(np.asarray(full[l, e]),
+                                          np.asarray(single))
+
+
+def test_packed_weight_pytree():
+    """PackedWeight slices under tree.map (the scan path) and dequantizes
+    inside jit to the same values as the dense equivalent."""
+    rng = np.random.default_rng(4)
+    w = jnp.asarray(rng.standard_normal((3, 64, 16)), jnp.float32)
     cfg = mxlib.MXConfig(fmt="mxfp4", block_size=32)
-    expect = mxlib.quantize(w.T, cfg, ste=False).T
-    np.testing.assert_allclose(np.asarray(wq), np.asarray(expect),
-                               atol=1e-6)
-    assert packing.packed_bundle_nbytes(bundle) == \
-        mxlib.packed_nbytes(w.shape, cfg)
+    wq = jnp.swapaxes(mxlib.quantize(jnp.swapaxes(w, -1, -2), cfg,
+                                     ste=False), -1, -2)
+    pw = packing.PackedWeight.from_dense(wq)
+    assert pw.shape == (3, 64, 16) and pw.nbytes_packed == \
+        mxlib.packed_nbytes(wq.shape, cfg)
+    sl = jax.tree.map(lambda a: a[1], pw)
+    assert isinstance(sl, packing.PackedWeight) and sl.shape == (64, 16)
+    np.testing.assert_array_equal(np.asarray(sl.to_dense()),
+                                  np.asarray(wq[1]))
+    dense = jax.jit(packing.maybe_dense)(pw)
+    np.testing.assert_array_equal(np.asarray(dense), np.asarray(wq))
 
 
 def test_bundle_feeds_kernel():
@@ -48,7 +109,8 @@ def test_bundle_feeds_kernel():
     x = jnp.asarray(rng.standard_normal((16, 64)), jnp.float32)
     w = jnp.asarray(rng.standard_normal((64, 32)) * 0.2, jnp.float32)
     bundle = packing.pack_weight(w)
-    codes = packing.unpack_codes(bundle["codes_packed"].T).T
+    codes = packing.unpack_codes(
+        jnp.swapaxes(bundle["codes_packed"], -1, -2)).T   # (K, N)
     scales = packing.unpack_scales_e8m0(bundle["scales_e8m0"])
     y = ref.mx_matmul_ref(x, codes, scales)
     cfg = mxlib.MXConfig(fmt="mxfp4")

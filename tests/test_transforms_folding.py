@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from conftest import seed_property
 
 from repro.configs.base import ArchConfig
 from repro.core import folding as fl
@@ -40,8 +40,7 @@ def test_volume_regularizer_zero_at_rotation_init():
     assert float(tfm.loss_vol(p, spec)) < 1e-6
 
 
-@settings(max_examples=20, deadline=None)
-@given(seed=st.integers(0, 2**16))
+@seed_property(max_examples=20)
 def test_property_lu_determinant_matches_logs(seed):
     """|det A| == exp(Σ log|s|) for the LU parameterization."""
     spec = tfm.TransformSpec(kind="lu", d=32, block=16)
@@ -51,8 +50,7 @@ def test_property_lu_determinant_matches_logs(seed):
     assert abs(logdet - float(jnp.sum(p["learn"]["logs"]))) < 1e-3
 
 
-@settings(max_examples=15, deadline=None)
-@given(seed=st.integers(0, 2**16))
+@seed_property(max_examples=15)
 def test_property_hadamard_preserves_norm(seed):
     x = np.random.default_rng(seed).standard_normal((4, 64)).astype(np.float32)
     h = tfm.random_hadamard(jax.random.PRNGKey(seed), 64)
