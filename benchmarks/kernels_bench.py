@@ -1,50 +1,126 @@
-"""Kernel microbenchmarks: jnp-path timings (jit, CPU) of the three MX ops
-plus analytic TPU-roofline projections for the Pallas kernels (the CPU
-interpreter is for correctness; the projection uses the v5e bandwidth and
-the packed 4-bit byte counts from DESIGN.md §2)."""
+"""Kernel microbenchmarks: the *actual* serving dispatch paths.
+
+Times (jit, CPU):
+  * the PackedWeight ``qlinear`` fallback — new skip-requant + LUT decode
+    vs the old decode->encode->decode round-trip it replaced,
+  * the fused packed-native dispatch vs the reference path (on CPU the
+    Pallas kernel runs in interpret mode, so its wall-clock is a
+    correctness-path number, not a deployment number — the TPU story is
+    the roofline projection below),
+  * the jnp fake-quant primitives (historical trajectory rows),
+
+plus packed-vs-dense weight byte accounting and analytic TPU-roofline
+projections for the Pallas kernels (v5e bandwidth, packed 4-bit byte
+counts from DESIGN.md §2).
+
+Writes the standard experiments/benchmarks/kernels_bench.json and a
+repo-root BENCH_kernels.json so the perf trajectory is populated.
+``--smoke`` shrinks shapes for CI.
+"""
 from __future__ import annotations
+
+import argparse
+import json
+import pathlib
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import mx as mxlib
 from repro.core import transforms as tfm
+from repro.core.quantize import QuantMode, qlinear
 from repro.kernels import ops
+from repro.kernels.packing import PackedWeight
 from . import common
 
 HBM_BW = 819e9
 PEAK = 197e12
 
+ROOT = pathlib.Path(__file__).resolve().parent.parent
 
-def run(log=print):
+
+def _packed_weight(key, k, n, fmt="mxfp4"):
+    w = jax.random.normal(key, (k, n), jnp.float32) * 0.1
+    # pack_weight RTN-quantizes off-grid values itself, so from_dense on
+    # the raw weight lands on the MX grid in one pass
+    return PackedWeight.from_dense(w, fmt)
+
+
+def run(log=print, smoke: bool = False):
     rows = []
-    M, K, N = 2048, 4096, 4096
+    if smoke:
+        M, K, N = 64, 256, 256          # CI: seconds, not minutes
+        Md, Kd, Nd = 16, 256, 256
+        Mf, Kf, Nf = 16, 128, 128
+    else:
+        M, K, N = 2048, 4096, 4096
+        Md, Kd, Nd = 64, 4096, 4096     # decode-shaped: weight-bound
+        Mf, Kf, Nf = 64, 1024, 1024
     x = jax.random.normal(jax.random.PRNGKey(0), (M, K), jnp.float32)
-    w = jax.random.normal(jax.random.PRNGKey(1), (K, N), jnp.float32) * 0.1
     cfg = mxlib.MXConfig(fmt="mxfp4")
 
-    # jnp fake-quant path timings (CPU reference implementation)
+    # --- jnp fake-quant primitives (trajectory rows) ---
     f_quant = jax.jit(lambda t: mxlib.quantize(t, cfg, ste=False))
     us = common.timed(f_quant, x) * 1e6
-    rows.append({"name": "mx_quant_jnp_2048x4096", "us_per_call": us,
+    rows.append({"name": f"mx_quant_jnp_{M}x{K}", "us_per_call": us,
                  "derived": f"gbps={x.size*4/us*1e6/1e9:.2f}"})
 
     h = tfm.hadamard_matrix(32)
     f_t3 = jax.jit(lambda t: mxlib.quantize(tfm.apply_blockwise(t, h),
                                             cfg, ste=False))
     us = common.timed(f_t3, x) * 1e6
-    rows.append({"name": "hadamard_quant_jnp_2048x4096", "us_per_call": us,
+    rows.append({"name": f"hadamard_quant_jnp_{M}x{K}", "us_per_call": us,
                  "derived": f"gbps={x.size*4/us*1e6/1e9:.2f}"})
 
-    wq = jax.jit(lambda t: jnp.swapaxes(
-        mxlib.quantize(jnp.swapaxes(t, 0, 1), cfg, ste=False), 0, 1))(w)
-    f_mm = jax.jit(lambda a, b: mxlib.quantize(a, cfg, ste=False) @ b)
-    us = common.timed(f_mm, x, wq) * 1e6
-    flops = 2 * M * K * N
-    rows.append({"name": "mx_matmul_jnp_2048x4096x4096", "us_per_call": us,
-                 "derived": f"gflops={flops/us*1e6/1e9:.1f}"})
+    # --- PackedWeight qlinear fallback: skip-requant + LUT decode vs the
+    # old decode->encode->decode round-trip (the PR's fallback fix) ---
+    xd = jax.random.normal(jax.random.PRNGKey(2), (Md, Kd), jnp.float32)
+    pw = _packed_weight(jax.random.PRNGKey(3), Kd, Nd)
+    qm_ref = QuantMode.mxfp4(t3=False)
 
-    # TPU roofline projections for the Pallas kernels (packed layout)
+    def old_requant(xx, p):  # pre-PR behavior, reconstructed
+        w = p.to_dense()
+        xq = mxlib.quantize(xx, cfg, ste=False)
+        wq = jnp.swapaxes(mxlib.quantize(jnp.swapaxes(w, -1, -2), cfg,
+                                         ste=False), -1, -2)
+        return xq @ wq
+
+    f_old = jax.jit(old_requant)
+    f_new = jax.jit(lambda xx, p: qlinear(xx, p, None, qm_ref, "ffn_in"))
+    us_old = common.timed(f_old, xd, pw) * 1e6
+    us_new = common.timed(f_new, xd, pw) * 1e6
+    rows.append({"name": f"qlinear_packed_requant_old_{Md}x{Kd}x{Nd}",
+                 "us_per_call": us_old, "derived": "decode+encode+decode"})
+    rows.append({"name": f"qlinear_packed_fallback_{Md}x{Kd}x{Nd}",
+                 "us_per_call": us_new,
+                 "derived": f"skip_requant_speedup={us_old/us_new:.2f}x"})
+
+    # --- fused dispatch (packed-native Pallas, CPU interpret mode) vs the
+    # reference path on identical inputs ---
+    xf = jax.random.normal(jax.random.PRNGKey(4), (Mf, Kf), jnp.float32)
+    pwf = _packed_weight(jax.random.PRNGKey(5), Kf, Nf)
+    qm_fused = qm_ref.with_backend("fused")
+    f_refp = jax.jit(lambda xx, p: qlinear(xx, p, None, qm_ref, "ffn_in"))
+    f_fused = jax.jit(lambda xx, p: qlinear(xx, p, None, qm_fused,
+                                            "ffn_in"))
+    us_ref = common.timed(f_refp, xf, pwf) * 1e6
+    us_fus = common.timed(f_fused, xf, pwf) * 1e6
+    rows.append({"name": f"qlinear_dispatch_ref_{Mf}x{Kf}x{Nf}",
+                 "us_per_call": us_ref, "derived": "reference path"})
+    rows.append({"name": f"qlinear_dispatch_fused_{Mf}x{Kf}x{Nf}",
+                 "us_per_call": us_fus,
+                 "derived": "cpu_interpret=TRUE (correctness-path timing; "
+                            "compiled Mosaic on TPU)"})
+
+    # --- packed vs dense weight bytes (the HBM-traffic win) ---
+    rows.append({
+        "name": f"weight_bytes_packed_vs_dense_{Kd}x{Nd}",
+        "us_per_call": 0.0,
+        "derived": (f"packed={pw.nbytes_packed};dense={pw.nbytes_dense};"
+                    f"ratio={pw.nbytes_dense/pw.nbytes_packed:.2f}x")})
+
+    # --- TPU roofline projections for the Pallas kernels (packed) ---
+    flops = 2 * M * K * N
     wbytes = mxlib.packed_nbytes((K, N), cfg)
     abytes = M * K * 2                     # bf16 activations in
     obytes = M * N * 2
@@ -55,17 +131,23 @@ def run(log=print):
         "derived": (f"mem_us={t_mem*1e6:.1f};compute_us={t_cmp*1e6:.1f};"
                     f"bound={'memory' if t_mem > t_cmp else 'compute'};"
                     f"ai={flops/(wbytes+abytes+obytes):.1f}")})
-    # bf16 baseline projection: weight bytes 2 B/param -> 3.76x more traffic
+    # bf16 baseline projection: weight bytes 2 B/param -> more traffic
     t_mem_bf16 = (K * N * 2 + abytes + obytes) / HBM_BW
     rows.append({
         "name": "mx_vs_bf16_weight_traffic", "us_per_call": 0.0,
         "derived": f"speedup_at_bw_bound={t_mem_bf16/t_mem:.2f}x"})
+
     for r in rows:
-        log(f"[kernels] {r['name']:32s} {r['us_per_call']:10.1f}us "
+        log(f"[kernels] {r['name']:42s} {r['us_per_call']:10.1f}us "
             f"{r['derived']}")
     common.emit(rows, "kernels_bench")
+    if not smoke:  # smoke shapes would pollute the perf trajectory
+        (ROOT / "BENCH_kernels.json").write_text(json.dumps(rows, indent=1))
     return rows
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes for CI (seconds, not minutes)")
+    run(smoke=ap.parse_args().smoke)

@@ -240,7 +240,8 @@ def _read_arrays(root: pathlib.Path, man: Manifest,
     return weights, aux
 
 
-def load_artifact(path, *, eager: bool = False, verify: bool = True
+def load_artifact(path, *, eager: bool = False, verify: bool = True,
+                  backend: str | None = None
                   ) -> Tuple[dict, ArchConfig, QuantMode]:
     """Load an artifact into a servable ``(params, cfg, qm)`` triple.
 
@@ -248,6 +249,9 @@ def load_artifact(path, *, eager: bool = False, verify: bool = True
     packed bytes in HBM, dequantized lazily at each use site.
     eager=True: dense fp weights are materialized once at load.
     verify=True: recompute content hashes before trusting the bytes.
+    backend: optional execution-backend override for the returned
+    QuantMode ('ref' | 'fused'). The backend is a serving-time choice,
+    not a model property, so it is never stored in the manifest.
     """
     root = pathlib.Path(path)
     man = Manifest.load(root / MANIFEST_FILE)
@@ -255,6 +259,8 @@ def load_artifact(path, *, eager: bool = False, verify: bool = True
 
     cfg = ArchConfig(**man.arch)
     qm = quant_mode_from_json(man.quant_mode)
+    if backend is not None:
+        qm = qm.with_backend(backend)
 
     flat = {}
     for t in man.tensors:

@@ -19,6 +19,7 @@ differentiable so transformations can be learned through the quantizer
 from __future__ import annotations
 
 import dataclasses
+import functools
 from functools import partial
 from typing import Sequence
 
@@ -266,13 +267,20 @@ def encode(x: jnp.ndarray, cfg: MXConfig | None = None):
     return codes.astype(jnp.uint8), scales
 
 
+@functools.lru_cache(maxsize=None)
+def _full_grid_np(fmt: str) -> np.ndarray:
+    """Cached full symmetric grid (decode LUT) per element format."""
+    return FORMATS[fmt].full_grid()
+
+
 def decode(codes: jnp.ndarray, scales: jnp.ndarray,
            cfg: MXConfig | None = None, dtype=jnp.float32) -> jnp.ndarray:
-    """Inverse of ``encode``."""
+    """Inverse of ``encode``: one LUT gather (``jnp.take``) + a per-block
+    scale multiply — the whole dequant cost of the fast fallback path."""
     cfg = cfg or MXConfig()
     B = cfg.block_size
-    full = jnp.asarray(cfg.element.full_grid(), dtype=dtype)
-    vals = full[codes.astype(jnp.int32)]
+    full = jnp.asarray(_full_grid_np(cfg.fmt), dtype=dtype)
+    vals = jnp.take(full, codes.astype(jnp.int32), axis=0)
     *lead, d = vals.shape
     vb = vals.reshape(*lead, d // B, B) * scales[..., None].astype(dtype)
     return vb.reshape(*lead, d)

@@ -1,9 +1,33 @@
-"""Quantized execution mode: MX fake-quant linears + online T3 transform.
+"""Quantized execution mode: MX linears with a kernel-dispatch backend.
 
-Model code routes every matmul through :func:`qlinear`. A ``QuantMode``
-threads through the model and decides, per call-site role, whether the
-activation and/or weight is MX-fake-quantized (STE-differentiable, so the
-same path serves LATMiX transform learning and quantized evaluation).
+Model code routes every matmul through :func:`qlinear` (or
+:func:`qeinsum` for expert-batched weights). A ``QuantMode`` threads
+through the model and decides, per call-site role, whether the activation
+and/or weight is MX-quantized (STE-differentiable, so the same path serves
+LATMiX transform learning and quantized evaluation) — and *how* the matmul
+executes:
+
+``backend="ref"`` (default)
+    Pure-jnp fake-quant path. A :class:`~repro.kernels.packing.PackedWeight`
+    is dequantized in place (one LUT decode — packed weights are already on
+    the MX grid, so no re-quantization round-trip) and the GEMM runs dense.
+    Differentiable; used for training, transform learning and as the golden
+    reference.
+
+``backend="fused"``
+    Packed-native execution: when the weight is a ``PackedWeight`` whose
+    layout matches the activation config (4-bit packable fmt, 32-blocks,
+    pow2 scales) and the call-site quantizes, the matmul dispatches to the
+    Pallas kernel :func:`repro.kernels.ops.mx_gemm_packed` — activations
+    are flattened ``(B, S, K) -> (M, K)``, quantized on the fly inside the
+    kernel, and the 4-bit codes + E8M0 scale bytes are decoded per tile
+    (no dense weight is ever materialized). ``role='ffn_down'`` with
+    ``t3_block=32`` folds the online T3 block-Hadamard into the kernel's
+    activation-quantize prologue. Layer-stacked and expert-stacked (MoE)
+    weights are mapped over their leading axes. Anything that does not
+    meet the kernel contract — dense weights, non-packable formats, NVFP4
+    scales, a non-32 t3 block, unquantized roles like the default LM head —
+    falls back to the reference path bit-identically.
 
 Roles (mirroring the paper's Fig. 5 placement):
   'qkv', 'attn_out', 'ffn_in', 'router', 'head', 'ssm_in', 'ssm_out', ...
@@ -15,11 +39,16 @@ import dataclasses
 from typing import Optional
 
 import jax.numpy as jnp
+import numpy as np
 
-from repro.kernels.packing import maybe_dense
+from repro.kernels import ops
+from repro.kernels.mx_quant import MXBLOCK
+from repro.kernels.packing import PackedWeight, maybe_dense
 
 from . import mx as mxlib
 from . import transforms as tfm
+
+BACKENDS = ("ref", "fused")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -37,6 +66,11 @@ class QuantMode:
                                model must run with the matching t3_block.
     quantize_head           -> whether the LM head matmul is quantized
                                (papers keep head/embeddings FP; default off).
+    backend                 -> 'ref' | 'fused': see module docstring. The
+                               backend never changes values beyond fp
+                               accumulation order; 'fused' engages only
+                               where the packed kernel contract holds and
+                               falls back to 'ref' everywhere else.
     """
 
     enabled: bool = False
@@ -44,24 +78,35 @@ class QuantMode:
     weight_cfg: Optional[mxlib.MXConfig] = None
     t3_block: int = 0
     quantize_head: bool = False
+    backend: str = "ref"
+
+    def __post_init__(self):
+        if self.backend not in BACKENDS:
+            raise ValueError(f"unknown backend {self.backend!r} "
+                             f"(expected one of {BACKENDS})")
+
+    def with_backend(self, backend: str) -> "QuantMode":
+        return dataclasses.replace(self, backend=backend)
 
     @staticmethod
     def off(t3: int = 0) -> "QuantMode":
         return QuantMode(enabled=False, t3_block=t3)
 
     @staticmethod
-    def mxfp4(weights: bool = True, t3: bool = True) -> "QuantMode":
+    def mxfp4(weights: bool = True, t3: bool = True,
+              backend: str = "ref") -> "QuantMode":
         c = mxlib.MXConfig(fmt="mxfp4", block_size=32)
         return QuantMode(enabled=True, act_cfg=c,
                          weight_cfg=c if weights else None,
-                         t3_block=32 if t3 else 0)
+                         t3_block=32 if t3 else 0, backend=backend)
 
     @staticmethod
-    def mxint4(weights: bool = True, t3: bool = True) -> "QuantMode":
+    def mxint4(weights: bool = True, t3: bool = True,
+               backend: str = "ref") -> "QuantMode":
         c = mxlib.MXConfig(fmt="mxint4", block_size=32)
         return QuantMode(enabled=True, act_cfg=c,
                          weight_cfg=c if weights else None,
-                         t3_block=32 if t3 else 0)
+                         t3_block=32 if t3 else 0, backend=backend)
 
     @staticmethod
     def nvfp4(weights: bool = True, t3: bool = True) -> "QuantMode":
@@ -87,6 +132,77 @@ def _maybe_quant_weight(w: jnp.ndarray, qm: QuantMode) -> jnp.ndarray:
     return w
 
 
+def _cfg_matches_packed(cfg: Optional[mxlib.MXConfig], fmt: str) -> bool:
+    return (cfg is not None and cfg.fmt == fmt
+            and cfg.block_size == MXBLOCK and cfg.scale_mode == "pow2")
+
+
+def _packed_on_grid(w, qm: QuantMode) -> bool:
+    """A PackedWeight decodes to values already on the MX grid of a
+    matching weight_cfg, so the reference path's decode->encode->decode
+    round-trip is the identity and can be skipped (bit-exact: pow2-scale
+    MX quantization is idempotent — the property the artifact store's
+    lossless pack/unpack tests pin down)."""
+    return (isinstance(w, PackedWeight)
+            and _cfg_matches_packed(qm.weight_cfg, w.fmt))
+
+
+def _fused_t3(qm: QuantMode, role: str) -> bool:
+    return bool(qm.t3_block) and role == "ffn_down"
+
+
+def _mode_fusable(w, qm: QuantMode, role: str) -> bool:
+    """Does (mode, weight, role) meet the packed-kernel contract?"""
+    if qm.backend != "fused" or not qm.enabled or qm.act_cfg is None:
+        return False
+    if not isinstance(w, PackedWeight):
+        return False
+    if role == "head" and not qm.quantize_head:
+        return False  # head stays fp
+    a = qm.act_cfg
+    if not _cfg_matches_packed(a, w.fmt) or a.stochastic:
+        return False
+    if qm.weight_cfg is not None and not _cfg_matches_packed(
+            qm.weight_cfg, w.fmt):
+        return False  # mode would re-quantize to a different grid
+    if _fused_t3(qm, role) and qm.t3_block != MXBLOCK:
+        return False  # kernel prologue is fixed at 32-wide Hadamard blocks
+    k = w.shape[-2]
+    return k % MXBLOCK == 0
+
+
+def _out_dtype(x: jnp.ndarray, w: PackedWeight):
+    return jnp.result_type(x.dtype, jnp.dtype(w.dtype))
+
+
+def _fused_linear(x: jnp.ndarray, w: PackedWeight, b, qm: QuantMode,
+                  role: str) -> jnp.ndarray:
+    """Flatten (..., K) -> (M, K) and run the packed-native kernel. For a
+    stacked weight (*lead, K, N) the leading axes become vmap axes and x
+    must be (*lead, M, K) — the reference path's batched-matmul shape."""
+    k, n = w.shape[-2], w.shape[-1]
+    if w.ndim == 2:
+        lead = x.shape[:-1]
+        m = int(np.prod(lead)) if lead else 1
+        x2 = x.reshape(m, k)
+    else:
+        lead = x.shape[:-1]
+        x2 = x
+    y = ops.mx_gemm_packed(x2, w.codes_packed, w.scales_e8m0,
+                           w.fmt, t3=_fused_t3(qm, role))
+    y = y.reshape(*lead, n).astype(_out_dtype(x, w))
+    return y if b is None else y + b
+
+
+def _fusable_shapes(x: jnp.ndarray, w: PackedWeight) -> bool:
+    if x.shape[-1] != w.shape[-2]:
+        return False
+    if w.ndim == 2:
+        return True
+    # stacked: x (*lead, M, K) against w (*lead, K, N), lead-for-lead
+    return x.ndim == w.ndim and x.shape[:-2] == w.shape[:-2]
+
+
 def qlinear(x: jnp.ndarray, w: jnp.ndarray, b: Optional[jnp.ndarray],
             qm: QuantMode, role: str = "") -> jnp.ndarray:
     """y = Q(x) @ Q(w) + b under the quant mode; plain x@w+b otherwise.
@@ -96,19 +212,48 @@ def qlinear(x: jnp.ndarray, w: jnp.ndarray, b: Optional[jnp.ndarray],
     see core.folding.fold_t3).
 
     ``w`` may be a :class:`repro.kernels.packing.PackedWeight` (artifact
-    serving): it is dequantized here, inside the compiled step, so HBM
-    holds only the 4-bit layout."""
+    serving). Under ``backend='fused'`` it is consumed in its packed HBM
+    layout by the Pallas kernel (T3 fused into the kernel prologue);
+    otherwise it is dequantized here, inside the compiled step, so HBM
+    holds only the 4-bit layout either way."""
+    if _mode_fusable(w, qm, role) and _fusable_shapes(x, w):
+        return _fused_linear(x, w, b, qm, role)
+    on_grid = _packed_on_grid(w, qm)
     w = maybe_dense(w)
-    if qm.t3_block and role == "ffn_down":
+    if _fused_t3(qm, role):
         h = tfm.hadamard_matrix(qm.t3_block, dtype=x.dtype)
         x = tfm.apply_blockwise(x, h)
     if role == "head" and not qm.quantize_head:
         y = x @ w
         return y if b is None else y + b
     xq = _maybe_quant_act(x, qm)
-    wq = _maybe_quant_weight(w, qm)
+    wq = w if on_grid else _maybe_quant_weight(w, qm)
     y = xq @ wq
     return y if b is None else y + b
+
+
+def _parse_expert_spec(spec: str):
+    """Recognize expert-batched einsums of the shape
+    ``(..., E, ..., K), (E, K, N) -> (..., E, ..., N)`` — e.g. the MoE
+    dispatch/combine specs 'gecd,edf->gecf' and 'gecf,efd->gecd'.
+
+    Returns (expert-axis position in the activation, activation rank the
+    spec demands), or None if the spec does not match the packed-kernel
+    contract. Callers must also check the actual x rank so the fused path
+    rejects exactly what the reference einsum would reject."""
+    try:
+        ins, out = spec.replace(" ", "").split("->")
+        in1, in2 = ins.split(",")
+    except ValueError:
+        return None
+    if len(in2) != 3 or len(set(in1)) != len(in1):
+        return None
+    e, k, n = in2
+    if in1[-1] != k or e not in in1[:-1] or n in in1:
+        return None
+    if out != in1[:-1] + n:
+        return None
+    return in1.index(e), len(in1)
 
 
 def qeinsum(spec: str, x: jnp.ndarray, w: jnp.ndarray,
@@ -117,11 +262,31 @@ def qeinsum(spec: str, x: jnp.ndarray, w: jnp.ndarray,
 
     Activation is quantized along its last axis; the weight along the
     einsum contraction axis (assumed to be its second-to-last axis).
-    ``w`` may be a PackedWeight (see :func:`qlinear`)."""
+    ``w`` may be a PackedWeight (see :func:`qlinear`): under
+    ``backend='fused'`` the expert axis becomes a vmap (leading grid) axis
+    of the packed-native kernel."""
+    if _mode_fusable(w, qm, role) and w.ndim == 3:
+        parsed = _parse_expert_spec(spec)
+        if parsed is not None:
+            e_pos, x_rank = parsed
+        if (parsed is not None and x.ndim == x_rank
+                and x.shape[e_pos] == w.shape[0]
+                and x.shape[-1] == w.shape[-2]):
+            xe = jnp.moveaxis(x, e_pos, 0)           # (E, *rest, K)
+            rest = xe.shape[1:-1]
+            m = int(np.prod(rest)) if rest else 1
+            y = ops.mx_gemm_packed(
+                xe.reshape(w.shape[0], m, w.shape[-2]),
+                w.codes_packed, w.scales_e8m0, w.fmt,
+                t3=_fused_t3(qm, role))
+            y = y.reshape(w.shape[0], *rest, w.shape[-1])
+            y = jnp.moveaxis(y, 0, e_pos).astype(_out_dtype(x, w))
+            return y
+    on_grid = _packed_on_grid(w, qm)
     w = maybe_dense(w)
-    if qm.t3_block and role == "ffn_down":
+    if _fused_t3(qm, role):
         h = tfm.hadamard_matrix(qm.t3_block, dtype=x.dtype)
         x = tfm.apply_blockwise(x, h)
     xq = _maybe_quant_act(x, qm)
-    wq = _maybe_quant_weight(w, qm)
+    wq = w if on_grid else _maybe_quant_weight(w, qm)
     return jnp.einsum(spec, xq, wq)

@@ -24,6 +24,7 @@ Volume regularizer (Eq. 7, stable log form): L_vol = (Σ_i log|s_i|)².
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Dict
 
 import jax
@@ -37,16 +38,24 @@ Params = Dict[str, Any]
 # Hadamard / orthogonal constructions
 # ---------------------------------------------------------------------------
 
-def hadamard_matrix(n: int, dtype=jnp.float32) -> jnp.ndarray:
-    """Sylvester-construction Hadamard matrix, scaled to be orthogonal.
-
-    Requires n to be a power of two (all our widths/blocks are)."""
+@functools.lru_cache(maxsize=None)
+def _hadamard_np(n: int) -> np.ndarray:
+    """Sylvester construction, cached: the np.block doubling loop runs once
+    per size instead of on every ffn_down call (T3 is on the serving hot
+    path — decode rebuilds it every step otherwise)."""
     if n & (n - 1) != 0:
         raise ValueError(f"Hadamard size must be a power of 2, got {n}")
     h = np.array([[1.0]])
     while h.shape[0] < n:
         h = np.block([[h, h], [h, -h]])
-    return jnp.asarray(h / np.sqrt(n), dtype=dtype)
+    return h / np.sqrt(n)
+
+
+def hadamard_matrix(n: int, dtype=jnp.float32) -> jnp.ndarray:
+    """Sylvester-construction Hadamard matrix, scaled to be orthogonal.
+
+    Requires n to be a power of two (all our widths/blocks are)."""
+    return jnp.asarray(_hadamard_np(n), dtype=dtype)
 
 
 def random_hadamard(key: jax.Array, n: int, dtype=jnp.float32) -> jnp.ndarray:

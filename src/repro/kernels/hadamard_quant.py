@@ -22,16 +22,22 @@ from repro.core import transforms as tfm
 from .mx_quant import MXBLOCK, _format_consts, _quant_tile
 
 
+def _rotate_tile(xb, h):
+    """(BM, nb, 32) blocked tile · blockdiag(H₃₂) in one MXU pass:
+    reshape to (BM·nb, 32) and right-multiply by the (32, 32) block.
+    Shared with the fused T3-prologue GEMM in :mod:`mx_matmul`."""
+    bm, nb, b = xb.shape
+    yb = jnp.dot(xb.reshape(-1, b), h, preferred_element_type=jnp.float32)
+    return yb.reshape(bm, nb, b)
+
+
 def _hadamard_quant_kernel(x_ref, h_ref, codes_ref, scales_ref, *, fmt):
     grid, mids, r_max, center = _format_consts(fmt)
     x = x_ref[...].astype(jnp.float32)
     bm, bk = x.shape
     h = h_ref[...].astype(jnp.float32)            # (32, 32)
     xb = x.reshape(bm, bk // MXBLOCK, MXBLOCK)
-    # one MXU pass: (BM * BK/32, 32) @ (32, 32)
-    yb = jnp.dot(xb.reshape(-1, MXBLOCK), h,
-                 preferred_element_type=jnp.float32)
-    yb = yb.reshape(bm, bk // MXBLOCK, MXBLOCK)
+    yb = _rotate_tile(xb, h)
     codes, scale = _quant_tile(yb, grid, mids, r_max, center)
     codes_ref[...] = codes.reshape(bm, bk).astype(jnp.uint8)
     scales_ref[...] = scale.astype(jnp.float32)

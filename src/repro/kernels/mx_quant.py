@@ -31,6 +31,19 @@ def _format_consts(fmt: str):
     return grid, mids, el.r_max, len(el.grid) - 1  # center code
 
 
+def _decode_tile(codes, grid, center):
+    """uint8 symmetric code -> float value, via static compares (the grid
+    has <= 8 magnitudes; Pallas forbids captured jnp LUT constants).
+    Shared by every GEMM kernel variant that dequantizes codes in-tile."""
+    rel = codes.astype(jnp.int32) - center
+    sign = jnp.where(rel < 0, -1.0, 1.0).astype(jnp.float32)
+    k = jnp.abs(rel)
+    val = jnp.zeros(codes.shape, jnp.float32)
+    for i, g in enumerate(grid):                  # static python loop
+        val += jnp.where(k == i, float(g), 0.0)
+    return sign * val
+
+
 def _quant_tile(xb, grid, mids, r_max, center):
     """xb: (BM, nb, 32) f32 -> (codes int32, scales f32 (BM, nb))."""
     amax = jnp.max(jnp.abs(xb), axis=-1)

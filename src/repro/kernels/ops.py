@@ -39,8 +39,32 @@ def t3_quantize(x, fmt: str = "mxfp4", interpret: bool | None = None):
     return _hq.hadamard_quant(x, fmt, interpret=it)
 
 
+@functools.partial(jax.jit, static_argnames=("fmt", "t3", "interpret"))
+def mx_gemm_packed(x, w_packed, w_scales_e8m0, fmt: str = "mxfp4",
+                   t3: bool = False, interpret: bool | None = None):
+    """Packed-native fused MX GEMM over the HBM layout (PackedWeight
+    arrays): nibble-packed codes + E8M0 scale bytes in, fp32 out.
+
+    2-D: x (M, K), w_packed (K//2, N), scales (K//32, N).
+    Stacked (layer- or expert-batched) weights carry leading batch dims on
+    all three operands and are mapped with ``jax.vmap`` (a leading grid
+    axis on TPU); x must then be (*lead, M, K).
+    """
+    it = _default_interpret() if interpret is None else interpret
+    fn = functools.partial(_mm.mx_matmul_packed, fmt=fmt, t3=t3,
+                           interpret=it)
+    lead = w_packed.ndim - 2
+    if x.ndim != lead + 2:
+        raise ValueError(f"x rank {x.ndim} does not match weight batch "
+                         f"rank {w_packed.ndim}")
+    for _ in range(lead):
+        fn = jax.vmap(fn)
+    return fn(x, w_packed, w_scales_e8m0)
+
+
 # re-exported oracles
 mx_quant_ref = ref.mx_quant_ref
 mx_matmul_ref = ref.mx_matmul_ref
+mx_matmul_packed_ref = ref.mx_matmul_packed_ref
 hadamard_quant_ref = ref.hadamard_quant_ref
 quantize_weight_for_kernel = ref.quantize_weight_for_kernel

@@ -116,10 +116,12 @@ class PackedWeight:
 
     The codes/scales are pytree children (they flow through jit/scan and
     are layer-sliced like any stacked leaf); fmt and target dtype are
-    static aux data. ``qlinear``/``qeinsum`` call :func:`maybe_dense` so
-    a params tree holding PackedWeight leaves serves directly: HBM keeps
-    the 4-bit layout and the fp weight exists only transiently inside
-    the compiled step.
+    static aux data. A params tree holding PackedWeight leaves serves
+    directly: under ``QuantMode(backend='fused')`` ``qlinear``/``qeinsum``
+    hand the codes/scales straight to the packed-native Pallas GEMM (no
+    dense weight ever materialized); on the reference path they call
+    :func:`maybe_dense`, so HBM keeps the 4-bit layout and the fp weight
+    exists only transiently inside the compiled step.
     """
 
     codes_packed: jnp.ndarray   # (*lead, K//2, N) uint8
@@ -147,6 +149,15 @@ class PackedWeight:
     @property
     def nbytes_packed(self) -> int:
         return int(self.codes_packed.size) + int(self.scales_e8m0.size)
+
+    @property
+    def nbytes_dense(self) -> int:
+        """Byte count of the dense fp equivalent — the HBM traffic a
+        non-packed weight would cost per use (bench/roofline term)."""
+        n = 1
+        for s in self.shape:
+            n *= int(s)
+        return n * jnp.dtype(self.dtype).itemsize
 
     def to_dense(self, dtype=None) -> jnp.ndarray:
         return unpack_weight(

@@ -43,6 +43,28 @@ def hadamard_quant_ref(x: jnp.ndarray, fmt: str = "mxfp4",
     return mx_quant_ref(y, fmt, block)
 
 
+def mx_matmul_packed_ref(x: jnp.ndarray, w_packed: jnp.ndarray,
+                         w_scales_e8m0: jnp.ndarray, fmt: str = "mxfp4",
+                         t3: bool = False) -> jnp.ndarray:
+    """Oracle for the packed-native fused GEMM (both kernel layouts share
+    this source of truth).
+
+    x: (M, K) float; w_packed: (K//2, N) uint8 nibble-packed codes;
+    w_scales_e8m0: (K//32, N) uint8 E8M0 scale bytes. t3=True applies the
+    online block-Hadamard to x before quantization (ffn_down role).
+    y = Q_mx(T3?(x)) @ dequant(w), fp32 accumulation.
+    """
+    from repro.kernels import packing
+    codes = packing.unpack_codes(jnp.swapaxes(w_packed, -1, -2))
+    codes = jnp.swapaxes(codes, -1, -2)                  # (K, N)
+    scales = packing.unpack_scales_e8m0(w_scales_e8m0)   # (K//32, N) f32
+    xf = x.astype(jnp.float32)
+    if t3:
+        h = tfm.hadamard_matrix(32, dtype=jnp.float32)
+        xf = tfm.apply_blockwise(xf, h)
+    return mx_matmul_ref(xf, codes, scales, fmt)
+
+
 def quantize_weight_for_kernel(w: jnp.ndarray, fmt: str = "mxfp4",
                                block: int = 32):
     """Pre-quantize a (K, N) weight along K into kernel layout:

@@ -33,6 +33,10 @@ def main():
                     help="export the PTQ result as a packed artifact")
     ap.add_argument("--eager", action="store_true",
                     help="with --artifact: dequantize weights at load")
+    ap.add_argument("--backend", default="ref", choices=("ref", "fused"),
+                    help="matmul execution backend: 'fused' routes packed "
+                         "weights through the Pallas MX kernels "
+                         "(interpret-mode off-TPU: correctness only)")
     args = ap.parse_args()
 
     import jax
@@ -49,15 +53,17 @@ def main():
         t0 = time.time()
         eng = Engine.from_artifact(
             args.artifact, batch_size=args.batch,
-            max_len=args.prompt_len + args.max_new + 16, eager=args.eager)
+            max_len=args.prompt_len + args.max_new + 16, eager=args.eager,
+            backend=args.backend)
         print(f"loaded artifact {args.artifact} in {time.time()-t0:.1f}s "
               f"({'eager' if args.eager else 'packed-lazy'} weights, "
-              f"no re-quantization)")
+              f"backend={args.backend}, no re-quantization)")
         stats = eng.throughput(n_requests=args.requests,
                                prompt_len=args.prompt_len,
                                max_new=args.max_new)
         print(f"served {stats['tokens']} tokens in {stats['seconds']:.2f}s "
-              f"-> {stats['tok_per_s']:.1f} tok/s")
+              f"-> {stats['tok_per_s']:.1f} tok/s "
+              f"({stats['prefill_compiles']} prefill compiles)")
         return
 
     cfg = (configs.get_reduced(args.arch) if args.reduced
@@ -85,7 +91,8 @@ def main():
         print(f"exported artifact -> {out}")
 
     eng = Engine(res.params, cfg, res.qm, batch_size=args.batch,
-                 max_len=args.prompt_len + args.max_new + 16)
+                 max_len=args.prompt_len + args.max_new + 16,
+                 backend=args.backend)
     stats = eng.throughput(n_requests=args.requests,
                            prompt_len=args.prompt_len,
                            max_new=args.max_new)

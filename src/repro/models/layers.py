@@ -264,7 +264,12 @@ def flash_attention(q, k, v, *, causal, window, chunk, q_pos=None):
 def gated_mlp(x: jnp.ndarray, wg, wu, wd, qm: QuantMode,
               act: str = "silu", bg=None, bu=None, bd=None) -> jnp.ndarray:
     """SwiGLU / GeGLU: down( act(x@wg) * (x@wu) ). Optional biases appear
-    after transformation folding (Eq. 30)."""
+    after transformation folding (Eq. 30).
+
+    Weights may be PackedWeight leaves: under ``qm.backend='fused'`` all
+    three projections run packed-native, and the down projection's online
+    T3 block-Hadamard is folded into the GEMM kernel's activation-quantize
+    prologue instead of a separate rotate pass over the d_ff stream."""
     g = qlinear(x, wg, bg, qm, "ffn_in")
     u = qlinear(x, wu, bu, qm, "ffn_in")
     fn = jax.nn.silu if act == "silu" else jax.nn.gelu

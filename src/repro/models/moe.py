@@ -70,6 +70,11 @@ def capacity(cfg: ArchConfig, tokens_per_group: int) -> int:
 def moe_ffn(x, p, cfg: ArchConfig, qm: QuantMode):
     """x: (B, S, d) -> (B, S, d) routed expert mix (+ shared experts).
 
+    Expert weights may be expert-stacked PackedWeight leaves ((E, d, f)
+    after the layer scan slices L away): under ``qm.backend='fused'`` the
+    qeinsum dispatcher maps the packed-native GEMM kernel over the expert
+    axis, so expert weights stay 4-bit end to end.
+
     Returns (y, aux) with aux = (load_balance_loss, router_z_loss)."""
     B, S, d = x.shape
     E, K = cfg.n_experts, cfg.top_k

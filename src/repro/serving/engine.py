@@ -38,16 +38,32 @@ class Engine:
     """``params`` may hold dense arrays or packed-HBM ``PackedWeight``
     leaves (artifact serving, see :meth:`from_artifact`): the quantized
     execution path dequantizes packed weights lazily inside the compiled
-    prefill/decode steps."""
+    prefill/decode steps — or, with ``backend='fused'``, consumes the
+    packed layout directly in the Pallas MX GEMM kernels (see
+    ``core.quantize``)."""
 
     def __init__(self, params, cfg: ArchConfig, qm: QuantMode,
-                 batch_size: int = 4, max_len: int = 256):
+                 batch_size: int = 4, max_len: int = 256,
+                 backend: str | None = None,
+                 bucket_prompts: bool = True):
+        """bucket_prompts=True rounds each wave's prompt length up to the
+        attention chunk so distinct lengths reuse one prefill compile.
+        Bucketed pads are left-pad tokens and are attended like the
+        engine's existing ragged-wave pads (static batching, no per-row
+        masks) — pass False for unpadded, per-length compiles."""
         if cfg.family == "encoder":
             raise ValueError("encoder archs are not served autoregressively")
+        if backend is not None:
+            qm = qm.with_backend(backend)
         self.params, self.cfg, self.qm = params, cfg, qm
         self.B = batch_size
+        self.bucket_prompts = bucket_prompts
         chunk = cfg.attn_chunk
         self.max_len = (max_len + chunk - 1) // chunk * chunk
+        # compile accounting: one prefill compile per distinct (B, S)
+        # wave shape — bucketing in _wave keeps this set small
+        self._prefill_shapes: set = set()
+        self.prefill_compiles = 0
 
         def prefill(params, toks):
             return api.prefill(params, cfg, toks, qm, max_len=self.max_len)
@@ -61,15 +77,20 @@ class Engine:
 
     @classmethod
     def from_artifact(cls, path, batch_size: int = 4, max_len: int = 256,
-                      eager: bool = False, verify: bool = True) -> "Engine":
+                      eager: bool = False, verify: bool = True,
+                      backend: str | None = None) -> "Engine":
         """Serve directly from an exported artifact directory: no
         calibration, no re-quantization — load packed bytes and go.
 
         eager=False keeps quantized weights 4-bit packed in HBM
         (dequantized per layer inside the compiled step); eager=True
-        materializes dense fp weights once at load."""
+        materializes dense fp weights once at load. backend='fused'
+        routes the quantized matmuls through the packed-native Pallas
+        kernels (requires eager=False to have any effect — eager loads
+        are dense and fall back to the reference path)."""
         from repro.artifacts import load_artifact
-        params, cfg, qm = load_artifact(path, eager=eager, verify=verify)
+        params, cfg, qm = load_artifact(path, eager=eager, verify=verify,
+                                        backend=backend)
         return cls(params, cfg, qm, batch_size=batch_size, max_len=max_len)
 
     def generate(self, requests: List[Request]) -> List[Request]:
@@ -80,21 +101,42 @@ class Engine:
             out.extend(self._wave(requests[i:i + self.B]))
         return out
 
+    def _bucket_len(self, s: int, max_new: int) -> int:
+        """Round a wave's prompt length up to the attention chunk so the
+        jitted prefill compiles once per bucket, not once per distinct
+        prompt length. Buckets only when the decode budget still fits in
+        the cache (otherwise the raw length is kept — old behavior).
+
+        Bucketed waves are left-padded further than strictly needed; pads
+        share the engine's existing ragged-wave semantics (left-pad tokens
+        are attended — static batching, no per-row masks). Disable with
+        ``Engine(..., bucket_prompts=False)``."""
+        if not self.bucket_prompts:
+            return s
+        chunk = self.cfg.attn_chunk
+        sb = (s + chunk - 1) // chunk * chunk
+        while sb > s and sb + max_new > self.max_len:
+            sb -= chunk
+        return max(sb, s)
+
     def _wave(self, reqs: List[Request]) -> List[Request]:
         t0 = time.time()
         B = len(reqs)
-        S = max(len(r.prompt) for r in reqs)
+        max_new = max(r.max_new for r in reqs)
+        S = self._bucket_len(max(len(r.prompt) for r in reqs), max_new)
         toks = np.zeros((B, S), np.int32)
         for i, r in enumerate(reqs):
             toks[i, S - len(r.prompt):] = r.prompt  # left-pad
 
+        if (B, S) not in self._prefill_shapes:
+            self._prefill_shapes.add((B, S))
+            self.prefill_compiles += 1
         last_logits, cache = self._prefill(self.params, jnp.asarray(toks))
         nxt = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
         # accumulate sampled tokens on device; one host transfer at the end
         # (a per-step np.asarray would sync the dispatch pipeline every
         # decode step)
         toks_dev = [nxt]
-        max_new = max(r.max_new for r in reqs)
         pos = S
         for _ in range(max_new - 1):
             nxt, cache = self._decode(self.params, cache, nxt,
@@ -120,4 +162,6 @@ class Engine:
         dt = time.time() - t0
         toks = sum(len(r.out) for r in done)
         rate = toks / dt if dt > 0 else float("inf")  # clock can tick 0
-        return {"tokens": toks, "seconds": dt, "tok_per_s": rate}
+        return {"tokens": toks, "seconds": dt, "tok_per_s": rate,
+                "prefill_compiles": self.prefill_compiles,
+                "backend": self.qm.backend}

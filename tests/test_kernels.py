@@ -67,6 +67,72 @@ def test_mx_matmul_quant_error_bounded():
     assert rel < 0.2, rel
 
 
+@pytest.mark.parametrize("mkn", [(8, 32, 16), (64, 128, 64),
+                                 (128, 512, 256), (72, 96, 40)])
+@pytest.mark.parametrize("fmt", FMTS)
+@pytest.mark.parametrize("t3", [False, True])
+def test_mx_matmul_packed_matches_ref(mkn, fmt, t3):
+    """Packed-native kernel (nibble codes + E8M0 bytes) vs its oracle."""
+    from repro.kernels import packing
+    m, k, n = mkn
+    x = _data((m, k), jnp.float32, seed=8)
+    w = _data((k, n), jnp.float32, seed=9, outliers=False) * 0.3
+    b = packing.pack_weight(w, fmt)
+    y = ops.mx_gemm_packed(x, b["codes_packed"], b["scales_e8m0"], fmt,
+                           t3=t3, interpret=True)
+    yr = ops.mx_matmul_packed_ref(x, b["codes_packed"], b["scales_e8m0"],
+                                  fmt, t3=t3)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=1e-4, rtol=1e-5)
+
+
+def test_mx_matmul_packed_layouts_agree():
+    """Both weight layouts (uint8-per-code and nibble-packed) compute the
+    same GEMM: the shared golden reference ties them together."""
+    from repro.kernels import packing
+    x = _data((16, 64), jnp.float32, seed=10)
+    w = _data((64, 32), jnp.float32, seed=11, outliers=False) * 0.3
+    wc, ws = ops.quantize_weight_for_kernel(w, "mxfp4")
+    b = packing.pack_weight(w, "mxfp4")
+    y_u8 = ops.mx_gemm(x, wc, ws, "mxfp4", interpret=True)
+    y_pk = ops.mx_gemm_packed(x, b["codes_packed"], b["scales_e8m0"],
+                              "mxfp4", interpret=True)
+    np.testing.assert_allclose(np.asarray(y_pk), np.asarray(y_u8),
+                               atol=1e-5, rtol=1e-6)
+
+
+def test_mx_matmul_packed_t3_equals_separate_rotate():
+    """The fused T3 prologue == hadamard rotate outside, then plain GEMM."""
+    from repro.core import transforms as tfm
+    from repro.kernels import packing
+    x = _data((8, 96), jnp.float32, seed=12)
+    w = _data((96, 32), jnp.float32, seed=13, outliers=False) * 0.3
+    b = packing.pack_weight(w, "mxfp4")
+    h = tfm.hadamard_matrix(32, dtype=jnp.float32)
+    xr = tfm.apply_blockwise(x, h)
+    y_sep = ops.mx_gemm_packed(xr, b["codes_packed"], b["scales_e8m0"],
+                               "mxfp4", interpret=True)
+    y_fus = ops.mx_gemm_packed(x, b["codes_packed"], b["scales_e8m0"],
+                               "mxfp4", t3=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(y_fus), np.asarray(y_sep),
+                               atol=1e-4, rtol=1e-5)
+
+
+def test_mx_matmul_packed_stacked_vmap():
+    """Leading (layer/expert) axes map over the kernel."""
+    from repro.kernels import packing
+    x = _data((3, 8, 64), jnp.float32, seed=14)
+    w = _data((3, 64, 16), jnp.float32, seed=15, outliers=False) * 0.3
+    b = packing.pack_weight(w, "mxfp4")
+    y = ops.mx_gemm_packed(x, b["codes_packed"], b["scales_e8m0"],
+                           "mxfp4", interpret=True)
+    for i in range(3):
+        yr = ops.mx_matmul_packed_ref(x[i], b["codes_packed"][i],
+                                      b["scales_e8m0"][i], "mxfp4")
+        np.testing.assert_allclose(np.asarray(y[i]), np.asarray(yr),
+                                   atol=1e-4, rtol=1e-5)
+
+
 def test_gemm_bf16_inputs():
     x = _data((32, 128), jnp.bfloat16, seed=6)
     w = _data((128, 32), jnp.float32, seed=7, outliers=False) * 0.3
