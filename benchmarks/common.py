@@ -103,12 +103,14 @@ def timed(fn, *args, reps=3, warmup=1):
     return min(ts)
 
 
-def emit(rows, name):
+def emit(rows, name, persist: bool = True):
     """Print the required ``name,us_per_call,derived`` CSV rows and persist
-    the full records."""
-    outdir = pathlib.Path("experiments/benchmarks")
-    outdir.mkdir(parents=True, exist_ok=True)
-    (outdir / f"{name}.json").write_text(json.dumps(rows, indent=1))
+    the full records. persist=False (CI --smoke runs) skips the JSON write
+    so toy shapes never overwrite the tracked perf-trajectory records."""
+    if persist:
+        outdir = pathlib.Path("experiments/benchmarks")
+        outdir.mkdir(parents=True, exist_ok=True)
+        (outdir / f"{name}.json").write_text(json.dumps(rows, indent=1))
     for r in rows:
         us = r.get("us_per_call", 0.0)
         print(f"{r['name']},{us:.1f},{r.get('derived', '')}")

@@ -37,6 +37,24 @@ def run(log=print):
                      "us_per_call": 1e6 / max(tps, 1e-9),
                      "derived": f"tok_per_s={tps:.1f};rel={tps/base:.3f}",
                      "tok_per_s": tps})
+    # scheduler comparison on the LATMiX path: mixed-length traffic, wave
+    # vs continuous batching (same requests, token-identical outputs per
+    # request; the deep-dive lives in benchmarks/serving_bench.py)
+    from .serving_bench import bench_scheduler, mixed_requests
+    sched_stats = {}
+    for sched in ("wave", "continuous"):
+        reqs = mixed_requests(cfg, 16, seed=0, len_range=(8, 48),
+                              new_range=(4, 24))
+        r = bench_scheduler(params, cfg, QuantMode.mxfp4(t3=True), sched,
+                            reqs, batch=4, max_len=96)
+        sched_stats[sched] = r
+        log(f"[fig4] sched_{sched:11s} {r['tok_per_s']:9.1f} tok/s "
+            f"(decode utilization {r['decode_utilization']:.3f})")
+        rows.append({"name": f"fig4_sched_{sched}",
+                     "us_per_call": 1e6 / max(r["tok_per_s"], 1e-9),
+                     "derived": (f"tok_per_s={r['tok_per_s']:.1f};"
+                                 f"util={r['decode_utilization']:.3f}")})
+
     # isolated T3 cost: one online block-Hadamard over a d_ff activation
     x = jax.random.normal(jax.random.PRNGKey(0), (512, cfg.d_ff))
     h = tfm.hadamard_matrix(32)

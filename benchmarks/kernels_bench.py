@@ -140,8 +140,9 @@ def run(log=print, smoke: bool = False):
     for r in rows:
         log(f"[kernels] {r['name']:42s} {r['us_per_call']:10.1f}us "
             f"{r['derived']}")
-    common.emit(rows, "kernels_bench")
-    if not smoke:  # smoke shapes would pollute the perf trajectory
+    # smoke shapes would pollute the perf trajectory (both JSONs)
+    common.emit(rows, "kernels_bench", persist=not smoke)
+    if not smoke:
         (ROOT / "BENCH_kernels.json").write_text(json.dumps(rows, indent=1))
     return rows
 

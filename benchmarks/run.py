@@ -11,15 +11,15 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma-separated subset: fig2,table1,table2,"
-                         "table3,table8,fig4,kernels,roofline")
+                         "table3,table8,fig4,kernels,serving,roofline")
     ap.add_argument("--fast", action="store_true",
                     help="fewer transform-learning steps")
     args = ap.parse_args()
     wanted = set(args.only.split(",")) if args.only else None
 
     from . import (fig2_mse, fig4_throughput, kernels_bench,
-                   roofline_report, table1_methods, table2_granularity,
-                   table3_invariance, table8_ablations)
+                   roofline_report, serving_bench, table1_methods,
+                   table2_granularity, table3_invariance, table8_ablations)
 
     benches = [
         ("fig2", fig2_mse.run, {}),
@@ -32,6 +32,7 @@ def main() -> None:
          {"steps": 30} if args.fast else {}),
         ("fig4", fig4_throughput.run, {}),
         ("kernels", kernels_bench.run, {}),
+        ("serving", serving_bench.run, {}),
         ("roofline", roofline_report.run, {}),
     ]
     print("name,us_per_call,derived")

@@ -3,11 +3,18 @@ targets — LATMiX-folded weights, online T3 block-Hadamard, MX fake-quant
 matmuls, batched KV-cache decode.
 
     PYTHONPATH=src python examples/serve.py [--quant mxfp4|off] [--batch 4]
+        [--scheduler wave|continuous]
 
 Pass --artifact DIR to skip PTQ entirely and serve a packed artifact
 exported earlier (examples/latmix_ptq.py --export or
 `python -m repro.artifacts export`): weights load 4-bit packed and are
 dequantized lazily per layer inside the compiled step.
+
+--scheduler continuous switches the engine to the slot-pool
+continuous-batching scheduler (chunked prefill, per-slot decode positions
+— see docs/serving.md) and demonstrates the streaming submission API:
+requests are submitted one by one and tokens stream back per step via
+``Request.on_token`` while other requests are still decoding.
 """
 import argparse
 
@@ -33,14 +40,20 @@ def main():
                     help="serve a packed artifact directory (skips PTQ)")
     ap.add_argument("--eager", action="store_true",
                     help="with --artifact: dequantize all weights at load")
+    ap.add_argument("--scheduler", default="wave",
+                    choices=("wave", "continuous"),
+                    help="static waves or continuous batching "
+                         "(docs/serving.md)")
     args = ap.parse_args()
 
     if args.artifact:
         eng = Engine.from_artifact(args.artifact, batch_size=args.batch,
-                                   max_len=128, eager=args.eager)
+                                   max_len=128, eager=args.eager,
+                                   scheduler=args.scheduler)
         cfg = eng.cfg
         print(f"serving artifact {args.artifact} "
-              f"({'eager' if args.eager else 'packed-lazy'} weights)")
+              f"({'eager' if args.eager else 'packed-lazy'} weights, "
+              f"scheduler={args.scheduler})")
         _run(eng, cfg, args)
         return
 
@@ -65,25 +78,47 @@ def main():
         qm = (QuantMode.mxfp4(t3=False) if args.quant == "mxfp4"
               else QuantMode.mxint4(t3=False))
 
-    eng = Engine(params, cfg, qm, batch_size=args.batch, max_len=128)
+    eng = Engine(params, cfg, qm, batch_size=args.batch, max_len=128,
+                 scheduler=args.scheduler)
     _run(eng, cfg, args)
 
 
 def _run(eng, cfg, args):
     rng = np.random.default_rng(0)
-    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, 16)
-                    .astype(np.int32), max_new=args.new)
-            for _ in range(args.batch * 2)]
-    done = eng.generate(reqs)
-    for i, r in enumerate(done):
-        print(f"req{i}: prompt[-4:]={list(r.prompt[-4:])} "
-              f"-> out[:8]={list(r.out[:8])} "
-              f"({len(r.out)} tokens in {r.t_done-r.t_submit:.2f}s)")
+    # mixed-length traffic: the regime where continuous batching wins
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, 8 + 5 * i)
+                    .astype(np.int32),
+                    max_new=max(4, args.new - 3 * i))
+            for i in range(args.batch * 2)]
+
+    if eng.scheduler == "continuous":
+        # streaming submission: enqueue everything, then step the
+        # scheduler and watch tokens stream back per slot
+        streamed = {i: [] for i in range(len(reqs))}
+        done = []
+        for i, r in enumerate(reqs):
+            r.on_token = streamed[i].append
+            eng.submit(r)
+        while len(done) < len(reqs):
+            done.extend(eng.step())   # one admission + decode step
+        for i, r in enumerate(reqs):
+            assert list(r.out) == streamed[i]
+            print(f"req{i}: prompt={len(r.prompt)}t -> streamed "
+                  f"{len(streamed[i])} tokens, out[:6]={streamed[i][:6]}")
+    else:
+        done = eng.generate(reqs)
+        for i, r in enumerate(done):
+            print(f"req{i}: prompt[-4:]={list(r.prompt[-4:])} "
+                  f"-> out[:8]={list(r.out[:8])} "
+                  f"({len(r.out)} tokens in {r.t_done-r.t_submit:.2f}s)")
+
     stats = eng.throughput(n_requests=args.batch, prompt_len=16,
                            max_new=args.new)
     src = (f"artifact {args.artifact}" if args.artifact
            else f"{args.quant}{' + LATMiX' if args.latmix else ''}")
-    print(f"\nthroughput: {stats['tok_per_s']:.1f} tok/s ({src})")
+    print(f"\nthroughput: {stats['tok_per_s']:.1f} tok/s ({src}, "
+          f"scheduler={stats['scheduler']}, "
+          f"decode utilization {stats['decode_utilization']:.2f})")
 
 
 if __name__ == "__main__":

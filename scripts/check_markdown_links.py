@@ -1,0 +1,134 @@
+#!/usr/bin/env python
+"""Markdown link-and-anchor checker (stdlib only; wired into CI).
+
+    python scripts/check_markdown_links.py README.md ROADMAP.md docs
+
+For every ``[text](target)`` in the given markdown files (directories
+are scanned recursively for ``*.md``):
+
+  * relative file targets must exist on disk,
+  * ``#anchor`` fragments (bare or on a relative .md target) must match
+    a heading in the target file, using GitHub's slugging rules
+    (lowercase, punctuation stripped, spaces -> hyphens, duplicate
+    slugs suffixed -1, -2, ...),
+  * absolute URLs (http/https/mailto) are skipped — CI must not depend
+    on the network.
+
+Fenced code blocks and inline code spans are ignored. Exit code 1 and
+one ``file:line: message`` per problem on failure.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+HEADING_RE = re.compile(r"^(#{1,6})\s+(.*?)\s*#*\s*$")
+FENCE_RE = re.compile(r"^(```|~~~)")
+CODE_SPAN_RE = re.compile(r"`[^`]*`")
+EXTERNAL = ("http://", "https://", "mailto:", "ftp://")
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug for a heading line (markdown stripped)."""
+    s = re.sub(r"`([^`]*)`", r"\1", heading)           # code spans
+    s = re.sub(r"!?\[([^\]]*)\]\([^)]*\)", r"\1", s)   # links -> text
+    s = re.sub(r"[*_]", "", s)                         # emphasis markers
+    s = s.strip().lower()
+    s = re.sub(r"[^\w\- ]", "", s)                     # punctuation
+    return s.replace(" ", "-")
+
+
+def heading_slugs(path: pathlib.Path) -> set:
+    """All anchor slugs a markdown file exposes (duplicates suffixed)."""
+    counts: dict = {}
+    slugs = set()
+    in_fence = False
+    for line in path.read_text().splitlines():
+        if FENCE_RE.match(line.strip()):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = HEADING_RE.match(line)
+        if not m:
+            continue
+        base = github_slug(m.group(2))
+        n = counts.get(base, 0)
+        counts[base] = n + 1
+        slugs.add(base if n == 0 else f"{base}-{n}")
+    return slugs
+
+
+def iter_links(path: pathlib.Path):
+    """Yield (lineno, target) for every markdown link outside code."""
+    in_fence = False
+    for lineno, line in enumerate(path.read_text().splitlines(), 1):
+        if FENCE_RE.match(line.strip()):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for m in LINK_RE.finditer(CODE_SPAN_RE.sub("``", line)):
+            yield lineno, m.group(1)
+
+
+def check_file(path: pathlib.Path, slug_cache: dict) -> list:
+    problems = []
+
+    def slugs_of(p: pathlib.Path) -> set:
+        key = p.resolve()
+        if key not in slug_cache:
+            slug_cache[key] = heading_slugs(p)
+        return slug_cache[key]
+
+    for lineno, target in iter_links(path):
+        if target.startswith(EXTERNAL):
+            continue
+        frag = None
+        if "#" in target:
+            target, frag = target.split("#", 1)
+        if target:
+            dest = (path.parent / target).resolve()
+            if not dest.exists():
+                problems.append(f"{path}:{lineno}: broken link -> {target}")
+                continue
+        else:
+            dest = path.resolve()
+        if frag is not None:
+            if dest.is_dir() or dest.suffix.lower() != ".md":
+                problems.append(
+                    f"{path}:{lineno}: anchor on non-markdown target "
+                    f"-> {target}#{frag}")
+            elif frag not in slugs_of(dest):
+                problems.append(
+                    f"{path}:{lineno}: missing anchor -> "
+                    f"{target or path.name}#{frag}")
+    return problems
+
+
+def main(argv) -> int:
+    files = []
+    for arg in argv or ["README.md", "ROADMAP.md", "docs"]:
+        p = pathlib.Path(arg)
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.md")))
+        elif p.exists():
+            files.append(p)
+        else:
+            print(f"{arg}: no such file or directory", file=sys.stderr)
+            return 1
+    slug_cache: dict = {}
+    problems = []
+    for f in files:
+        problems.extend(check_file(f, slug_cache))
+    for msg in problems:
+        print(msg, file=sys.stderr)
+    print(f"checked {len(files)} markdown files: "
+          f"{'OK' if not problems else f'{len(problems)} problem(s)'}")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -104,7 +104,13 @@ def quant_mode_from_json(d: dict) -> QuantMode:
 
 def export_artifact(result, cfg: ArchConfig, out_dir, *,
                     extra: dict | None = None) -> pathlib.Path:
-    """Write ``result`` (a PTQResult) as an artifact directory.
+    """Write ``result`` (a PTQResult) as an artifact directory and return
+    its path. The on-disk layout is specified in docs/artifact-format.md:
+    every quantized (K, N)-contraction weight becomes uint8
+    "<key>.codes" (K//2, N) + "<key>.scales" (K//32, N) in weights.npz;
+    every other leaf keeps its logical dtype in aux.npz; manifest.json
+    records shapes, dtypes, sha256 content hashes, and byte totals.
+    The write is atomic (tmp dir + rename).
 
     Raises ArtifactError if the result is unquantized ('fp' teacher), the
     format is not 4-bit packable, or any supposedly-quantized weight is
@@ -243,12 +249,19 @@ def _read_arrays(root: pathlib.Path, man: Manifest,
 def load_artifact(path, *, eager: bool = False, verify: bool = True,
                   backend: str | None = None
                   ) -> Tuple[dict, ArchConfig, QuantMode]:
-    """Load an artifact into a servable ``(params, cfg, qm)`` triple.
+    """Load an artifact into a servable ``(params, cfg, qm)`` triple —
+    params is the nested pytree the model API expects, cfg the
+    ArchConfig from the manifest, qm the serving QuantMode.
 
     eager=False (default): quantized weights are PackedWeight leaves —
-    packed bytes in HBM, dequantized lazily at each use site.
-    eager=True: dense fp weights are materialized once at load.
-    verify=True: recompute content hashes before trusting the bytes.
+    packed uint8 bytes in HBM, dequantized to the record's logical dtype
+    lazily at each use site (or consumed packed-native by the fused
+    backend). eager=True: dense fp weights are materialized once at load
+    (the fused kernels then never engage — dense weights fall back to
+    the reference path).
+    verify=True: recompute content hashes before trusting the bytes
+    (raises IntegrityError on any mismatch; malformed/unsupported
+    artifacts raise ArtifactError).
     backend: optional execution-backend override for the returned
     QuantMode ('ref' | 'fused'). The backend is a serving-time choice,
     not a model property, so it is never stored in the manifest.

@@ -207,6 +207,10 @@ def qlinear(x: jnp.ndarray, w: jnp.ndarray, b: Optional[jnp.ndarray],
             qm: QuantMode, role: str = "") -> jnp.ndarray:
     """y = Q(x) @ Q(w) + b under the quant mode; plain x@w+b otherwise.
 
+    Shapes/dtypes: x (..., K) float; w (K, N) — or layer-stacked
+    (*lead, K, N) with x (*lead, M, K); b (N,) or None. Returns
+    (..., N) in the promoted float dtype of x and w.
+
     role='ffn_down' additionally applies the online T3 block-Hadamard to the
     activation *before* quantization (its inverse is folded into w offline,
     see core.folding.fold_t3).

@@ -45,10 +45,25 @@ def mx_gemm_packed(x, w_packed, w_scales_e8m0, fmt: str = "mxfp4",
     """Packed-native fused MX GEMM over the HBM layout (PackedWeight
     arrays): nibble-packed codes + E8M0 scale bytes in, fp32 out.
 
-    2-D: x (M, K), w_packed (K//2, N), scales (K//32, N).
-    Stacked (layer- or expert-batched) weights carry leading batch dims on
-    all three operands and are mapped with ``jax.vmap`` (a leading grid
-    axis on TPU); x must then be (*lead, M, K).
+    Shapes/dtypes (2-D): x (M, K) float (f32/bf16 — quantized to ``fmt``
+    on the fly in the kernel prologue); w_packed (K//2, N) uint8 (two
+    4-bit codes per byte along the contraction axis); w_scales_e8m0
+    (K//32, N) uint8 (one pow2 scale byte per 32-block). Returns (M, N)
+    float32 — no dense fp weight is ever materialized. K must be a
+    multiple of 32. Stacked (layer- or expert-batched) weights carry
+    leading batch dims on all three operands and are mapped with
+    ``jax.vmap`` (a leading grid axis on TPU); x must then be
+    (*lead, M, K) — rank mismatches raise ValueError.
+
+    t3=True folds the online 32-wide T3 block-Hadamard into the
+    activation-quantize prologue (the ``ffn_down`` call-site). fmt must
+    be a packable format ('mxfp4' | 'mxint4').
+
+    This is the raw kernel wrapper: eligibility checks and the
+    bit-identical fallback to the reference path live one level up in
+    ``core.quantize.qlinear`` / ``qeinsum`` — callers that cannot meet
+    the contract should go through those. Off-TPU the kernel executes in
+    interpret mode (correct, slow) unless ``interpret`` is forced.
     """
     it = _default_interpret() if interpret is None else interpret
     fn = functools.partial(_mm.mx_matmul_packed, fmt=fmt, t3=t3,

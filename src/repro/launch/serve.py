@@ -7,6 +7,11 @@ batched requests with the MX-quantized engine.
 Artifact workflow (calibrate once, serve many times): add --export DIR
 to persist the packed quantized checkpoint after PTQ, and start future
 runs with --artifact DIR to skip calibration/quantization entirely.
+
+Scheduling: --scheduler wave (static batching, default) or continuous
+(slot-pool continuous batching — per-request outputs are token-identical,
+decode-step utilization is much higher on mixed-length traffic; see
+docs/serving.md).
 """
 from __future__ import annotations
 
@@ -37,6 +42,14 @@ def main():
                     help="matmul execution backend: 'fused' routes packed "
                          "weights through the Pallas MX kernels "
                          "(interpret-mode off-TPU: correctness only)")
+    ap.add_argument("--scheduler", default="wave",
+                    choices=("wave", "continuous"),
+                    help="request scheduler: 'wave' = static batching; "
+                         "'continuous' = slot-pool continuous batching "
+                         "(chunked prefill, per-slot decode positions; "
+                         "see docs/serving.md)")
+    ap.add_argument("--eos-id", type=int, default=None,
+                    help="stop a request at (and including) this token id")
     args = ap.parse_args()
 
     import jax
@@ -54,16 +67,20 @@ def main():
         eng = Engine.from_artifact(
             args.artifact, batch_size=args.batch,
             max_len=args.prompt_len + args.max_new + 16, eager=args.eager,
-            backend=args.backend)
+            backend=args.backend, scheduler=args.scheduler,
+            eos_id=args.eos_id)
         print(f"loaded artifact {args.artifact} in {time.time()-t0:.1f}s "
               f"({'eager' if args.eager else 'packed-lazy'} weights, "
-              f"backend={args.backend}, no re-quantization)")
+              f"backend={args.backend}, scheduler={args.scheduler}, "
+              f"no re-quantization)")
         stats = eng.throughput(n_requests=args.requests,
                                prompt_len=args.prompt_len,
                                max_new=args.max_new)
         print(f"served {stats['tokens']} tokens in {stats['seconds']:.2f}s "
               f"-> {stats['tok_per_s']:.1f} tok/s "
-              f"({stats['prefill_compiles']} prefill compiles)")
+              f"({stats['prefill_compiles']} prefill compiles, "
+              f"{stats['prefill_chunk_compiles']} chunk compiles, "
+              f"decode utilization {stats['decode_utilization']:.2f})")
         return
 
     cfg = (configs.get_reduced(args.arch) if args.reduced
@@ -92,12 +109,15 @@ def main():
 
     eng = Engine(res.params, cfg, res.qm, batch_size=args.batch,
                  max_len=args.prompt_len + args.max_new + 16,
-                 backend=args.backend)
+                 backend=args.backend, scheduler=args.scheduler,
+                 eos_id=args.eos_id)
     stats = eng.throughput(n_requests=args.requests,
                            prompt_len=args.prompt_len,
                            max_new=args.max_new)
     print(f"served {stats['tokens']} tokens in {stats['seconds']:.2f}s "
-          f"-> {stats['tok_per_s']:.1f} tok/s")
+          f"-> {stats['tok_per_s']:.1f} tok/s "
+          f"(scheduler={stats['scheduler']}, "
+          f"decode utilization {stats['decode_utilization']:.2f})")
 
 
 if __name__ == "__main__":

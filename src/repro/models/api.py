@@ -50,9 +50,27 @@ def prefill(params, cfg: ArchConfig, inputs, qm: QuantMode = QuantMode.off(),
 
 def decode(params, cfg: ArchConfig, cache, inputs, cur_len,
            qm: QuantMode = QuantMode.off()):
+    """One decode step. ``cur_len`` may be a traced scalar (shared cache
+    fill) or a (B,) vector of per-slot fills — the vector form backs the
+    serving engine's continuous-batching scheduler (KV-cache families
+    only)."""
     if cfg.family == "encoder":
         raise ValueError("encoder-only arch has no decode step")
     return module_for(cfg).decode(params, cfg, cache, inputs, cur_len, qm)
+
+
+def prefill_chunk(params, cfg: ArchConfig, cache, inputs, start, last_idx,
+                  qm: QuantMode = QuantMode.off()):
+    """Chunked prefill: run a fixed-width token chunk at traced positions
+    against a partially filled cache (one jit signature for every prompt
+    length — the continuous scheduler's admission path). Supported by the
+    KV-cache families (dense/vlm/moe); recurrent families raise."""
+    mod = module_for(cfg)
+    if not hasattr(mod, "prefill_chunk"):
+        raise ValueError(
+            f"family {cfg.family!r} has no chunked-prefill step "
+            f"(recurrent state caches); serve it with the wave scheduler")
+    return mod.prefill_chunk(params, cfg, cache, inputs, start, last_idx, qm)
 
 
 def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.float32):

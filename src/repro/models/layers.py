@@ -36,14 +36,23 @@ def rms_norm_gated(x, z, gamma, eps: float = 1e-5):
 # ---------------------------------------------------------------------------
 
 def apply_rope(x: jnp.ndarray, pos: jnp.ndarray, theta: float) -> jnp.ndarray:
-    """x: (B, S, N, Dh); pos: (S,) int32 positions. Rotates pairs
-    (x[..., :half], x[..., half:]) — llama convention."""
+    """x: (B, S, N, Dh); pos: (S,) int32 positions shared across the batch,
+    or (B, S) per-row positions (continuous-batching decode, where each
+    batch lane sits at its own sequence position). Rotates pairs
+    (x[..., :half], x[..., half:]) — llama convention. Per-row positions
+    compute the identical rotation a shared-position call with that row's
+    position would."""
     dh = x.shape[-1]
     half = dh // 2
     inv_freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
-    freqs = pos.astype(jnp.float32)[:, None] * inv_freq[None, :]  # (S, half)
-    cos = jnp.cos(freqs)[None, :, None, :]
-    sin = jnp.sin(freqs)[None, :, None, :]
+    if pos.ndim == 2:  # (B, S) per-row positions
+        freqs = pos.astype(jnp.float32)[:, :, None] * inv_freq[None, None, :]
+        cos = jnp.cos(freqs)[:, :, None, :]            # (B, S, 1, half)
+        sin = jnp.sin(freqs)[:, :, None, :]
+    else:
+        freqs = pos.astype(jnp.float32)[:, None] * inv_freq[None, :]
+        cos = jnp.cos(freqs)[None, :, None, :]         # (1, S, 1, half)
+        sin = jnp.sin(freqs)[None, :, None, :]
     x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
     out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
     return out.astype(x.dtype)
@@ -61,14 +70,21 @@ def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     """Memory-bounded attention.
 
     q: (B, Sq, H, Dh);  k, v: (B, Sk, K, Dh) with H % K == 0.
-    q_pos: (Sq,) absolute positions of the queries.
+    q_pos: (Sq,) absolute positions of the queries, shared across the
+            batch — or (B, Sq) per-row positions (continuous-batching
+            decode, every lane at its own position).
     k_start: absolute position of k[:, 0] (keys are contiguous).
     window: if > 0, keys with pos <= q_pos - window are masked (local attn).
     kv_len: optional traced scalar — keys at index >= kv_len are invalid
-            (decode with a partially-filled cache).
+            (decode with a partially-filled cache). May be a (B,) vector
+            when q_pos is per-row (each lane has its own cache fill).
     k_positions: optional (Sk,) explicit key positions (ring-buffer caches);
             overrides k_start, and entries < 0 are invalid.
     Output: (B, Sq, H, Dh).
+
+    Every mask variant selects the same key set a shared-position call
+    would select per row, so per-row calls are value-identical per lane to
+    the scalar path (the engine's scheduler-parity tests pin this down).
     """
     B, Sq, H, Dh = q.shape
     Sk, K = k.shape[1], k.shape[2]
@@ -80,9 +96,21 @@ def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
         chunk = Sk
     nc = Sk // chunk
 
-    qp = q_pos.astype(jnp.int32)  # (Sq,)
+    qp = q_pos.astype(jnp.int32)  # (Sq,) shared or (B, Sq) per-row
+    per_row = qp.ndim == 2
 
     def mask_for(kp):
+        if per_row:                      # (B, Sq, chunk) boolean
+            kpb = kp[None, None, :]
+            ok = kpb >= 0
+            if causal:
+                ok = ok & (kpb <= qp[:, :, None])
+            if window:
+                ok = ok & (kpb > qp[:, :, None] - window)
+            if kv_len is not None:
+                kl = jnp.reshape(jnp.asarray(kv_len, jnp.int32), (-1, 1, 1))
+                ok = ok & (kpb - k_start < kl)
+            return ok
         ok = kp[None, :] >= 0
         if causal:
             ok &= kp[None, :] <= qp[:, None]
@@ -111,7 +139,9 @@ def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                   + jnp.arange(chunk, dtype=jnp.int32))
         s = jnp.einsum("bqkgd,bckd->bqkgc", qg, kci,
                        preferred_element_type=jnp.float32) * scale
-        ok = mask_for(kp)[None, :, None, None, :]
+        okm = mask_for(kp)
+        ok = (okm[:, :, None, None, :] if per_row
+              else okm[None, :, None, None, :])
         s = jnp.where(ok, s, NEG_INF)
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         p = jnp.where(ok, jnp.exp(s - m_new[..., None]), 0.0)

@@ -207,6 +207,33 @@ def prefill(params, cfg: ArchConfig, inputs, qm: QuantMode = QuantMode.off(),
     return logits, {"k": ks, "v": vs}
 
 
+def prefill_chunk(params, cfg: ArchConfig, cache, inputs, start, last_idx,
+                  qm: QuantMode = QuantMode.off()):
+    """Chunked prefill (see :func:`transformer.prefill_chunk`): C tokens
+    at positions start..start+C-1 against a partially filled cache; router
+    aux losses are dropped (serving path). Note the expert-capacity
+    buffers are sized from the *chunk's* token count, so capacity-dropped
+    tokens can differ from full-sequence prefill under extreme routing
+    imbalance — with ample capacity (the served regime) both paths are
+    value-identical."""
+    x = dense.embed_inputs(params, cfg, inputs)
+    pos = start + jnp.arange(x.shape[1], dtype=jnp.int32)
+
+    def body(xc, inp):
+        pl, ck, cv = inp
+        xc, ck, cv = dense.attn_sublayer_chunk(xc, pl, cfg, qm, ck, cv,
+                                               pos, start + x.shape[1])
+        xc, _ = ffn_sublayer(xc, pl, cfg, qm)
+        return xc, (ck, cv)
+
+    x, (ks, vs) = scan_layers(body, x, (params["blocks"],
+                               cache["k"], cache["v"]), cfg.scan_layers)
+    xl = jax.lax.dynamic_slice_in_dim(x, last_idx, 1, axis=1)
+    xl = rms_norm(xl, params["ln_f"], cfg.norm_eps)
+    logits = dense.head_out(xl[:, 0], params, cfg, qm)
+    return logits, {"k": ks, "v": vs}
+
+
 def decode(params, cfg: ArchConfig, cache, inputs, cur_len,
            qm: QuantMode = QuantMode.off()):
     x = jnp.take(params["embed"], inputs[:, None], axis=0)

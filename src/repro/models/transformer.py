@@ -120,21 +120,67 @@ def attn_sublayer(x, p, cfg: ArchConfig, qm: QuantMode, pos,
 def attn_sublayer_decode(x, p, cfg: ArchConfig, qm: QuantMode,
                          cache_k, cache_v, cur_len, window: int = 0):
     """One-token attention against a cache. x: (B, 1, d);
-    cache_k/v: (B, Smax, kv_dim). Writes the new kv at index cur_len."""
+    cache_k/v: (B, Smax, kv_dim). Writes the new kv at index cur_len.
+
+    ``cur_len`` is a traced int32 scalar (all rows share one position —
+    the wave scheduler) or a (B,) vector (continuous batching: each row
+    writes and attends at its own position). The vector path is
+    value-identical per row to the scalar path at that row's position."""
     B = x.shape[0]
-    pos = jnp.reshape(cur_len, (1,)).astype(jnp.int32)
-    q, k, v = _qkv(x, p, cfg, qm, pos)
-    cache_k = jax.lax.dynamic_update_slice(cache_k, k, (0, cur_len, 0))
-    cache_v = jax.lax.dynamic_update_slice(cache_v, v, (0, cur_len, 0))
+    cl = jnp.asarray(cur_len)
+    if cl.ndim == 1:                                   # per-slot positions
+        pos = cl.astype(jnp.int32)[:, None]            # (B, 1)
+        q, k, v = _qkv(x, p, cfg, qm, pos)
+        bidx = jnp.arange(B, dtype=jnp.int32)
+        cache_k = cache_k.at[bidx, cl].set(k[:, 0])
+        cache_v = cache_v.at[bidx, cl].set(v[:, 0])
+        kv_len = cl.astype(jnp.int32) + 1              # (B,)
+    else:
+        pos = jnp.reshape(cur_len, (1,)).astype(jnp.int32)
+        q, k, v = _qkv(x, p, cfg, qm, pos)
+        cache_k = jax.lax.dynamic_update_slice(cache_k, k, (0, cur_len, 0))
+        cache_v = jax.lax.dynamic_update_slice(cache_v, v, (0, cur_len, 0))
+        kv_len = cur_len + 1
     cache_k = pctx.shard(cache_k, "batch", None, "model")
     cache_v = pctx.shard(cache_v, "batch", None, "model")
     Smax = cache_k.shape[1]
     out = attention(q,
                     cache_k.reshape(B, Smax, cfg.n_kv_heads, cfg.head_dim),
                     cache_v.reshape(B, Smax, cfg.n_kv_heads, cfg.head_dim),
-                    causal=True, q_pos=pos, kv_len=cur_len + 1,
+                    causal=True, q_pos=pos, kv_len=kv_len,
                     window=window, chunk=cfg.attn_chunk)
     out = out.reshape(B, 1, cfg.q_dim)
+    out = qlinear(out, p["wo"], p.get("bo"), qm, "attn_out")
+    return x + out, cache_k, cache_v
+
+
+def attn_sublayer_chunk(x, p, cfg: ArchConfig, qm: QuantMode,
+                        cache_k, cache_v, pos, kv_len, window: int = 0):
+    """Chunked-prefill attention: C prompt tokens attend against a
+    partially filled cache. x: (B, C, d); cache_k/v: (B, Smax, kv_dim);
+    pos: (C,) absolute positions (contiguous, traced start); kv_len:
+    traced scalar — cache fill after this chunk's writes (pos[-1] + 1).
+    Writes the chunk's kv at pos[0]..pos[-1] and returns (x', ck, cv).
+
+    Together with the online-softmax chunking inside :func:`attention`
+    this accumulates over exactly the same KV-chunk sequence as the
+    full-sequence prefill, so chunked prefill is value-identical to
+    :func:`prefill` for f32 models (masked trailing chunks are exact
+    no-ops of the streaming softmax)."""
+    B, C = x.shape[0], x.shape[1]
+    q, k, v = _qkv(x, p, cfg, qm, pos)
+    start = pos[0]
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k, (0, start, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v, (0, start, 0))
+    cache_k = pctx.shard(cache_k, "batch", None, "model")
+    cache_v = pctx.shard(cache_v, "batch", None, "model")
+    Smax = cache_k.shape[1]
+    out = attention(q,
+                    cache_k.reshape(B, Smax, cfg.n_kv_heads, cfg.head_dim),
+                    cache_v.reshape(B, Smax, cfg.n_kv_heads, cfg.head_dim),
+                    causal=True, q_pos=pos, kv_len=kv_len,
+                    window=window, chunk=cfg.attn_chunk)
+    out = out.reshape(B, C, cfg.q_dim)
     out = qlinear(out, p["wo"], p.get("bo"), qm, "attn_out")
     return x + out, cache_k, cache_v
 
@@ -211,10 +257,46 @@ def prefill(params, cfg: ArchConfig, inputs,
     return logits, cache
 
 
+def prefill_chunk(params, cfg: ArchConfig, cache, inputs, start, last_idx,
+                  qm: QuantMode = QuantMode.off()):
+    """Chunked prefill: run C prompt tokens at absolute positions
+    start..start+C-1 against a partially filled cache.
+
+    inputs: (B, C) int32 tokens; start: traced int32 scalar (a multiple of
+    the attention chunk keeps the online-softmax chunk grid aligned with
+    full-sequence prefill); last_idx: traced int32 — index *within the
+    chunk* of the last real prompt token (trailing pad tokens in the final
+    chunk write cache entries beyond the prompt, which stay masked until
+    decode overwrites them). Returns (logits (B, V) at last_idx, cache).
+
+    Because start/last_idx are traced and C is fixed, every prompt length
+    shares one jit signature — the continuous-batching scheduler admits
+    any request without recompiling."""
+    x = embed_inputs(params, cfg, inputs)
+    B, C = x.shape[0], x.shape[1]
+    pos = start + jnp.arange(C, dtype=jnp.int32)
+
+    def body(xc, inp):
+        pl, ck, cv = inp
+        xc, ck, cv = attn_sublayer_chunk(xc, pl, cfg, qm, ck, cv, pos,
+                                         start + C, window=cfg.window)
+        xc = ffn_sublayer(xc, pl, cfg, qm)
+        return xc, (ck, cv)
+
+    x, (ks, vs) = scan_layers(body, x, (params["blocks"],
+                               cache["k"], cache["v"]), cfg.scan_layers)
+    xl = jax.lax.dynamic_slice_in_dim(x, last_idx, 1, axis=1)
+    xl = rms_norm(xl, params["ln_f"], cfg.norm_eps)
+    logits = head_out(xl[:, 0], params, cfg, qm)
+    return logits, {"k": ks, "v": vs}
+
+
 def decode(params, cfg: ArchConfig, cache, inputs, cur_len,
            qm: QuantMode = QuantMode.off()):
-    """One decode step. inputs: (B,) tokens or (B, d) embeddings;
-    cur_len: traced int32 — current cache fill. Returns (logits, cache)."""
+    """One decode step. inputs: (B,) int32 tokens or (B, d) embeddings;
+    cur_len: traced int32 — current cache fill, a scalar shared by all
+    rows (wave scheduler) or a (B,) vector of per-slot fills (continuous
+    scheduler). Returns (logits (B, V) float, cache)."""
     if cfg.embed_inputs:
         x = jnp.take(params["embed"], inputs[:, None], axis=0)
     else:

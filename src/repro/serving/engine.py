@@ -1,20 +1,42 @@
-"""Batched serving engine: continuous-batching-lite request loop over the
-prefill/decode steps, with MX-quantized execution (the paper's deployment
-mode: LATMiX-folded weights + online T3 + quantized matmuls).
+"""Batched serving engine with two schedulers over the MX-quantized
+prefill/decode steps (the paper's deployment mode: LATMiX-folded weights +
+online T3 + quantized matmuls).
 
-Design notes (large-scale posture):
-  * slot-based batch: fixed B decode lanes; finished sequences are refilled
-    from the queue (continuous batching) — one compiled decode step serves
-    the whole lifetime,
+Schedulers (``Engine(..., scheduler=...)``, see ``docs/serving.md``):
+
+``"wave"``
+    Static batching: up to B requests prefill together (prompts left-padded
+    to a common chunk-bucketed length) and the whole wave decodes until its
+    *slowest* member finishes. Simple, minimal host/device traffic — but on
+    mixed-length traffic most decode slot-steps are spent on requests that
+    already finished.
+
+``"continuous"``
+    Continuous batching: a fixed pool of B decode slots backed by one
+    persistent KV cache allocated at (B, max_len). Slots are recycled
+    ring-style — the step a slot's request emits EOS (or exhausts its
+    budget) the next queued request is chunk-prefilled into the freed lane
+    while the other lanes keep decoding. Prefill is *chunked*: every prompt
+    is processed in fixed attn_chunk-wide pieces with traced start/length
+    indices, so all prompt lengths share ONE jit signature and slot swaps
+    never recompile. Decode runs with per-slot positions ((B,) ``cur_len``
+    vector) and is value-identical per lane to the wave engine's step, so
+    each request's tokens are bit-identical across schedulers.
+
+Common posture:
   * cache allocated once at (B, max_len) rounded to the attention chunk,
-  * greedy or temperature sampling,
-  * per-request latency accounting for the Fig. 4 throughput benchmark.
+  * greedy (argmax) sampling; per-slot sampling state is (last token,
+    position, remaining budget),
+  * optional ``eos_id`` — outputs stop at (and include) the first EOS,
+  * per-request latency + decode-utilization accounting for the serving
+    benchmark (``benchmarks/serving_bench.py``).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
-from typing import List, Optional
+from typing import Callable, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -24,61 +46,141 @@ from repro.configs.base import ArchConfig
 from repro.core.quantize import QuantMode
 from repro.models import api
 
+SCHEDULERS = ("wave", "continuous")
+
 
 @dataclasses.dataclass
 class Request:
+    """One generation request.
+
+    prompt: (S,) int32 token ids. max_new: decode budget (the output is
+    shorter only if ``Engine(eos_id=...)`` is hit first). ``on_token`` is
+    an optional streaming callback invoked with each emitted int token as
+    it becomes available (per step under the continuous scheduler; at wave
+    end under the wave scheduler). ``out`` is filled with the emitted
+    int32 token array when the request completes."""
+
     prompt: np.ndarray                  # (S,) int32
     max_new: int = 16
     out: Optional[np.ndarray] = None
     t_submit: float = 0.0
     t_done: float = 0.0
+    on_token: Optional[Callable[[int], None]] = None
+
+
+@dataclasses.dataclass
+class _Slot:
+    """Per-slot decode state (continuous scheduler)."""
+
+    req: Request
+    toks: List[int]          # emitted tokens (greedy sampling state)
+    pos: int                 # cache fill == next write position
+    remaining: int           # decode budget left
 
 
 class Engine:
-    """``params`` may hold dense arrays or packed-HBM ``PackedWeight``
+    """Serving engine over ``api.prefill``/``api.decode``.
+
+    ``params`` may hold dense arrays or packed-HBM ``PackedWeight``
     leaves (artifact serving, see :meth:`from_artifact`): the quantized
     execution path dequantizes packed weights lazily inside the compiled
     prefill/decode steps — or, with ``backend='fused'``, consumes the
     packed layout directly in the Pallas MX GEMM kernels (see
-    ``core.quantize``)."""
+    ``core.quantize``). Both schedulers work with both backends.
+
+    Streaming API: :meth:`submit` enqueues a request, :meth:`step` runs
+    one scheduler step and returns the requests completed by it,
+    :meth:`drain` steps until idle. :meth:`generate` = submit-all + drain,
+    returning the input list (mutated in place, original order).
+    """
 
     def __init__(self, params, cfg: ArchConfig, qm: QuantMode,
                  batch_size: int = 4, max_len: int = 256,
                  backend: str | None = None,
-                 bucket_prompts: bool = True):
-        """bucket_prompts=True rounds each wave's prompt length up to the
-        attention chunk so distinct lengths reuse one prefill compile.
-        Bucketed pads are left-pad tokens and are attended like the
-        engine's existing ragged-wave pads (static batching, no per-row
-        masks) — pass False for unpadded, per-length compiles."""
+                 bucket_prompts: bool = True,
+                 scheduler: str = "wave",
+                 eos_id: Optional[int] = None):
+        """bucket_prompts=True rounds prompt lengths up to the attention
+        chunk so distinct lengths reuse one prefill compile (wave) / keep
+        the chunk grid aligned (continuous). Bucketed pads are left-pad
+        tokens and are attended like the engine's existing ragged-wave
+        pads (static batching, no per-row masks) — pass False for
+        unpadded, per-length compiles.
+
+        scheduler='continuous' requires a token-embedding KV-cache family
+        (dense/moe); recurrent families (hybrid/ssm) serve with 'wave'."""
         if cfg.family == "encoder":
             raise ValueError("encoder archs are not served autoregressively")
+        if scheduler not in SCHEDULERS:
+            raise ValueError(f"unknown scheduler {scheduler!r} "
+                             f"(expected one of {SCHEDULERS})")
+        if scheduler == "continuous" and (
+                cfg.family not in ("dense", "moe") or not cfg.embed_inputs):
+            raise ValueError(
+                "continuous scheduler requires a token-embedding KV-cache "
+                "family (dense/moe); recurrent-state families must use "
+                "scheduler='wave'")
         if backend is not None:
             qm = qm.with_backend(backend)
         self.params, self.cfg, self.qm = params, cfg, qm
         self.B = batch_size
         self.bucket_prompts = bucket_prompts
+        self.scheduler = scheduler
+        self.eos_id = eos_id
         chunk = cfg.attn_chunk
         self.max_len = (max_len + chunk - 1) // chunk * chunk
-        # compile accounting: one prefill compile per distinct (B, S)
-        # wave shape — bucketing in _wave keeps this set small
+
+        # compile accounting: one prefill compile per distinct (B, S) wave
+        # shape (bucketing in _wave keeps this set small); the continuous
+        # scheduler's chunked prefill and vector decode each compile once.
         self._prefill_shapes: set = set()
         self.prefill_compiles = 0
+        self._chunk_shapes: set = set()
+        self.prefill_chunk_compiles = 0
+        self._decode_shapes: set = set()
+        self.decode_compiles = 0
+
+        # serving counters (see stats())
+        self.admitted = 0
+        self.decode_steps = 0
+        self.slot_steps = 0
+        self.useful_decode_tokens = 0
 
         def prefill(params, toks):
             return api.prefill(params, cfg, toks, qm, max_len=self.max_len)
+
+        def prefill_chunk(params, cache, toks, start, last_idx):
+            return api.prefill_chunk(params, cfg, cache, toks, start,
+                                     last_idx, qm)
 
         def decode(params, cache, toks, cur_len):
             logits, cache = api.decode(params, cfg, cache, toks, cur_len, qm)
             return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
 
+        def merge_slot(cache, slot_cache, i):
+            def upd(c, s):
+                idx = (jnp.int32(0), i) + (jnp.int32(0),) * (c.ndim - 2)
+                return jax.lax.dynamic_update_slice(c, s, idx)
+            return jax.tree.map(upd, cache, slot_cache)
+
         self._prefill = jax.jit(prefill)
+        self._prefill_chunk = jax.jit(prefill_chunk)
         self._decode = jax.jit(decode)
+        self._merge = jax.jit(merge_slot)
+
+        # streaming state
+        self._queue: collections.deque = collections.deque()
+        self._slots: List[Optional[_Slot]] = [None] * self.B
+        self._admit_cursor = 0            # ring rotation over the lanes
+        self._cache = None                # persistent (B, max_len) KV pool
+        self._slot_cache = None           # (1, max_len) admission scratch
 
     @classmethod
     def from_artifact(cls, path, batch_size: int = 4, max_len: int = 256,
                       eager: bool = False, verify: bool = True,
-                      backend: str | None = None) -> "Engine":
+                      backend: str | None = None,
+                      scheduler: str = "wave",
+                      eos_id: Optional[int] = None) -> "Engine":
         """Serve directly from an exported artifact directory: no
         calibration, no re-quantization — load packed bytes and go.
 
@@ -87,30 +189,67 @@ class Engine:
         materializes dense fp weights once at load. backend='fused'
         routes the quantized matmuls through the packed-native Pallas
         kernels (requires eager=False to have any effect — eager loads
-        are dense and fall back to the reference path)."""
+        are dense and fall back to the reference path). scheduler/eos_id
+        are forwarded to :class:`Engine`."""
         from repro.artifacts import load_artifact
         params, cfg, qm = load_artifact(path, eager=eager, verify=verify,
                                         backend=backend)
-        return cls(params, cfg, qm, batch_size=batch_size, max_len=max_len)
+        return cls(params, cfg, qm, batch_size=batch_size, max_len=max_len,
+                   scheduler=scheduler, eos_id=eos_id)
+
+    # ------------------------------------------------------------------
+    # Streaming API
+    # ------------------------------------------------------------------
+
+    def submit(self, req: Request) -> Request:
+        """Enqueue a request. It starts executing on the next step()."""
+        req.t_submit = time.time()
+        self._queue.append(req)
+        return req
+
+    def step(self) -> List[Request]:
+        """Run one scheduler step; return the requests it completed.
+
+        Continuous: admit queued requests into free slots (chunked
+        prefill), then one batched decode step over all live slots.
+        Wave: serve one full wave of up to B queued requests."""
+        if self.scheduler == "continuous":
+            return self._step_continuous()
+        reqs = []
+        while self._queue and len(reqs) < self.B:
+            reqs.append(self._queue.popleft())
+        return self._wave(reqs) if reqs else []
+
+    def drain(self) -> List[Request]:
+        """Step until the queue and every slot are empty; return all
+        requests completed while draining (completion order)."""
+        done: List[Request] = []
+        while self._queue or any(s is not None for s in self._slots):
+            done.extend(self.step())
+        return done
 
     def generate(self, requests: List[Request]) -> List[Request]:
-        """Serve a list of requests with static batching per wave (prompts
-        padded to a common length)."""
-        out = []
-        for i in range(0, len(requests), self.B):
-            out.extend(self._wave(requests[i:i + self.B]))
-        return out
+        """Serve a list of requests; returns the same list (original
+        order) with ``out``/latency fields filled."""
+        for r in requests:
+            self.submit(r)
+        self.drain()
+        return requests
+
+    # ------------------------------------------------------------------
+    # Shared helpers
+    # ------------------------------------------------------------------
 
     def _bucket_len(self, s: int, max_new: int) -> int:
-        """Round a wave's prompt length up to the attention chunk so the
-        jitted prefill compiles once per bucket, not once per distinct
-        prompt length. Buckets only when the decode budget still fits in
-        the cache (otherwise the raw length is kept — old behavior).
+        """Round a prompt length up to the attention chunk so the jitted
+        prefill compiles once per bucket, not once per distinct prompt
+        length. Buckets only when the decode budget still fits in the
+        cache (otherwise the raw length is kept — old behavior).
 
-        Bucketed waves are left-padded further than strictly needed; pads
-        share the engine's existing ragged-wave semantics (left-pad tokens
-        are attended — static batching, no per-row masks). Disable with
-        ``Engine(..., bucket_prompts=False)``."""
+        Bucketed prompts are left-padded further than strictly needed;
+        pads share the engine's existing ragged-wave semantics (left-pad
+        tokens are attended — static batching, no per-row masks). Disable
+        with ``Engine(..., bucket_prompts=False)``."""
         if not self.bucket_prompts:
             return s
         chunk = self.cfg.attn_chunk
@@ -118,6 +257,31 @@ class Engine:
         while sb > s and sb + max_new > self.max_len:
             sb -= chunk
         return max(sb, s)
+
+    def _trim_eos(self, toks: np.ndarray) -> np.ndarray:
+        if self.eos_id is None:
+            return toks
+        hits = np.flatnonzero(toks == self.eos_id)
+        return toks[:hits[0] + 1] if hits.size else toks
+
+    def _finish(self, req: Request, toks) -> None:
+        req.out = np.asarray(toks, np.int32)
+        req.t_done = time.time()
+        self.useful_decode_tokens += max(len(req.out) - 1, 0)
+
+    def _cache_dtype(self):
+        emb = self.params.get("embed") if isinstance(self.params, dict) \
+            else None
+        return emb.dtype if emb is not None else jnp.float32
+
+    def _count_decode_compile(self, b: int, kind: str) -> None:
+        if (b, kind) not in self._decode_shapes:
+            self._decode_shapes.add((b, kind))
+            self.decode_compiles += 1
+
+    # ------------------------------------------------------------------
+    # Wave scheduler (static batching)
+    # ------------------------------------------------------------------
 
     def _wave(self, reqs: List[Request]) -> List[Request]:
         t0 = time.time()
@@ -131,6 +295,7 @@ class Engine:
         if (B, S) not in self._prefill_shapes:
             self._prefill_shapes.add((B, S))
             self.prefill_compiles += 1
+        self._count_decode_compile(B, "scalar")
         last_logits, cache = self._prefill(self.params, jnp.asarray(toks))
         nxt = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
         # accumulate sampled tokens on device; one host transfer at the end
@@ -145,23 +310,168 @@ class Engine:
             pos += 1
         host = np.asarray(jnp.stack(toks_dev, axis=1))  # (B, max_new)
         t1 = time.time()
+        self.admitted += B
+        self.decode_steps += max(max_new - 1, 0)   # max_new=0 runs no steps
+        self.slot_steps += B * max(max_new - 1, 0)
         for i, r in enumerate(reqs):
-            r.out = host[i, :r.max_new].astype(np.int32)
+            out = self._trim_eos(host[i, :r.max_new].astype(np.int32))
+            self._finish(r, out)
             r.t_submit, r.t_done = t0, t1
+            if r.on_token is not None:
+                for t in out:
+                    r.on_token(int(t))
         return reqs
+
+    # ------------------------------------------------------------------
+    # Continuous scheduler (slot pool + chunked prefill)
+    # ------------------------------------------------------------------
+
+    def _ensure_pool(self) -> None:
+        if self._cache is None:
+            dt = self._cache_dtype()
+            self._cache = api.init_cache(self.cfg, self.B, self.max_len, dt)
+            self._slot_cache = api.init_cache(self.cfg, 1, self.max_len, dt)
+
+    def _admit(self, slot: int, req: Request) -> tuple:
+        """Chunk-prefill ``req`` into lane ``slot`` of the persistent
+        cache. Returns (bucketed prompt length, first sampled token).
+
+        The prompt is left-padded to its chunk bucket (same semantics as
+        the wave engine) and processed in fixed attn_chunk-wide pieces —
+        the final piece right-pads to the chunk width and passes the index
+        of the last real token, so every prompt length reuses the single
+        compiled chunk step. Pad writes land at cache positions beyond
+        the prompt where they stay masked until decode overwrites them."""
+        s = len(req.prompt)
+        C = self.cfg.attn_chunk
+        sb = self._bucket_len(s, req.max_new)
+        if sb + req.max_new > self.max_len:
+            raise ValueError(
+                f"request does not fit the KV pool: prompt {s} (bucketed "
+                f"{sb}) + max_new {req.max_new} > max_len {self.max_len}")
+        n_chunks = -(-sb // C)
+        buf = np.zeros(n_chunks * C, np.int32)
+        buf[sb - s:sb] = req.prompt
+        if (1, C) not in self._chunk_shapes:
+            self._chunk_shapes.add((1, C))
+            self.prefill_chunk_compiles += 1
+        logits = None
+        for ci in range(n_chunks):
+            width = min(sb - ci * C, C)
+            logits, self._slot_cache = self._prefill_chunk(
+                self.params, self._slot_cache,
+                jnp.asarray(buf[None, ci * C:(ci + 1) * C]),
+                jnp.int32(ci * C), jnp.int32(width - 1))
+        self._cache = self._merge(self._cache, self._slot_cache,
+                                  jnp.int32(slot))
+        tok = int(np.asarray(jnp.argmax(logits, axis=-1))[0])
+        return sb, tok
+
+    def _emit(self, req: Request, tok: int) -> None:
+        if req.on_token is not None:
+            req.on_token(tok)
+
+    def _step_continuous(self) -> List[Request]:
+        self._ensure_pool()
+        done: List[Request] = []
+        # --- admission: fill free lanes from the queue (ring order) ---
+        for off in range(self.B):
+            i = (self._admit_cursor + off) % self.B
+            if self._slots[i] is not None:
+                continue
+            while self._queue:
+                req = self._queue.popleft()
+                self.admitted += 1
+                if req.max_new <= 0:
+                    self._finish(req, [])
+                    done.append(req)
+                    continue
+                sb, tok = self._admit(i, req)
+                self._emit(req, tok)
+                if req.max_new == 1 or tok == self.eos_id:
+                    self._finish(req, [tok])   # lane freed the same step
+                    done.append(req)
+                    continue
+                self._slots[i] = _Slot(req, [tok], sb, req.max_new - 1)
+                break
+        self._admit_cursor = (self._admit_cursor + 1) % self.B
+
+        live = [i for i in range(self.B) if self._slots[i] is not None]
+        if not live:
+            return done
+
+        # --- one decode step over every lane (dead lanes idle at pos 0;
+        # their sampled tokens are discarded) ---
+        cur = np.zeros(self.B, np.int32)
+        pos = np.zeros(self.B, np.int32)
+        for i in live:
+            cur[i] = self._slots[i].toks[-1]
+            pos[i] = self._slots[i].pos
+        self._count_decode_compile(self.B, "vector")
+        nxt, self._cache = self._decode(self.params, self._cache,
+                                        jnp.asarray(cur), jnp.asarray(pos))
+        self.decode_steps += 1
+        self.slot_steps += self.B
+        nxt_h = np.asarray(nxt)
+        for i in live:
+            sl = self._slots[i]
+            tok = int(nxt_h[i])
+            sl.toks.append(tok)
+            sl.pos += 1
+            sl.remaining -= 1
+            self._emit(sl.req, tok)
+            if sl.remaining == 0 or tok == self.eos_id:
+                self._finish(sl.req, sl.toks)
+                done.append(sl.req)
+                self._slots[i] = None
+        return done
+
+    # ------------------------------------------------------------------
+    # Accounting
+    # ------------------------------------------------------------------
+
+    def stats(self) -> dict:
+        """Serving counters since construction. decode_utilization is the
+        fraction of decode slot-steps that produced a token which made it
+        into a request's output — the wave scheduler burns slot-steps on
+        requests shorter than their wave; the continuous scheduler only
+        idles lanes when the queue runs dry."""
+        util = (self.useful_decode_tokens / self.slot_steps
+                if self.slot_steps else 0.0)
+        return {"scheduler": self.scheduler, "backend": self.qm.backend,
+                "admitted": self.admitted,
+                "prefill_compiles": self.prefill_compiles,
+                "prefill_chunk_compiles": self.prefill_chunk_compiles,
+                "decode_compiles": self.decode_compiles,
+                "decode_steps": self.decode_steps,
+                "slot_steps": self.slot_steps,
+                "useful_decode_tokens": self.useful_decode_tokens,
+                "decode_utilization": util}
 
     def throughput(self, n_requests: int = 8, prompt_len: int = 32,
                    max_new: int = 32, seed: int = 0) -> dict:
-        """Tokens/second over a synthetic request wave (Fig. 4 metric)."""
+        """Tokens/second over a synthetic request wave (Fig. 4 metric),
+        plus the scheduler counters from :meth:`stats`.
+
+        The step/token counters and decode_utilization describe *this
+        run* only (deltas against the engine's cumulative counters);
+        compile counts stay cumulative — the jit cache is an
+        engine-lifetime property."""
         rng = np.random.default_rng(seed)
         reqs = [Request(prompt=rng.integers(
             0, self.cfg.vocab_size, prompt_len).astype(np.int32),
             max_new=max_new) for _ in range(n_requests)]
+        before = self.stats()
         t0 = time.time()
         done = self.generate(reqs)
         dt = time.time() - t0
         toks = sum(len(r.out) for r in done)
         rate = toks / dt if dt > 0 else float("inf")  # clock can tick 0
-        return {"tokens": toks, "seconds": dt, "tok_per_s": rate,
-                "prefill_compiles": self.prefill_compiles,
-                "backend": self.qm.backend}
+        run = self.stats()
+        for k in ("admitted", "decode_steps", "slot_steps",
+                  "useful_decode_tokens"):
+            run[k] -= before[k]
+        run["decode_utilization"] = (
+            run["useful_decode_tokens"] / run["slot_steps"]
+            if run["slot_steps"] else 0.0)
+        return {"tokens": toks, "seconds": dt, "tok_per_s": rate, **run}
