@@ -7,6 +7,10 @@ Times (jit, CPU):
     Pallas kernel runs in interpret mode, so its wall-clock is a
     correctness-path number, not a deployment number — the TPU story is
     the roofline projection below),
+  * decode attention over the KV cache: dense jnp at f32/bf16 vs the
+    packed-KV Pallas flash-decode kernel at 1k/4k/16k context, with the
+    per-step KV bytes each cache format streams (the ~2x mxfp8 / ~4x
+    mxfp4 traffic cut) and a bandwidth-bound TPU projection,
   * the jnp fake-quant primitives (historical trajectory rows),
 
 plus packed-vs-dense weight byte accounting and analytic TPU-roofline
@@ -29,8 +33,9 @@ import jax.numpy as jnp
 from repro.core import mx as mxlib
 from repro.core import transforms as tfm
 from repro.core.quantize import QuantMode, qlinear
-from repro.kernels import ops
+from repro.kernels import ops, packing
 from repro.kernels.packing import PackedWeight
+from repro.models import layers
 from . import common
 
 HBM_BW = 819e9
@@ -44,6 +49,95 @@ def _packed_weight(key, k, n, fmt="mxfp4"):
     # pack_weight RTN-quantizes off-grid values itself, so from_dense on
     # the raw weight lands on the MX grid in one pass
     return PackedWeight.from_dense(w, fmt)
+
+
+def _attention_rows(rows, log, smoke: bool):
+    """Decode attention over the KV cache: the jnp dense path vs the
+    packed-KV flash-decode kernel (CPU interpret mode — correctness-path
+    wall clock; the TPU story is the bandwidth projection row), plus the
+    KV bytes a decode step streams per layer under each cache format."""
+    B, H, kvh, Dh = 1, 8, 2, 64
+    D = kvh * Dh
+    contexts = (256,) if smoke else (1024, 4096, 16384)
+    key = jax.random.PRNGKey(21)
+    for S in contexts:
+        k1, k2, k3 = jax.random.split(jax.random.fold_in(key, S), 3)
+        q = jax.random.normal(k1, (B, 1, H, Dh), jnp.float32)
+        kd = jax.random.normal(k2, (B, S, D), jnp.float32)
+        vd = jax.random.normal(k3, (B, S, D), jnp.float32)
+        q_pos = jnp.full((B, 1), S - 1, jnp.int32)
+        kv_len = jnp.full((B,), S, jnp.int32)
+
+        def dense_attn(qq, kk, vv):
+            return layers.attention(
+                qq, kk.reshape(B, S, kvh, Dh), vv.reshape(B, S, kvh, Dh),
+                causal=True, q_pos=q_pos, kv_len=kv_len, chunk=512)
+
+        f_j = jax.jit(dense_attn)
+        for dt, name in ((jnp.float32, "f32"), (jnp.bfloat16, "bf16")):
+            us = common.timed(f_j, q, kd.astype(dt), vd.astype(dt)) * 1e6
+            kv_bytes = 2 * S * D * jnp.dtype(dt).itemsize
+            rows.append({"name": f"attn_decode_jnp_{name}_S{S}",
+                         "us_per_call": us,
+                         "derived": f"kv_bytes={kv_bytes}"})
+        us_bf16 = rows[-1]["us_per_call"]
+        bytes_bf16 = 2 * S * D * 2
+        bytes_f32 = 2 * S * D * 4
+        for fmt in ("mxfp8", "mxfp4"):
+            kc, ks = packing.kv_encode(kd, fmt)
+            vc, vs = packing.kv_encode(vd, fmt)
+            qf = q.reshape(B, H, Dh)
+
+            # the two ways the engine can read a quantized cache (the
+            # qlinear_dispatch_{ref,fused} pairing, KV edition): decode
+            # the packed cache in place + dense jnp attention (the 'ref'
+            # backend) vs the packed-native flash-decode kernel
+            def packed_ref(qq, a, b, c, d):
+                kk = packing.kv_decode(a, b, fmt).reshape(B, S, kvh, Dh)
+                vv = packing.kv_decode(c, d, fmt).reshape(B, S, kvh, Dh)
+                return layers.attention(qq.reshape(B, 1, H, Dh), kk, vv,
+                                        causal=True, q_pos=q_pos,
+                                        kv_len=kv_len, chunk=512)
+
+            def packed_attn(qq, a, b, c, d):
+                return ops.mx_flash_decode(qq, a, b, c, d,
+                                           q_pos[:, 0], kv_len, fmt,
+                                           interpret=True)
+
+            us_ref = common.timed(jax.jit(packed_ref),
+                                  qf, kc, ks, vc, vs) * 1e6
+            us = common.timed(jax.jit(packed_attn), qf, kc, ks, vc, vs) * 1e6
+            kv_bytes = 2 * (int(kc.size) + int(ks.size))
+            rows.append({
+                "name": f"attn_decode_packed_ref_{fmt}_S{S}",
+                "us_per_call": us_ref,
+                "derived": (f"kv_bytes={kv_bytes};"
+                            "decode-in-place + jnp attention "
+                            "(the ref-backend read of a packed cache)")})
+            rows.append({
+                "name": f"attn_decode_packed_{fmt}_S{S}",
+                "us_per_call": us,
+                "derived": (
+                    f"kv_bytes={kv_bytes};"
+                    f"bytes_reduction_vs_bf16={bytes_bf16/kv_bytes:.2f}x;"
+                    f"bytes_reduction_vs_f32={bytes_f32/kv_bytes:.2f}x;"
+                    f"us_vs_packed_ref={us_ref/us:.2f}x;"
+                    f"us_vs_jnp_bf16={us_bf16/us:.2f}x;"
+                    "cpu_interpret=TRUE (correctness-path timing; "
+                    "compiled Mosaic on TPU)")})
+    # TPU roofline: decode attention is pure KV streaming at long context
+    S = contexts[-1]
+    qb = H * Dh * 2
+    for fmt, per_elem in (("bf16", 2.0), ("mxfp8", 1 + 1 / 32),
+                          ("mxfp4", 0.5 + 1 / 32)):
+        kv_bytes = 2 * S * D * per_elem
+        t_mem = (kv_bytes + qb) / HBM_BW
+        rows.append({
+            "name": f"attn_decode_tpu_projection_{fmt}_S{S}",
+            "us_per_call": t_mem * 1e6,
+            "derived": (f"kv_bytes={int(kv_bytes)};bound=memory;"
+                        f"speedup_vs_bf16_at_bw_bound="
+                        f"{(2 * S * D * 2.0 + qb) / (kv_bytes + qb):.2f}x")})
 
 
 def run(log=print, smoke: bool = False):
@@ -111,6 +205,9 @@ def run(log=print, smoke: bool = False):
                  "us_per_call": us_fus,
                  "derived": "cpu_interpret=TRUE (correctness-path timing; "
                             "compiled Mosaic on TPU)"})
+
+    # --- decode attention: jnp dense-KV vs packed-KV flash decode ---
+    _attention_rows(rows, log, smoke)
 
     # --- packed vs dense weight bytes (the HBM-traffic win) ---
     rows.append({

@@ -44,12 +44,16 @@ def main():
                     choices=("wave", "continuous"),
                     help="static waves or continuous batching "
                          "(docs/serving.md)")
+    ap.add_argument("--kv-cache", default="none",
+                    choices=("none", "mxfp8", "mxint8", "mxfp4", "mxint4"),
+                    help="MX-quantize the KV cache (docs/kv-cache.md)")
     args = ap.parse_args()
 
     if args.artifact:
         eng = Engine.from_artifact(args.artifact, batch_size=args.batch,
                                    max_len=128, eager=args.eager,
-                                   scheduler=args.scheduler)
+                                   scheduler=args.scheduler,
+                                   kv_cache=args.kv_cache)
         cfg = eng.cfg
         print(f"serving artifact {args.artifact} "
               f"({'eager' if args.eager else 'packed-lazy'} weights, "
@@ -79,7 +83,7 @@ def main():
               else QuantMode.mxint4(t3=False))
 
     eng = Engine(params, cfg, qm, batch_size=args.batch, max_len=128,
-                 scheduler=args.scheduler)
+                 scheduler=args.scheduler, kv_cache=args.kv_cache)
     _run(eng, cfg, args)
 
 
@@ -118,6 +122,7 @@ def _run(eng, cfg, args):
            else f"{args.quant}{' + LATMiX' if args.latmix else ''}")
     print(f"\nthroughput: {stats['tok_per_s']:.1f} tok/s ({src}, "
           f"scheduler={stats['scheduler']}, "
+          f"kv_cache={stats['kv_cache']}, "
           f"decode utilization {stats['decode_utilization']:.2f})")
 
 

@@ -43,12 +43,41 @@ import numpy as np
 
 from repro.kernels import ops
 from repro.kernels.mx_quant import MXBLOCK
-from repro.kernels.packing import PackedWeight, maybe_dense
+from repro.kernels.packing import KV_FMTS, PackedWeight, maybe_dense
 
 from . import mx as mxlib
 from . import transforms as tfm
 
 BACKENDS = ("ref", "fused")
+
+
+@dataclasses.dataclass(frozen=True)
+class KVCacheQuant:
+    """How the serving KV cache is stored (see ``docs/kv-cache.md``).
+
+    fmt: MX element format of the stored keys/values — 'mxfp8' / 'mxint8'
+    (one code byte per element) or 'mxfp4' / 'mxint4' (nibble-packed).
+    Scales are E8M0 bytes per 32-block along the cache feature axis
+    (kv_dim; blocks sit inside heads whenever head_dim % 32 == 0).
+    ``None`` — i.e. :meth:`parse` of 'none'/'' — keeps the dense fp cache.
+    """
+
+    fmt: str = "mxfp8"
+
+    def __post_init__(self):
+        if self.fmt not in KV_FMTS:
+            raise ValueError(f"unknown KV-cache fmt {self.fmt!r} "
+                             f"(expected one of {KV_FMTS} or 'none')")
+
+    @staticmethod
+    def parse(spec) -> "Optional[KVCacheQuant]":
+        """'mxfp8' -> KVCacheQuant('mxfp8'); None/''/'none' -> None (dense
+        cache); an existing KVCacheQuant passes through."""
+        if spec is None or isinstance(spec, KVCacheQuant):
+            return spec
+        if spec in ("", "none", "off", "bf16", "fp"):
+            return None
+        return KVCacheQuant(fmt=spec)
 
 
 @dataclasses.dataclass(frozen=True)

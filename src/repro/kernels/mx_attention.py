@@ -1,0 +1,215 @@
+"""Pallas TPU kernel: flash-decode attention over an MX-quantized KV cache.
+
+The serving decode hot path after PR-2 moved every GEMM onto packed
+weights: one query token per lane attends against the whole KV cache, so
+decode cost is dominated by *streaming the cache out of HBM*. Storing the
+cache as MX codes (per-32-block E8M0 scales along the feature axis, see
+``packing.PackedKV``) cuts that traffic ~2x (mxfp8/mxint8) or ~4x
+(mxfp4/mxint4) vs bf16 — and this kernel consumes the packed bytes
+*directly*: codes + scale bytes are DMA'd to VMEM per KV chunk, decoded
+in-tile, and fed to an online-softmax accumulation. No dense fp cache is
+ever materialized.
+
+Shape contract (the dispatch wrapper ``ops.mx_flash_decode`` enforces it
+and falls back to the jnp reference off-contract):
+
+  q         (B, H, Dh) float      — one decode token per lane
+  k/v codes (B, S, D*bits/8) u8   — D = kvh*Dh, nibble-packed when 4-bit
+  k/v scales(B, S, D//32)    u8   — E8M0 bytes
+  q_pos     (B,) i32              — absolute query positions (per lane)
+  kv_len    (B,) i32              — cache fill per lane (rows >= kv_len
+                                    are stale and masked)
+  window    static int            — sliding-window size (0 = full causal)
+
+Grid: (B, S/BS) with the KV-chunk axis innermost, so the (H, Dh) fp32
+accumulator plus the (H,) running max / normalizer stay resident in VMEM
+across the KV sweep (the GEMM kernels' K-innermost discipline). GQA runs
+natively: q is viewed (kvh, G, Dh) and scores contract against the
+decoded (BS, kvh, Dh) tile per kv-head.
+
+Masking is per *row* (lane): causal ``kp <= q_pos``, fill ``kp < kv_len``
+and window ``kp > q_pos - window`` — identical key selection to
+``models.layers.attention``, so the kernel slots under the model's decode
+step with no semantic change. Odd tails (kv_len not a multiple of BS) are
+masked chunks, which are exact no-ops of the online softmax.
+
+VMEM per instance (BS=512, D=4096, mxfp8): codes 2x 2 MiB + scales 2x
+64 KiB + q/acc « 16 MiB. On CPU the kernel runs in interpret mode
+(correctness only); the TPU story is the roofline rows in
+``benchmarks/kernels_bench.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .mx_quant import MXBLOCK, _decode_tile, _format_consts
+from . import packing
+
+NEG_INF = -1e30
+
+
+def _pick_chunk(S: int, bs: int) -> int:
+    bs = min(bs, S)
+    while S % bs:
+        bs //= 2
+    return max(bs, 1)
+
+
+def _decode_codes(codes, fmt, grid, center):
+    """Symmetric code -> float value. The 4-bit grids decode with the
+    shared 8-compare loop (``_decode_tile``); the 8-bit grids would cost
+    ~128 VPU compares per element that way, so they decode
+    *arithmetically* — their half-grids are closed-form:
+
+      int8:      v(k) = k                      (k = |code - center|)
+      fp8 e4m3:  v(k) = k * 2^-9                      for k < 8
+                 v(k) = (1 + m/8) * 2^(e-7),  e = (k-8)//8 + 1,
+                                              m = (k-8) % 8   otherwise
+
+    both exact in f32 (the values ARE f32-representable grid points), so
+    this is bit-identical to the LUT decode — pinned by the kernel-vs-
+    oracle tests across every format."""
+    rel = codes.astype(jnp.int32) - center
+    if fmt in ("mxint8", "mxfp8"):
+        sign = jnp.where(rel < 0, -1.0, 1.0).astype(jnp.float32)
+        k = jnp.abs(rel)
+        if fmt == "mxint8":
+            return sign * k.astype(jnp.float32)
+        kf = k.astype(jnp.float32)
+        e = jnp.floor_divide(k - 8, 8) + 1
+        m = jnp.remainder(k - 8, 8).astype(jnp.float32)
+        norm = (1.0 + m / 8.0) * jnp.exp2(e.astype(jnp.float32) - 7.0)
+        return sign * jnp.where(k < 8, kf * jnp.float32(2.0 ** -9), norm)
+    return _decode_tile(codes, grid, center)
+
+
+def _decode_kv_tile(codes, scales, fmt, grid, center, bits, kvh, dh):
+    """(BS, D*bits/8) codes + (BS, D//32) E8M0 bytes -> (BS, kvh, dh) f32."""
+    if bits == 4:
+        # canonical nibble unpack (pack_codes order: even index in the
+        # low nibble) — pure jnp, so it traces inside the kernel body
+        codes = packing.unpack_codes(codes)
+    vals = _decode_codes(codes, fmt, grid, center)          # (BS, D)
+    s = jnp.exp2(scales.astype(jnp.float32) - 127.0)        # (BS, D//32)
+    bs, d = vals.shape
+    out = (vals.reshape(bs, d // MXBLOCK, MXBLOCK) * s[..., None])
+    return out.reshape(bs, kvh, dh)
+
+
+def _flash_decode_kernel(q_ref, kc_ref, ks_ref, vc_ref, vs_ref,
+                         pos_ref, len_ref, o_ref, m_ref, l_ref, *,
+                         fmt, bits, window, kvh, dh, n_chunks):
+    grid, _, _, center = _format_consts(fmt)
+    c = pl.program_id(1)
+    bs = kc_ref.shape[1]
+
+    @pl.when(c == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)                        # (H, Dh)
+    H = q.shape[0]
+    G = H // kvh
+    qg = q.reshape(kvh, G, dh)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+
+    k = _decode_kv_tile(kc_ref[0], ks_ref[0], fmt, grid, center, bits,
+                        kvh, dh)
+    v = _decode_kv_tile(vc_ref[0], vs_ref[0], fmt, grid, center, bits,
+                        kvh, dh)
+
+    s = jnp.einsum("kgd,skd->kgs", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+
+    kp = (c * bs
+          + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)[0])  # (bs,)
+    qp = pos_ref[0, 0]
+    ok = (kp <= qp) & (kp < len_ref[0, 0])
+    if window:
+        ok = ok & (kp > qp - window)
+    okb = ok[None, None, :]                                  # (1, 1, bs)
+    s = jnp.where(okb, s, NEG_INF)
+
+    m_prev = m_ref[0].reshape(kvh, G)
+    l_prev = l_ref[0].reshape(kvh, G)
+    acc_prev = o_ref[0].reshape(kvh, G, dh)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.where(okb, jnp.exp(s - m_new[..., None]), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=-1)
+    acc = acc_prev * corr[..., None] + jnp.einsum(
+        "kgs,skd->kgd", p, v, preferred_element_type=jnp.float32)
+
+    m_ref[...] = m_new.reshape(1, H)
+    l_ref[...] = l_new.reshape(1, H)
+
+    @pl.when(c < n_chunks - 1)
+    def _stash():
+        o_ref[...] = acc.reshape(1, H, dh)
+
+    @pl.when(c == n_chunks - 1)
+    def _finalize():
+        o_ref[...] = (acc / jnp.maximum(l_new, 1e-30)[..., None]
+                      ).reshape(1, H, dh)
+
+
+def mx_flash_decode(q: jnp.ndarray, k_codes: jnp.ndarray,
+                    k_scales: jnp.ndarray, v_codes: jnp.ndarray,
+                    v_scales: jnp.ndarray, q_pos: jnp.ndarray,
+                    kv_len: jnp.ndarray, fmt: str = "mxfp8", *,
+                    window: int = 0, bs: int = 512,
+                    interpret: bool = True) -> jnp.ndarray:
+    """Flash-decode attention over packed MX KV. Returns (B, H, Dh) f32.
+
+    See the module docstring for the shape contract. ``bs`` is the KV
+    chunk width (shrunk to divide S)."""
+    B, H, Dh = q.shape
+    bits = packing.kv_fmt_bits(fmt)
+    S = k_codes.shape[1]
+    D = k_codes.shape[2] * 8 // bits
+    kvh = D // Dh
+    assert H % kvh == 0 and kvh * Dh == D, (q.shape, k_codes.shape)
+    assert D % MXBLOCK == 0, (D,)
+    assert k_scales.shape == (B, S, D // MXBLOCK), k_scales.shape
+    bs = _pick_chunk(S, bs)
+    n_chunks = S // bs
+    pos2 = jnp.broadcast_to(jnp.asarray(q_pos, jnp.int32).reshape(-1),
+                            (B,)).reshape(B, 1)
+    len2 = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32).reshape(-1),
+                            (B,)).reshape(B, 1)
+    kern = functools.partial(_flash_decode_kernel, fmt=fmt, bits=bits,
+                             window=window, kvh=kvh, dh=Dh,
+                             n_chunks=n_chunks)
+    db = k_codes.shape[2]
+    ns = D // MXBLOCK
+    out, _, _ = pl.pallas_call(
+        kern,
+        grid=(B, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, H, Dh), lambda i, c: (i, 0, 0)),
+            pl.BlockSpec((1, bs, db), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, bs, ns), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, bs, db), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, bs, ns), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, 1), lambda i, c: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, c: (i, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, H, Dh), lambda i, c: (i, 0, 0)),
+            pl.BlockSpec((1, H), lambda i, c: (i, 0)),
+            pl.BlockSpec((1, H), lambda i, c: (i, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((B, H, Dh), jnp.float32),
+            jax.ShapeDtypeStruct((B, H), jnp.float32),
+            jax.ShapeDtypeStruct((B, H), jnp.float32),
+        ),
+        interpret=interpret,
+    )(q, k_codes, k_scales, v_codes, v_scales, pos2, len2)
+    return out

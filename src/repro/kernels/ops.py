@@ -11,8 +11,10 @@ import jax
 import jax.numpy as jnp
 
 from . import hadamard_quant as _hq
+from . import mx_attention as _ma
 from . import mx_matmul as _mm
 from . import mx_quant as _mq
+from . import packing as _pk
 from . import ref
 
 
@@ -77,9 +79,79 @@ def mx_gemm_packed(x, w_packed, w_scales_e8m0, fmt: str = "mxfp4",
     return fn(x, w_packed, w_scales_e8m0)
 
 
+def _flash_decode_contract(q, k_codes, k_scales, v_codes,
+                           v_scales, fmt: str) -> bool:
+    """Does the packed KV meet the Pallas flash-decode kernel contract?"""
+    if fmt not in _pk.KV_FMTS:
+        return False
+    if q.ndim != 3 or k_codes.ndim != 3 or k_scales.ndim != 3:
+        return False
+    B, H, Dh = q.shape
+    bits = _pk.kv_fmt_bits(fmt)
+    D = k_codes.shape[2] * 8 // bits
+    if D % 32 != 0 or Dh == 0 or D % Dh != 0 or H % (D // Dh) != 0:
+        return False
+    return (k_codes.shape[0] == B
+            and k_scales.shape == (B, k_codes.shape[1], D // 32)
+            and v_codes.shape == k_codes.shape
+            and v_scales.shape == k_scales.shape)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("fmt", "window", "bs", "interpret"))
+def mx_flash_decode(q, k_codes, k_scales, v_codes, v_scales, q_pos,
+                    kv_len, fmt: str = "mxfp8", window: int = 0,
+                    bs: int | None = None,
+                    interpret: bool | None = None):
+    """Flash-decode attention over a packed MX KV cache.
+
+    Shapes/dtypes: q (B, H, Dh) float — one decode token per lane;
+    k/v_codes (B, S, D*bits/8) uint8 and k/v_scales (B, S, D//32) uint8
+    E8M0 bytes in the ``packing.PackedKV`` layout (D = n_kv_heads * Dh,
+    nibble-packed along the feature axis for 4-bit fmts); q_pos / kv_len
+    (B,) int32 (scalars broadcast). Keys are contiguous from position 0.
+    Returns (B, H, Dh) float32. ``window`` > 0 masks keys at
+    ``pos <= q_pos - window`` (sliding-window attention).
+
+    Dispatch: the Pallas kernel consumes the packed bytes directly
+    (decoded per KV chunk in VMEM, online softmax with GQA and per-lane
+    masking). Anything off-contract — a non-KV format, a mismatched
+    scale layout, a head count the GQA view cannot tile — is rejected
+    with a ValueError: every such input is equally ill-formed for the
+    jnp oracle, so there is no graceful fallback to route to. The
+    *model-level* fallback lives in ``models.layers.attention``: caches
+    the kernel cannot serve (ring buffers, chunked prefill, the 'ref'
+    backend) are decoded in place and run the dense jnp path. Off-TPU
+    the kernel executes in interpret mode (correct, slow) unless
+    ``interpret`` is forced.
+
+    ``bs`` (KV chunk width) defaults to the whole cache under interpret
+    mode — the chunk grid exists for the TPU memory hierarchy, and an
+    interpreted grid step is pure overhead — and to a VMEM-sized tile
+    when compiled.
+    """
+    if not _flash_decode_contract(q, k_codes, k_scales, v_codes,
+                                  v_scales, fmt):
+        raise ValueError(
+            f"mx_flash_decode contract violation: q {q.shape}, k_codes "
+            f"{k_codes.shape}, k_scales {k_scales.shape}, v_codes "
+            f"{v_codes.shape}, v_scales {v_scales.shape}, fmt={fmt!r}. "
+            f"Expected q (B, H, Dh); codes (B, S, D*bits/8) with "
+            f"D % 32 == 0, D % Dh == 0 and H divisible by the kv-head "
+            f"count D/Dh; scales (B, S, D//32); V shapes matching K; "
+            f"fmt one of {_pk.KV_FMTS}.")
+    it = _default_interpret() if interpret is None else interpret
+    if bs is None:
+        bs = k_codes.shape[1] if it else 512
+    return _ma.mx_flash_decode(q, k_codes, k_scales, v_codes, v_scales,
+                               q_pos, kv_len, fmt, window=window, bs=bs,
+                               interpret=it)
+
+
 # re-exported oracles
 mx_quant_ref = ref.mx_quant_ref
 mx_matmul_ref = ref.mx_matmul_ref
 mx_matmul_packed_ref = ref.mx_matmul_packed_ref
+mx_attention_ref = ref.mx_attention_ref
 hadamard_quant_ref = ref.hadamard_quant_ref
 quantize_weight_for_kernel = ref.quantize_weight_for_kernel

@@ -28,6 +28,10 @@ from repro.core import mx as mxlib
 # 4-bit element grid is 2*8-1 = 15 values (codes 0..14 < 16).
 PACKABLE_FMTS = ("mxfp4", "mxint4")
 
+# Formats the KV cache can be stored in: 8-bit formats keep one code per
+# byte; 4-bit formats nibble-pack along the feature axis like weights.
+KV_FMTS = ("mxfp8", "mxint8", "mxfp4", "mxint4")
+
 
 def _check_packable(fmt: str, block_size: int = 32, scale_mode: str = "pow2"):
     if fmt not in PACKABLE_FMTS:
@@ -177,3 +181,114 @@ def maybe_dense(w):
     if isinstance(w, PackedWeight):
         return w.to_dense()
     return w
+
+
+# ---------------------------------------------------------------------------
+# Packed KV cache: MX codes + E8M0 scale bytes along the *last* axis
+# ---------------------------------------------------------------------------
+#
+# Weights pack along the contraction axis (-2); the KV cache packs along its
+# feature axis (-1, the stored (B, S, kv_dim) layout — 32-blocks sit inside
+# heads whenever head_dim % 32 == 0, i.e. every production config). 8-bit
+# formats (mxfp8 / mxint8) store one code per byte; 4-bit formats
+# nibble-pack two codes per byte exactly like PackedWeight.
+
+
+def _kv_center(fmt: str) -> int:
+    """The uint8 code that decodes to 0.0 (zero-init of a fresh cache)."""
+    return len(mxlib.FORMATS[fmt].grid) - 1
+
+
+def kv_fmt_bits(fmt: str) -> int:
+    if fmt not in KV_FMTS:
+        raise ValueError(f"fmt {fmt!r} is not a KV-cache format "
+                         f"(supported: {KV_FMTS})")
+    return mxlib.FORMATS[fmt].bits
+
+
+def kv_encode(x: jnp.ndarray, fmt: str = "mxfp8"):
+    """(..., D) float -> (codes uint8 (..., D*bits/8), scales uint8
+    (..., D//32) E8M0). D % 32 == 0; pow2 scales per 32-block."""
+    bits = kv_fmt_bits(fmt)
+    cfg = mxlib.MXConfig(fmt=fmt, block_size=32)
+    if x.shape[-1] % 32 != 0:
+        raise ValueError(f"KV feature dim {x.shape[-1]} not divisible by 32")
+    codes, scales = mxlib.encode(x, cfg)
+    if bits == 4:
+        codes = pack_codes(codes)
+    return codes, pack_scales_e8m0(scales)
+
+
+def kv_decode(codes: jnp.ndarray, scales_e8m0: jnp.ndarray,
+              fmt: str = "mxfp8", dtype=jnp.float32) -> jnp.ndarray:
+    """Inverse of :func:`kv_encode` -> (..., D) dense values."""
+    bits = kv_fmt_bits(fmt)
+    cfg = mxlib.MXConfig(fmt=fmt, block_size=32)
+    if bits == 4:
+        codes = unpack_codes(codes)
+    return mxlib.decode(codes, unpack_scales_e8m0(scales_e8m0), cfg, dtype)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PackedKV:
+    """An MX-quantized KV-cache tensor usable in place of a dense array.
+
+    codes: (*lead, S, D*bits/8) uint8 — one code per byte (8-bit fmts) or
+    nibble-packed (4-bit fmts) along the feature axis; scales: (*lead, S,
+    D//32) uint8 E8M0 bytes. Registered as a pytree so a cache holding
+    PackedKV leaves flows through jit / lax.scan (layer-sliced like any
+    stacked leaf) and the engine's lane-merge ``tree_map`` untouched.
+    ``fmt``/``dtype`` are static aux data, so dispatch on them never
+    retraces."""
+
+    codes: jnp.ndarray
+    scales: jnp.ndarray
+    fmt: str = "mxfp8"
+    dtype: str = "float32"
+
+    def tree_flatten(self):
+        return (self.codes, self.scales), (self.fmt, self.dtype)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], *aux)
+
+    @property
+    def shape(self):
+        """Logical dense shape (*lead, S, D)."""
+        *lead, s, db = self.codes.shape
+        return tuple(lead) + (s, db * 8 // kv_fmt_bits(self.fmt))
+
+    @property
+    def ndim(self) -> int:
+        return self.codes.ndim
+
+    @property
+    def nbytes_packed(self) -> int:
+        return int(self.codes.size) + int(self.scales.size)
+
+    def to_dense(self, dtype=None) -> jnp.ndarray:
+        return kv_decode(self.codes, self.scales, self.fmt,
+                         dtype if dtype is not None else
+                         jnp.dtype(self.dtype))
+
+    @classmethod
+    def from_dense(cls, x: jnp.ndarray, fmt: str = "mxfp8") -> "PackedKV":
+        c, s = kv_encode(x, fmt)
+        return cls(c, s, fmt, str(jnp.asarray(x).dtype))
+
+    @classmethod
+    def zeros(cls, shape, fmt: str = "mxfp8",
+              dtype=jnp.float32) -> "PackedKV":
+        """Fresh cache of logical dense ``shape`` (*lead, S, D): center
+        codes (which decode to 0.0) and unit E8M0 scales."""
+        *lead, d = shape
+        bits = kv_fmt_bits(fmt)
+        if d % 32 != 0:
+            raise ValueError(f"KV feature dim {d} not divisible by 32")
+        center = _kv_center(fmt)
+        cbyte = center | (center << 4) if bits == 4 else center
+        codes = jnp.full(tuple(lead) + (d * bits // 8,), cbyte, jnp.uint8)
+        scales = jnp.full(tuple(lead) + (d // 32,), 127, jnp.uint8)
+        return cls(codes, scales, fmt, str(jnp.dtype(dtype)))

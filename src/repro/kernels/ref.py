@@ -65,6 +65,45 @@ def mx_matmul_packed_ref(x: jnp.ndarray, w_packed: jnp.ndarray,
     return mx_matmul_ref(xf, codes, scales, fmt)
 
 
+def mx_attention_ref(q: jnp.ndarray, k_codes: jnp.ndarray,
+                     k_scales: jnp.ndarray, v_codes: jnp.ndarray,
+                     v_scales: jnp.ndarray, q_pos: jnp.ndarray,
+                     kv_len: jnp.ndarray, fmt: str = "mxfp8",
+                     window: int = 0) -> jnp.ndarray:
+    """Golden oracle for :func:`repro.kernels.mx_attention.mx_flash_decode`.
+
+    q: (B, H, Dh); k/v codes + E8M0 scale bytes in the ``PackedKV``
+    layout (see ``packing.kv_encode``); q_pos / kv_len: (B,) int32 (or
+    scalars, broadcast). Decodes the whole cache and runs one masked
+    fp32 softmax — no chunking, no online accumulation — so any
+    streaming/decode bug in the kernel shows up against it.
+    """
+    from repro.kernels import packing
+    B, H, Dh = q.shape
+    k = packing.kv_decode(k_codes, k_scales, fmt)        # (B, S, D)
+    v = packing.kv_decode(v_codes, v_scales, fmt)
+    S, D = k.shape[1], k.shape[2]
+    kvh = D // Dh
+    G = H // kvh
+    qg = q.astype(jnp.float32).reshape(B, kvh, G, Dh)
+    kh = k.reshape(B, S, kvh, Dh)
+    vh = v.reshape(B, S, kvh, Dh)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(Dh, jnp.float32))
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, kh) * scale
+    kp = jnp.arange(S, dtype=jnp.int32)[None, :]          # (1, S)
+    qp = jnp.broadcast_to(jnp.asarray(q_pos, jnp.int32).reshape(-1),
+                          (B,))[:, None]
+    kl = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32).reshape(-1),
+                          (B,))[:, None]
+    ok = (kp <= qp) & (kp < kl)
+    if window:
+        ok = ok & (kp > qp - window)
+    s = jnp.where(ok[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, vh)
+    return out.reshape(B, H, Dh)
+
+
 def quantize_weight_for_kernel(w: jnp.ndarray, fmt: str = "mxfp4",
                                block: int = 32):
     """Pre-quantize a (K, N) weight along K into kernel layout:

@@ -42,10 +42,21 @@ def forward(params, cfg: ArchConfig, inputs, qm: QuantMode = QuantMode.off()):
 
 
 def prefill(params, cfg: ArchConfig, inputs, qm: QuantMode = QuantMode.off(),
-            max_len: int | None = None):
+            max_len: int | None = None, kv_quant=None):
+    """Run the prompt, return (last logits, cache). ``kv_quant`` — an
+    optional :class:`repro.core.quantize.KVCacheQuant` — returns the KV
+    cache MX-quantized (``PackedKV`` leaves; attention-cache families
+    only, see ``docs/kv-cache.md``)."""
     if cfg.family == "encoder":
         raise ValueError("encoder-only arch has no decode/prefill step")
-    return module_for(cfg).prefill(params, cfg, inputs, qm, max_len=max_len)
+    if kv_quant is None:
+        return module_for(cfg).prefill(params, cfg, inputs, qm,
+                                       max_len=max_len)
+    if cfg.family == "ssm":
+        raise ValueError("ssm family has no attention KV cache to "
+                         "quantize; serve it with kv_cache='none'")
+    return module_for(cfg).prefill(params, cfg, inputs, qm,
+                                   max_len=max_len, kv_quant=kv_quant)
 
 
 def decode(params, cfg: ArchConfig, cache, inputs, cur_len,
@@ -73,8 +84,17 @@ def prefill_chunk(params, cfg: ArchConfig, cache, inputs, start, last_idx,
     return mod.prefill_chunk(params, cfg, cache, inputs, start, last_idx, qm)
 
 
-def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.float32):
-    return module_for(cfg).init_cache(cfg, batch, max_len, dtype)
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.float32,
+               kv_quant=None):
+    """Allocate the decode cache. ``kv_quant`` stores attention KV as MX
+    codes + E8M0 scale bytes (quantize-on-append; ``docs/kv-cache.md``)."""
+    if kv_quant is None:
+        return module_for(cfg).init_cache(cfg, batch, max_len, dtype)
+    if cfg.family == "ssm":
+        raise ValueError("ssm family has no attention KV cache to "
+                         "quantize; serve it with kv_cache='none'")
+    return module_for(cfg).init_cache(cfg, batch, max_len, dtype,
+                                      kv_quant=kv_quant)
 
 
 def fold_norms(params, cfg: ArchConfig):

@@ -26,9 +26,10 @@ from repro.configs.base import ArchConfig
 from repro.core import folding as fold_lib
 from repro.core.quantize import QuantMode, qlinear
 from repro.launch import pcontext as pctx
+from repro.kernels.packing import PackedKV
 from .layers import (apply_rope, attention, causal_conv1d, conv1d_step,
-                     dense_init, flash_attention, gated_mlp, rms_norm,
-                     scan_layers)
+                     dense_init, flash_attention, gated_mlp, kv_heads_view,
+                     kv_write_slice, rms_norm, scan_layers)
 
 C_RGLRU = 8.0
 
@@ -194,7 +195,11 @@ def attn_sublayer(x, p, cfg: ArchConfig, qm: QuantMode, pos):
 
 def attn_sublayer_decode(x, p, cfg: ArchConfig, qm: QuantMode,
                          ck, cv, cur_len):
-    """Ring-buffer decode. ck/cv: (B, A, kv_dim); slot = cur_len % A."""
+    """Ring-buffer decode. ck/cv: (B, A, kv_dim) dense or MX-packed
+    ``PackedKV`` (quantize-on-append); slot = cur_len % A. The ring
+    buffer carries explicit key positions, which keeps packed caches on
+    the decode-in-place attention fallback (the flash-decode kernel
+    contract wants contiguous keys)."""
     B = x.shape[0]
     A = ck.shape[1]
     pos = jnp.reshape(cur_len, (1,)).astype(jnp.int32)
@@ -207,16 +212,17 @@ def attn_sublayer_decode(x, p, cfg: ArchConfig, qm: QuantMode,
     kh = apply_rope(k.reshape(B, 1, cfg.n_kv_heads, cfg.head_dim), pos,
                     cfg.rope_theta).reshape(B, 1, cfg.kv_dim)
     slot = jnp.mod(cur_len, A)
-    ck = jax.lax.dynamic_update_slice(ck, kh, (0, slot, 0))
-    cv = jax.lax.dynamic_update_slice(cv, v, (0, slot, 0))
+    ck = kv_write_slice(ck, kh, slot)
+    cv = kv_write_slice(cv, v, slot)
     # slot s holds absolute position: cur_len - ((cur_len - s) mod A)
     s_idx = jnp.arange(A, dtype=jnp.int32)
     k_pos = cur_len - jnp.mod(cur_len - s_idx, A)
     k_pos = jnp.where(k_pos >= 0, k_pos, -1)
-    out = attention(q, ck.reshape(B, A, cfg.n_kv_heads, cfg.head_dim),
-                    cv.reshape(B, A, cfg.n_kv_heads, cfg.head_dim),
+    out = attention(q, kv_heads_view(ck, cfg.n_kv_heads, cfg.head_dim),
+                    kv_heads_view(cv, cfg.n_kv_heads, cfg.head_dim),
                     causal=True, q_pos=pos, window=cfg.window,
-                    k_positions=k_pos, chunk=cfg.attn_chunk)
+                    k_positions=k_pos, chunk=cfg.attn_chunk,
+                    backend=qm.backend)
     out = qlinear(out.reshape(B, 1, cfg.q_dim), p["wo"], p.get("bo"), qm,
                   "attn_out")
     return x + out, ck, cv
@@ -272,13 +278,21 @@ def forward(params, cfg: ArchConfig, inputs,
     return head_out(x, params, cfg, qm)
 
 
-def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.float32):
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.float32,
+               kv_quant=None):
     ns, nt = cfg.n_super_blocks, cfg.n_tail_rec
     A = min(max_len, cfg.window)
     lru, K = cfg.lru_width, cfg.conv_kernel
+    kv_shape = (ns, batch, A, cfg.kv_dim)
+    if kv_quant is not None:
+        ck = PackedKV.zeros(kv_shape, kv_quant.fmt, dtype)
+        cv = PackedKV.zeros(kv_shape, kv_quant.fmt, dtype)
+    else:
+        ck = jnp.zeros(kv_shape, dtype)
+        cv = jnp.zeros(kv_shape, dtype)
     cache = {
-        "attn_k": jnp.zeros((ns, batch, A, cfg.kv_dim), dtype),
-        "attn_v": jnp.zeros((ns, batch, A, cfg.kv_dim), dtype),
+        "attn_k": ck,
+        "attn_v": cv,
         "rec_h": jnp.zeros((ns, 2, batch, lru), jnp.float32),
         "rec_conv": jnp.zeros((ns, 2, batch, lru, K - 1), dtype),
     }
@@ -289,7 +303,8 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.float32):
 
 
 def prefill(params, cfg: ArchConfig, inputs,
-            qm: QuantMode = QuantMode.off(), max_len: int | None = None):
+            qm: QuantMode = QuantMode.off(), max_len: int | None = None,
+            kv_quant=None):
     x = jnp.take(params["embed"], inputs, axis=0)
     x = pctx.shard(x, "batch", None, None)
     B, S = x.shape[0], x.shape[1]
@@ -312,6 +327,9 @@ def prefill(params, cfg: ArchConfig, inputs,
             k[:, S - W:])
         cv = jnp.zeros((B, A, cfg.kv_dim), v.dtype).at[:, slots].set(
             v[:, S - W:])
+        if kv_quant is not None:
+            ck = PackedKV.from_dense(ck, kv_quant.fmt)
+            cv = PackedKV.from_dense(cv, kv_quant.fmt)
         xc = pctx.shard(xc, "batch", None, None)
         return xc, (ck, cv, jnp.stack([h1, h2]), jnp.stack([c1, c2]))
 

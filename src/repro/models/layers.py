@@ -2,16 +2,59 @@
 chunked), gated MLPs. Pure functions; params are plain dict pytrees."""
 from __future__ import annotations
 
-from typing import Optional
+import functools
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.quantize import QuantMode, qlinear
+from repro.kernels import ops
+from repro.kernels.packing import PackedKV, kv_encode
 from repro.launch import pcontext as pctx
 
 NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# KV-cache leaves: dense (B, S, kv_dim) arrays or MX-packed ``PackedKV``
+# (codes + E8M0 scale bytes). The write helpers quantize at append time —
+# the only lossy point of the quantized-cache path; reads decode in place
+# (ref) or in-kernel (fused flash-decode).
+# ---------------------------------------------------------------------------
+
+def kv_write_rows(cache, new: jnp.ndarray, rows: jnp.ndarray):
+    """Scatter one token per lane: lane b writes row ``rows[b]``.
+    cache: (B, S, kv_dim) dense or PackedKV; new: (B, 1, kv_dim) dense."""
+    bidx = jnp.arange(new.shape[0], dtype=jnp.int32)
+    if isinstance(cache, PackedKV):
+        c, s = kv_encode(new, cache.fmt)
+        return PackedKV(cache.codes.at[bidx, rows].set(c[:, 0]),
+                        cache.scales.at[bidx, rows].set(s[:, 0]),
+                        cache.fmt, cache.dtype)
+    return cache.at[bidx, rows].set(new[:, 0])
+
+
+def kv_write_slice(cache, new: jnp.ndarray, start):
+    """Contiguous write of ``new`` (B, C, kv_dim) at row ``start`` (traced
+    scalar) across all lanes — the scalar-decode / chunked-prefill path."""
+    if isinstance(cache, PackedKV):
+        c, s = kv_encode(new, cache.fmt)
+        return PackedKV(
+            jax.lax.dynamic_update_slice(cache.codes, c, (0, start, 0)),
+            jax.lax.dynamic_update_slice(cache.scales, s, (0, start, 0)),
+            cache.fmt, cache.dtype)
+    return jax.lax.dynamic_update_slice(cache, new, (0, start, 0))
+
+
+def shard_kv(c, *names):
+    """pctx.shard over a cache leaf; a PackedKV shards its children (the
+    divisibility guard drops axes the packed widths cannot honor)."""
+    if isinstance(c, PackedKV):
+        return PackedKV(pctx.shard(c.codes, *names),
+                        pctx.shard(c.scales, *names), c.fmt, c.dtype)
+    return pctx.shard(c, *names)
 
 
 # ---------------------------------------------------------------------------
@@ -35,6 +78,16 @@ def rms_norm_gated(x, z, gamma, eps: float = 1e-5):
 # RoPE
 # ---------------------------------------------------------------------------
 
+@functools.lru_cache(maxsize=None)
+def _rope_inv_freq(theta: float, half: int) -> np.ndarray:
+    """Cached RoPE inverse-frequency table keyed on (theta, head_dim/2) —
+    a host constant, so every trace folds the same array instead of
+    re-deriving the power series per call (the ``hadamard_matrix``
+    treatment)."""
+    return (1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+            ).astype(np.float32)
+
+
 def apply_rope(x: jnp.ndarray, pos: jnp.ndarray, theta: float) -> jnp.ndarray:
     """x: (B, S, N, Dh); pos: (S,) int32 positions shared across the batch,
     or (B, S) per-row positions (continuous-batching decode, where each
@@ -44,7 +97,7 @@ def apply_rope(x: jnp.ndarray, pos: jnp.ndarray, theta: float) -> jnp.ndarray:
     position would."""
     dh = x.shape[-1]
     half = dh // 2
-    inv_freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    inv_freq = jnp.asarray(_rope_inv_freq(float(theta), half))
     if pos.ndim == 2:  # (B, S) per-row positions
         freqs = pos.astype(jnp.float32)[:, :, None] * inv_freq[None, None, :]
         cos = jnp.cos(freqs)[:, :, None, :]            # (B, S, 1, half)
@@ -62,14 +115,57 @@ def apply_rope(x: jnp.ndarray, pos: jnp.ndarray, theta: float) -> jnp.ndarray:
 # Attention — grouped-query, online-softmax over KV chunks.
 # ---------------------------------------------------------------------------
 
-def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+def kv_heads_view(c, kvh: int, dh: int):
+    """(B, S, kv_dim) cache leaf -> the (B, S, K, Dh) view ``attention``
+    expects. A ``PackedKV`` passes through unsplit — attention derives
+    the head view from q and dispatches on the packed layout."""
+    if isinstance(c, PackedKV):
+        return c
+    return c.reshape(c.shape[0], c.shape[1], kvh, dh)
+
+
+def _attention_packed(q, k: PackedKV, v: PackedKV, *, causal, q_pos,
+                      k_start, window, kv_len, k_positions, chunk,
+                      backend):
+    """Attention over an MX-quantized KV cache (see ``docs/kv-cache.md``).
+
+    Under ``backend='fused'`` the single-token decode contract (Sq == 1,
+    contiguous keys, a known fill) dispatches to the Pallas flash-decode
+    kernel, which consumes the packed codes + E8M0 scale bytes straight
+    from HBM. Everything else — chunked prefill (Sq > 1), ring-buffer
+    caches (k_positions), the 'ref' backend — decodes the cache in place
+    (one LUT gather, the PackedWeight fallback posture) and runs the
+    dense jnp path on the same values."""
+    B, Sq, H, Dh = q.shape
+    qp = jnp.asarray(q_pos, jnp.int32)
+    if (backend == "fused" and Sq == 1 and causal and k_positions is None
+            and k_start == 0 and kv_len is not None):
+        qpv = qp[:, 0] if qp.ndim == 2 else qp.reshape(-1)
+        out = ops.mx_flash_decode(
+            q.reshape(B, H, Dh), k.codes, k.scales, v.codes, v.scales,
+            qpv, jnp.asarray(kv_len, jnp.int32).reshape(-1), k.fmt,
+            window=window)
+        return out.reshape(B, Sq, H, Dh).astype(q.dtype)
+    kvh = k.shape[-1] // Dh
+    kd = kv_heads_view(k.to_dense(), kvh, Dh)
+    vd = kv_heads_view(v.to_dense(), kvh, Dh)
+    return attention(q, kd, vd, causal=causal, q_pos=q_pos,
+                     k_start=k_start, window=window, kv_len=kv_len,
+                     k_positions=k_positions, chunk=chunk)
+
+
+def attention(q: jnp.ndarray, k, v, *,
               causal: bool, q_pos: jnp.ndarray, k_start: int = 0,
               window: int = 0, kv_len: Optional[jnp.ndarray] = None,
               k_positions: Optional[jnp.ndarray] = None,
-              chunk: int = 1024) -> jnp.ndarray:
+              chunk: int = 1024, backend: str = "ref") -> jnp.ndarray:
     """Memory-bounded attention.
 
-    q: (B, Sq, H, Dh);  k, v: (B, Sk, K, Dh) with H % K == 0.
+    q: (B, Sq, H, Dh);  k, v: (B, Sk, K, Dh) with H % K == 0 — or
+    ``PackedKV`` leaves of logical shape (B, Sk, K*Dh) (MX-quantized
+    cache; see :func:`_attention_packed` for the dispatch rules —
+    ``backend='fused'`` engages the Pallas flash-decode kernel on the
+    single-token decode contract).
     q_pos: (Sq,) absolute positions of the queries, shared across the
             batch — or (B, Sq) per-row positions (continuous-batching
             decode, every lane at its own position).
@@ -86,6 +182,11 @@ def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     would select per row, so per-row calls are value-identical per lane to
     the scalar path (the engine's scheduler-parity tests pin this down).
     """
+    if isinstance(k, PackedKV):
+        return _attention_packed(q, k, v, causal=causal, q_pos=q_pos,
+                                 k_start=k_start, window=window,
+                                 kv_len=kv_len, k_positions=k_positions,
+                                 chunk=chunk, backend=backend)
     B, Sq, H, Dh = q.shape
     Sk, K = k.shape[1], k.shape[2]
     G = H // K

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig
 from repro.core import folding as fold_lib
 from repro.core.quantize import QuantMode, qeinsum, qlinear
+from repro.kernels.packing import PackedKV
 from repro.launch import pcontext as pctx
 from .layers import dense_init, gated_mlp, rms_norm, scan_layers
 from . import transformer as dense
@@ -187,7 +188,7 @@ init_cache = dense.init_cache
 
 
 def prefill(params, cfg: ArchConfig, inputs, qm: QuantMode = QuantMode.off(),
-            max_len: int | None = None):
+            max_len: int | None = None, kv_quant=None):
     x = dense.embed_inputs(params, cfg, inputs)
     B, S = x.shape[0], x.shape[1]
     pos = jnp.arange(S, dtype=jnp.int32)
@@ -204,6 +205,9 @@ def prefill(params, cfg: ArchConfig, inputs, qm: QuantMode = QuantMode.off(),
         pad = jnp.zeros((cfg.n_layers, B, max_len - S, cfg.kv_dim), ks.dtype)
         ks = jnp.concatenate([ks, pad], axis=2)
         vs = jnp.concatenate([vs, pad], axis=2)
+    if kv_quant is not None:
+        ks = PackedKV.from_dense(ks, kv_quant.fmt)
+        vs = PackedKV.from_dense(vs, kv_quant.fmt)
     return logits, {"k": ks, "v": vs}
 
 

@@ -15,9 +15,11 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig
 from repro.core import folding as fold_lib
 from repro.core.quantize import QuantMode, qlinear
+from repro.kernels.packing import PackedKV
 from repro.launch import pcontext as pctx
 from .layers import (apply_rope, attention, dense_init, flash_attention,
-                     gated_mlp, rms_norm, scan_layers)
+                     gated_mlp, kv_heads_view, kv_write_rows,
+                     kv_write_slice, rms_norm, scan_layers, shard_kv)
 
 
 # ---------------------------------------------------------------------------
@@ -125,30 +127,34 @@ def attn_sublayer_decode(x, p, cfg: ArchConfig, qm: QuantMode,
     ``cur_len`` is a traced int32 scalar (all rows share one position —
     the wave scheduler) or a (B,) vector (continuous batching: each row
     writes and attends at its own position). The vector path is
-    value-identical per row to the scalar path at that row's position."""
+    value-identical per row to the scalar path at that row's position.
+
+    ``cache_k``/``cache_v`` may be MX-packed ``PackedKV`` leaves
+    (``Engine(kv_cache=...)``): the new token's k/v are quantized at
+    append time and attention consumes the packed cache — in-kernel
+    under the fused backend, decode-in-place otherwise."""
     B = x.shape[0]
     cl = jnp.asarray(cur_len)
     if cl.ndim == 1:                                   # per-slot positions
         pos = cl.astype(jnp.int32)[:, None]            # (B, 1)
         q, k, v = _qkv(x, p, cfg, qm, pos)
-        bidx = jnp.arange(B, dtype=jnp.int32)
-        cache_k = cache_k.at[bidx, cl].set(k[:, 0])
-        cache_v = cache_v.at[bidx, cl].set(v[:, 0])
+        cache_k = kv_write_rows(cache_k, k, cl)
+        cache_v = kv_write_rows(cache_v, v, cl)
         kv_len = cl.astype(jnp.int32) + 1              # (B,)
     else:
         pos = jnp.reshape(cur_len, (1,)).astype(jnp.int32)
         q, k, v = _qkv(x, p, cfg, qm, pos)
-        cache_k = jax.lax.dynamic_update_slice(cache_k, k, (0, cur_len, 0))
-        cache_v = jax.lax.dynamic_update_slice(cache_v, v, (0, cur_len, 0))
+        cache_k = kv_write_slice(cache_k, k, cur_len)
+        cache_v = kv_write_slice(cache_v, v, cur_len)
         kv_len = cur_len + 1
-    cache_k = pctx.shard(cache_k, "batch", None, "model")
-    cache_v = pctx.shard(cache_v, "batch", None, "model")
-    Smax = cache_k.shape[1]
+    cache_k = shard_kv(cache_k, "batch", None, "model")
+    cache_v = shard_kv(cache_v, "batch", None, "model")
     out = attention(q,
-                    cache_k.reshape(B, Smax, cfg.n_kv_heads, cfg.head_dim),
-                    cache_v.reshape(B, Smax, cfg.n_kv_heads, cfg.head_dim),
+                    kv_heads_view(cache_k, cfg.n_kv_heads, cfg.head_dim),
+                    kv_heads_view(cache_v, cfg.n_kv_heads, cfg.head_dim),
                     causal=True, q_pos=pos, kv_len=kv_len,
-                    window=window, chunk=cfg.attn_chunk)
+                    window=window, chunk=cfg.attn_chunk,
+                    backend=qm.backend)
     out = out.reshape(B, 1, cfg.q_dim)
     out = qlinear(out, p["wo"], p.get("bo"), qm, "attn_out")
     return x + out, cache_k, cache_v
@@ -170,16 +176,16 @@ def attn_sublayer_chunk(x, p, cfg: ArchConfig, qm: QuantMode,
     B, C = x.shape[0], x.shape[1]
     q, k, v = _qkv(x, p, cfg, qm, pos)
     start = pos[0]
-    cache_k = jax.lax.dynamic_update_slice(cache_k, k, (0, start, 0))
-    cache_v = jax.lax.dynamic_update_slice(cache_v, v, (0, start, 0))
-    cache_k = pctx.shard(cache_k, "batch", None, "model")
-    cache_v = pctx.shard(cache_v, "batch", None, "model")
-    Smax = cache_k.shape[1]
+    cache_k = kv_write_slice(cache_k, k, start)
+    cache_v = kv_write_slice(cache_v, v, start)
+    cache_k = shard_kv(cache_k, "batch", None, "model")
+    cache_v = shard_kv(cache_v, "batch", None, "model")
     out = attention(q,
-                    cache_k.reshape(B, Smax, cfg.n_kv_heads, cfg.head_dim),
-                    cache_v.reshape(B, Smax, cfg.n_kv_heads, cfg.head_dim),
+                    kv_heads_view(cache_k, cfg.n_kv_heads, cfg.head_dim),
+                    kv_heads_view(cache_v, cfg.n_kv_heads, cfg.head_dim),
                     causal=True, q_pos=pos, kv_len=kv_len,
-                    window=window, chunk=cfg.attn_chunk)
+                    window=window, chunk=cfg.attn_chunk,
+                    backend=qm.backend)
     out = out.reshape(B, C, cfg.q_dim)
     out = qlinear(out, p["wo"], p.get("bo"), qm, "attn_out")
     return x + out, cache_k, cache_v
@@ -226,15 +232,22 @@ def forward(params, cfg: ArchConfig, inputs, qm: QuantMode = QuantMode.off()):
     return pctx.shard(logits, "batch", None, "model")
 
 
-def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.float32):
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.float32,
+               kv_quant=None):
     shape = (cfg.n_layers, batch, max_len, cfg.kv_dim)
+    if kv_quant is not None:
+        return {"k": PackedKV.zeros(shape, kv_quant.fmt, dtype),
+                "v": PackedKV.zeros(shape, kv_quant.fmt, dtype)}
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
 def prefill(params, cfg: ArchConfig, inputs,
-            qm: QuantMode = QuantMode.off(), max_len: int | None = None):
+            qm: QuantMode = QuantMode.off(), max_len: int | None = None,
+            kv_quant=None):
     """Run the prompt, return (last-position logits (B, V), cache).
-    ``max_len`` sizes the cache for subsequent decode steps."""
+    ``max_len`` sizes the cache for subsequent decode steps. ``kv_quant``
+    stores the returned cache MX-quantized (the prompt attends its own
+    dense k/v — quantization applies to what decode reads back)."""
     x = embed_inputs(params, cfg, inputs)
     B, S = x.shape[0], x.shape[1]
     pos = jnp.arange(S, dtype=jnp.int32)
@@ -252,8 +265,11 @@ def prefill(params, cfg: ArchConfig, inputs,
         pad = jnp.zeros((L, B, max_len - S, cfg.kv_dim), ks.dtype)
         ks = jnp.concatenate([ks, pad], axis=2)
         vs = jnp.concatenate([vs, pad], axis=2)
-    cache = {"k": pctx.shard(ks, None, "batch", None, "model"),
-             "v": pctx.shard(vs, None, "batch", None, "model")}
+    if kv_quant is not None:
+        ks = PackedKV.from_dense(ks, kv_quant.fmt)
+        vs = PackedKV.from_dense(vs, kv_quant.fmt)
+    cache = {"k": shard_kv(ks, None, "batch", None, "model"),
+             "v": shard_kv(vs, None, "batch", None, "model")}
     return logits, cache
 
 

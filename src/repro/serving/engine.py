@@ -43,7 +43,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.core.quantize import QuantMode
+from repro.core.quantize import KVCacheQuant, QuantMode
 from repro.models import api
 
 SCHEDULERS = ("wave", "continuous")
@@ -99,7 +99,8 @@ class Engine:
                  backend: str | None = None,
                  bucket_prompts: bool = True,
                  scheduler: str = "wave",
-                 eos_id: Optional[int] = None):
+                 eos_id: Optional[int] = None,
+                 kv_cache: "str | KVCacheQuant | None" = None):
         """bucket_prompts=True rounds prompt lengths up to the attention
         chunk so distinct lengths reuse one prefill compile (wave) / keep
         the chunk grid aligned (continuous). Bucketed pads are left-pad
@@ -108,7 +109,17 @@ class Engine:
         unpadded, per-length compiles.
 
         scheduler='continuous' requires a token-embedding KV-cache family
-        (dense/moe); recurrent families (hybrid/ssm) serve with 'wave'."""
+        (dense/moe); recurrent families (hybrid/ssm) serve with 'wave'.
+
+        kv_cache: 'mxfp8' | 'mxint8' | 'mxfp4' | 'mxint4' stores the KV
+        cache MX-quantized (codes + E8M0 scale bytes per 32-block along
+        kv_dim; see ``docs/kv-cache.md``) — keys/values are quantized at
+        append time and decode attention reads the packed bytes (the
+        Pallas flash-decode kernel under ``backend='fused'``, decode-in-
+        place otherwise). Greedy outputs match the dense cache within a
+        small tolerance; 'none'/None (default) keeps the dense fp cache
+        bit-identical to previous behavior. Attention-cache families
+        only (dense/moe/hybrid), and kv_dim must divide into 32-blocks."""
         if cfg.family == "encoder":
             raise ValueError("encoder archs are not served autoregressively")
         if scheduler not in SCHEDULERS:
@@ -120,6 +131,19 @@ class Engine:
                 "continuous scheduler requires a token-embedding KV-cache "
                 "family (dense/moe); recurrent-state families must use "
                 "scheduler='wave'")
+        self.kv_quant = KVCacheQuant.parse(kv_cache)
+        if self.kv_quant is not None:
+            if cfg.family == "ssm":
+                raise ValueError("kv_cache quantization requires an "
+                                 "attention KV cache; ssm serves with "
+                                 "kv_cache='none'")
+            if cfg.kv_dim % 32 != 0:
+                raise ValueError(
+                    f"kv_cache quantization needs kv_dim % 32 == 0 (one "
+                    f"E8M0 scale per 32-block along the cache feature "
+                    f"axis), got kv_dim={cfg.kv_dim} for {cfg.name!r} — "
+                    f"serve this model with kv_cache='none', or pick an "
+                    f"arch whose n_kv_heads*head_dim is a multiple of 32")
         if backend is not None:
             qm = qm.with_backend(backend)
         self.params, self.cfg, self.qm = params, cfg, qm
@@ -147,7 +171,8 @@ class Engine:
         self.useful_decode_tokens = 0
 
         def prefill(params, toks):
-            return api.prefill(params, cfg, toks, qm, max_len=self.max_len)
+            return api.prefill(params, cfg, toks, qm, max_len=self.max_len,
+                               kv_quant=self.kv_quant)
 
         def prefill_chunk(params, cache, toks, start, last_idx):
             return api.prefill_chunk(params, cfg, cache, toks, start,
@@ -174,13 +199,43 @@ class Engine:
         self._admit_cursor = 0            # ring rotation over the lanes
         self._cache = None                # persistent (B, max_len) KV pool
         self._slot_cache = None           # (1, max_len) admission scratch
+        self._home = None                 # canonical input sharding (lazy)
+
+    def _home_sharding(self):
+        """Canonical replicated sharding for fresh host-built inputs (the
+        pool cache, a burst's first cur/pos). Uncommitted arrays are a
+        different jit cache key than the committed outputs the steps
+        produce — without this, the chunk-prefill/decode/merge functions
+        each compile twice (fresh-input signature + steady state), a
+        multi-second hit that landed inside the timed serving run and was
+        most of the continuous scheduler's tok/s gap. Scope: this matches
+        the steps' output shardings on single-replica serving (the tested
+        posture); under a live multi-device mesh whose steps constrain
+        the cache to batch/model axes, the first step after a fresh input
+        can still compile separately."""
+        if self._home is None:
+            home = jax.sharding.SingleDeviceSharding(jax.devices()[0])
+            for leaf in jax.tree.leaves(self.params):
+                s = getattr(leaf, "sharding", None)
+                if isinstance(s, jax.sharding.NamedSharding):
+                    home = jax.sharding.NamedSharding(
+                        s.mesh, jax.sharding.PartitionSpec())
+                    break
+            self._home = home
+        return self._home
+
+    def _commit(self, tree):
+        """device_put a fresh pytree onto the canonical sharding."""
+        return jax.device_put(tree, self._home_sharding())
 
     @classmethod
     def from_artifact(cls, path, batch_size: int = 4, max_len: int = 256,
                       eager: bool = False, verify: bool = True,
                       backend: str | None = None,
                       scheduler: str = "wave",
-                      eos_id: Optional[int] = None) -> "Engine":
+                      eos_id: Optional[int] = None,
+                      kv_cache: "str | KVCacheQuant | None" = None
+                      ) -> "Engine":
         """Serve directly from an exported artifact directory: no
         calibration, no re-quantization — load packed bytes and go.
 
@@ -189,13 +244,13 @@ class Engine:
         materializes dense fp weights once at load. backend='fused'
         routes the quantized matmuls through the packed-native Pallas
         kernels (requires eager=False to have any effect — eager loads
-        are dense and fall back to the reference path). scheduler/eos_id
-        are forwarded to :class:`Engine`."""
+        are dense and fall back to the reference path). scheduler/eos_id/
+        kv_cache are forwarded to :class:`Engine`."""
         from repro.artifacts import load_artifact
         params, cfg, qm = load_artifact(path, eager=eager, verify=verify,
                                         backend=backend)
         return cls(params, cfg, qm, batch_size=batch_size, max_len=max_len,
-                   scheduler=scheduler, eos_id=eos_id)
+                   scheduler=scheduler, eos_id=eos_id, kv_cache=kv_cache)
 
     # ------------------------------------------------------------------
     # Streaming API
@@ -329,8 +384,12 @@ class Engine:
     def _ensure_pool(self) -> None:
         if self._cache is None:
             dt = self._cache_dtype()
-            self._cache = api.init_cache(self.cfg, self.B, self.max_len, dt)
-            self._slot_cache = api.init_cache(self.cfg, 1, self.max_len, dt)
+            self._cache = self._commit(
+                api.init_cache(self.cfg, self.B, self.max_len, dt,
+                               kv_quant=self.kv_quant))
+            self._slot_cache = self._commit(
+                api.init_cache(self.cfg, 1, self.max_len, dt,
+                               kv_quant=self.kv_quant))
 
     def _admit(self, slot: int, req: Request) -> tuple:
         """Chunk-prefill ``req`` into lane ``slot`` of the persistent
@@ -400,30 +459,57 @@ class Engine:
         if not live:
             return done
 
-        # --- one decode step over every lane (dead lanes idle at pos 0;
-        # their sampled tokens are discarded) ---
+        # --- decode burst over every lane (dead lanes idle; their
+        # sampled tokens are discarded, their stale cache rows are
+        # overwritten wholesale at the next admission merge).
+        #
+        # With no eos_id the slot schedule is deterministic on the host:
+        # every lane runs exactly `remaining` more steps. All steps up to
+        # the next lane completion are therefore dispatched back-to-back
+        # with the sampled-token array fed straight back on device — the
+        # device->host fetch (needed only for on_token emission and
+        # bookkeeping) is batched ONCE per burst instead of syncing the
+        # dispatch pipeline every step, which is what let the wave
+        # scheduler out-run continuous on tok/s. With an eos_id any step
+        # can free a lane, so the burst degenerates to one step (EOS must
+        # be observed before the next input token is chosen... it is the
+        # next input token, so the pipeline is inherently serialized).
+        burst = 1 if self.eos_id is not None else min(
+            self._slots[i].remaining for i in live)
         cur = np.zeros(self.B, np.int32)
         pos = np.zeros(self.B, np.int32)
         for i in live:
             cur[i] = self._slots[i].toks[-1]
             pos[i] = self._slots[i].pos
         self._count_decode_compile(self.B, "vector")
-        nxt, self._cache = self._decode(self.params, self._cache,
-                                        jnp.asarray(cur), jnp.asarray(pos))
-        self.decode_steps += 1
-        self.slot_steps += self.B
-        nxt_h = np.asarray(nxt)
-        for i in live:
-            sl = self._slots[i]
-            tok = int(nxt_h[i])
-            sl.toks.append(tok)
-            sl.pos += 1
-            sl.remaining -= 1
-            self._emit(sl.req, tok)
-            if sl.remaining == 0 or tok == self.eos_id:
-                self._finish(sl.req, sl.toks)
-                done.append(sl.req)
-                self._slots[i] = None
+        # committed onto the canonical sharding so the burst's first step
+        # shares one jit signature with the steady-state steps (whose
+        # cur/pos are the previous step's committed outputs)
+        cur_d = self._commit(jnp.asarray(cur))
+        pos_d = self._commit(jnp.asarray(pos))
+        toks_dev = []
+        for _ in range(burst):
+            cur_d, self._cache = self._decode(self.params, self._cache,
+                                              cur_d, pos_d)
+            toks_dev.append(cur_d)
+            pos_d = pos_d + 1
+            self.decode_steps += 1
+            self.slot_steps += self.B
+        host = np.asarray(jnp.stack(toks_dev, axis=1))   # (B, burst): 1 sync
+        for step in range(burst):
+            for i in live:
+                sl = self._slots[i]
+                if sl is None:
+                    continue
+                tok = int(host[i, step])
+                sl.toks.append(tok)
+                sl.pos += 1
+                sl.remaining -= 1
+                self._emit(sl.req, tok)
+                if sl.remaining == 0 or tok == self.eos_id:
+                    self._finish(sl.req, sl.toks)
+                    done.append(sl.req)
+                    self._slots[i] = None
         return done
 
     # ------------------------------------------------------------------
@@ -439,6 +525,7 @@ class Engine:
         util = (self.useful_decode_tokens / self.slot_steps
                 if self.slot_steps else 0.0)
         return {"scheduler": self.scheduler, "backend": self.qm.backend,
+                "kv_cache": (self.kv_quant.fmt if self.kv_quant else "none"),
                 "admitted": self.admitted,
                 "prefill_compiles": self.prefill_compiles,
                 "prefill_chunk_compiles": self.prefill_chunk_compiles,
