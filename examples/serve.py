@@ -47,13 +47,21 @@ def main():
     ap.add_argument("--kv-cache", default="none",
                     choices=("none", "mxfp8", "mxint8", "mxfp4", "mxint4"),
                     help="MX-quantize the KV cache (docs/kv-cache.md)")
+    ap.add_argument("--kv-layout", default="contiguous",
+                    choices=("contiguous", "paged"),
+                    help="page the KV cache through block tables with "
+                         "prefix caching (continuous scheduler only; "
+                         "docs/paged-kv.md)")
     args = ap.parse_args()
+    if args.kv_layout == "paged":
+        args.scheduler = "continuous"  # paged serving is continuous-only
 
     if args.artifact:
         eng = Engine.from_artifact(args.artifact, batch_size=args.batch,
                                    max_len=128, eager=args.eager,
                                    scheduler=args.scheduler,
-                                   kv_cache=args.kv_cache)
+                                   kv_cache=args.kv_cache,
+                                   kv_layout=args.kv_layout)
         cfg = eng.cfg
         print(f"serving artifact {args.artifact} "
               f"({'eager' if args.eager else 'packed-lazy'} weights, "
@@ -83,15 +91,22 @@ def main():
               else QuantMode.mxint4(t3=False))
 
     eng = Engine(params, cfg, qm, batch_size=args.batch, max_len=128,
-                 scheduler=args.scheduler, kv_cache=args.kv_cache)
+                 scheduler=args.scheduler, kv_cache=args.kv_cache,
+                 kv_layout=args.kv_layout)
     _run(eng, cfg, args)
 
 
 def _run(eng, cfg, args):
     rng = np.random.default_rng(0)
-    # mixed-length traffic: the regime where continuous batching wins
-    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, 8 + 5 * i)
-                    .astype(np.int32),
+    # mixed-length traffic: the regime where continuous batching wins.
+    # Under --kv-layout paged every request shares a system prompt, so
+    # the streaming demo shows prefix hits accumulating per admission.
+    sys_prompt = (rng.integers(0, cfg.vocab_size, eng.page_size)
+                  .astype(np.int32) if eng.kv_layout == "paged" else
+                  np.zeros(0, np.int32))
+    reqs = [Request(prompt=np.concatenate(
+                [sys_prompt, rng.integers(0, cfg.vocab_size, 8 + 5 * i)
+                 .astype(np.int32)]),
                     max_new=max(4, args.new - 3 * i))
             for i in range(args.batch * 2)]
 
@@ -109,6 +124,12 @@ def _run(eng, cfg, args):
             assert list(r.out) == streamed[i]
             print(f"req{i}: prompt={len(r.prompt)}t -> streamed "
                   f"{len(streamed[i])} tokens, out[:6]={streamed[i][:6]}")
+        if eng.kv_layout == "paged":
+            st = eng.stats()
+            print(f"paged KV: prefix_hit_tokens={st['prefix_hit_tokens']} "
+                  f"blocks_in_use={st['blocks_in_use']} "
+                  f"blocks_evicted={st['blocks_evicted']} "
+                  f"kv_bytes_resident={eng.kv_bytes_resident()}")
     else:
         done = eng.generate(reqs)
         for i, r in enumerate(done):

@@ -45,6 +45,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from .mx_quant import MXBLOCK, _decode_tile, _format_consts
 from . import packing
@@ -52,7 +53,23 @@ from . import packing
 NEG_INF = -1e30
 
 
-def _pick_chunk(S: int, bs: int) -> int:
+def _pick_chunk(S: int, bs: int, explicit: bool = False) -> int:
+    """KV-chunk width: shrink ``bs`` (halving) until it divides S.
+
+    ``explicit=True`` marks a caller-chosen width: it is honored as-is
+    (clamped only to S) and a non-dividing width raises instead of being
+    silently halved — the override that lets tests drive the
+    multi-chunk / block-table grid in CPU interpret mode, where the
+    *default* collapses to a single chunk (the chunk grid exists for
+    TPU VMEM)."""
+    if explicit:
+        bs = min(bs, S)
+        if bs < 1 or S % bs:
+            raise ValueError(
+                f"explicit KV chunk width bs={bs} does not divide the "
+                f"cache length S={S}; pick a divisor of S (or leave bs "
+                f"unset for the backend default)")
+        return bs
     bs = min(bs, S)
     while S % bs:
         bs //= 2
@@ -164,11 +181,13 @@ def mx_flash_decode(q: jnp.ndarray, k_codes: jnp.ndarray,
                     v_scales: jnp.ndarray, q_pos: jnp.ndarray,
                     kv_len: jnp.ndarray, fmt: str = "mxfp8", *,
                     window: int = 0, bs: int = 512,
+                    explicit_bs: bool = False,
                     interpret: bool = True) -> jnp.ndarray:
     """Flash-decode attention over packed MX KV. Returns (B, H, Dh) f32.
 
     See the module docstring for the shape contract. ``bs`` is the KV
-    chunk width (shrunk to divide S)."""
+    chunk width (shrunk to divide S; ``explicit_bs=True`` honors it
+    exactly and raises when it cannot divide S)."""
     B, H, Dh = q.shape
     bits = packing.kv_fmt_bits(fmt)
     S = k_codes.shape[1]
@@ -177,7 +196,7 @@ def mx_flash_decode(q: jnp.ndarray, k_codes: jnp.ndarray,
     assert H % kvh == 0 and kvh * Dh == D, (q.shape, k_codes.shape)
     assert D % MXBLOCK == 0, (D,)
     assert k_scales.shape == (B, S, D // MXBLOCK), k_scales.shape
-    bs = _pick_chunk(S, bs)
+    bs = _pick_chunk(S, bs, explicit=explicit_bs)
     n_chunks = S // bs
     pos2 = jnp.broadcast_to(jnp.asarray(q_pos, jnp.int32).reshape(-1),
                             (B,)).reshape(B, 1)
@@ -212,4 +231,103 @@ def mx_flash_decode(q: jnp.ndarray, k_codes: jnp.ndarray,
         ),
         interpret=interpret,
     )(q, k_codes, k_scales, v_codes, v_scales, pos2, len2)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Paged flash decode: block-table indirection over a shared page pool
+# ---------------------------------------------------------------------------
+#
+# Same online-softmax body as the contiguous kernel — the only change is
+# WHERE a KV chunk comes from. The contiguous grid slices lane b's own
+# (S, ·) cache at chunk c; the paged grid reads page ``block_tables[b, c]``
+# of one pool shared by every lane. The block table rides in as a
+# *scalar-prefetch* operand (``pltpu.PrefetchScalarGridSpec``), so the
+# BlockSpec index maps can address pages before the body runs — the DMA
+# engine gathers the right page per grid step and no dense, contiguous
+# copy of the cache is ever materialized. Chunk width == page size: a page
+# holds positions [c*P, (c+1)*P) of its lane, so the position iota, the
+# per-lane masks, and the accumulator discipline carry over unchanged.
+# Table slots past a lane's fill may hold any valid page id (the engine
+# parks them on the scrap page); their rows are masked by ``kv_len``
+# exactly like the contiguous kernel's stale tail.
+
+
+def _flash_decode_paged_kernel(bt_ref, q_ref, kc_ref, ks_ref, vc_ref,
+                               vs_ref, pos_ref, len_ref, o_ref, m_ref,
+                               l_ref, *, fmt, bits, window, kvh, dh,
+                               n_chunks):
+    # bt_ref (the prefetched block table) is consumed by the index maps;
+    # the body is position-identical to the contiguous kernel because a
+    # page IS chunk c of its lane's logical cache.
+    del bt_ref
+    _flash_decode_kernel(q_ref, kc_ref, ks_ref, vc_ref, vs_ref, pos_ref,
+                         len_ref, o_ref, m_ref, l_ref, fmt=fmt, bits=bits,
+                         window=window, kvh=kvh, dh=dh, n_chunks=n_chunks)
+
+
+def mx_flash_decode_paged(q: jnp.ndarray, k_codes: jnp.ndarray,
+                          k_scales: jnp.ndarray, v_codes: jnp.ndarray,
+                          v_scales: jnp.ndarray,
+                          block_tables: jnp.ndarray, q_pos: jnp.ndarray,
+                          kv_len: jnp.ndarray, fmt: str = "mxfp8", *,
+                          window: int = 0,
+                          interpret: bool = True) -> jnp.ndarray:
+    """Flash-decode attention over a *paged* packed MX KV pool.
+
+    q          (B, H, Dh) float    — one decode token per lane
+    k/v codes  (N, P, D*bits/8) u8 — page pool shared by all lanes
+    k/v scales (N, P, D//32)    u8 — E8M0 bytes
+    block_tables (B, maxp) i32     — page id of lane b's chunk c
+    q_pos/kv_len (B,) i32          — per-lane positions / fills
+
+    Returns (B, H, Dh) f32. Grid (B, maxp) with the page axis innermost;
+    page ``block_tables[b, c]`` supplies logical positions
+    [c*P, (c+1)*P) of lane b."""
+    B, H, Dh = q.shape
+    bits = packing.kv_fmt_bits(fmt)
+    N, P, db = k_codes.shape
+    D = db * 8 // bits
+    kvh = D // Dh
+    maxp = block_tables.shape[1]
+    assert H % kvh == 0 and kvh * Dh == D, (q.shape, k_codes.shape)
+    assert D % MXBLOCK == 0, (D,)
+    ns = D // MXBLOCK
+    assert k_scales.shape == (N, P, ns), k_scales.shape
+    pos2 = jnp.broadcast_to(jnp.asarray(q_pos, jnp.int32).reshape(-1),
+                            (B,)).reshape(B, 1)
+    len2 = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32).reshape(-1),
+                            (B,)).reshape(B, 1)
+    kern = functools.partial(_flash_decode_paged_kernel, fmt=fmt,
+                             bits=bits, window=window, kvh=kvh, dh=Dh,
+                             n_chunks=maxp)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, maxp),
+        in_specs=[
+            pl.BlockSpec((1, H, Dh), lambda i, c, bt: (i, 0, 0)),
+            pl.BlockSpec((1, P, db), lambda i, c, bt: (bt[i, c], 0, 0)),
+            pl.BlockSpec((1, P, ns), lambda i, c, bt: (bt[i, c], 0, 0)),
+            pl.BlockSpec((1, P, db), lambda i, c, bt: (bt[i, c], 0, 0)),
+            pl.BlockSpec((1, P, ns), lambda i, c, bt: (bt[i, c], 0, 0)),
+            pl.BlockSpec((1, 1), lambda i, c, bt: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, c, bt: (i, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, H, Dh), lambda i, c, bt: (i, 0, 0)),
+            pl.BlockSpec((1, H), lambda i, c, bt: (i, 0)),
+            pl.BlockSpec((1, H), lambda i, c, bt: (i, 0)),
+        ),
+    )
+    out, _, _ = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=(
+            jax.ShapeDtypeStruct((B, H, Dh), jnp.float32),
+            jax.ShapeDtypeStruct((B, H), jnp.float32),
+            jax.ShapeDtypeStruct((B, H), jnp.float32),
+        ),
+        interpret=interpret,
+    )(jnp.asarray(block_tables, jnp.int32), q, k_codes, k_scales,
+      v_codes, v_scales, pos2, len2)
     return out

@@ -128,7 +128,9 @@ def mx_flash_decode(q, k_codes, k_scales, v_codes, v_scales, q_pos,
     ``bs`` (KV chunk width) defaults to the whole cache under interpret
     mode — the chunk grid exists for the TPU memory hierarchy, and an
     interpreted grid step is pure overhead — and to a VMEM-sized tile
-    when compiled.
+    when compiled. An *explicit* ``bs`` is honored exactly (it must
+    divide S, else ValueError) on every backend, so the multi-chunk grid
+    is exercisable in CPU interpret mode too.
     """
     if not _flash_decode_contract(q, k_codes, k_scales, v_codes,
                                   v_scales, fmt):
@@ -141,11 +143,73 @@ def mx_flash_decode(q, k_codes, k_scales, v_codes, v_scales, q_pos,
             f"count D/Dh; scales (B, S, D//32); V shapes matching K; "
             f"fmt one of {_pk.KV_FMTS}.")
     it = _default_interpret() if interpret is None else interpret
+    explicit = bs is not None
     if bs is None:
         bs = k_codes.shape[1] if it else 512
     return _ma.mx_flash_decode(q, k_codes, k_scales, v_codes, v_scales,
                                q_pos, kv_len, fmt, window=window, bs=bs,
-                               interpret=it)
+                               explicit_bs=explicit, interpret=it)
+
+
+def _flash_decode_paged_contract(q, k_codes, k_scales, v_codes, v_scales,
+                                 block_tables, fmt: str) -> bool:
+    """Does the page pool meet the paged flash-decode kernel contract?"""
+    if fmt not in _pk.KV_FMTS:
+        return False
+    if (q.ndim != 3 or k_codes.ndim != 3 or k_scales.ndim != 3
+            or block_tables.ndim != 2):
+        return False
+    B, H, Dh = q.shape
+    bits = _pk.kv_fmt_bits(fmt)
+    N, P = k_codes.shape[0], k_codes.shape[1]
+    D = k_codes.shape[2] * 8 // bits
+    if D % 32 != 0 or Dh == 0 or D % Dh != 0 or H % (D // Dh) != 0:
+        return False
+    return (block_tables.shape[0] == B
+            and k_scales.shape == (N, P, D // 32)
+            and v_codes.shape == k_codes.shape
+            and v_scales.shape == k_scales.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "window", "interpret"))
+def mx_flash_decode_paged(q, k_codes, k_scales, v_codes, v_scales,
+                          block_tables, q_pos, kv_len,
+                          fmt: str = "mxfp8", window: int = 0,
+                          interpret: bool | None = None):
+    """Flash-decode attention over a *paged* packed MX KV pool.
+
+    Shapes/dtypes: q (B, H, Dh) float; k/v_codes (N, P, D*bits/8) uint8
+    and k/v_scales (N, P, D//32) uint8 E8M0 bytes — the shared page pool
+    in the ``packing.PagedKV`` layout (N pages of P tokens each);
+    block_tables (B, maxp) int32 — lane b's chunk c reads pool page
+    ``block_tables[b, c]``, which holds logical positions
+    [c*P, (c+1)*P); q_pos / kv_len (B,) int32 (scalars broadcast).
+    Returns (B, H, Dh) float32. ``window`` as in :func:`mx_flash_decode`.
+
+    The block table is a scalar-prefetch operand: BlockSpec index maps
+    resolve the page id before each grid step, so the kernel DMA-gathers
+    pages straight from the pool — no contiguous copy of a lane's cache
+    is ever materialized. Table slots past a lane's fill must still hold
+    *valid* page ids (the serving engine parks them on its scrap page);
+    those rows are masked by ``kv_len``. Off-contract inputs raise — the
+    model-level fallback (gather + dense jnp attention) lives in
+    ``models.layers.attention_paged``."""
+    if not _flash_decode_paged_contract(q, k_codes, k_scales, v_codes,
+                                        v_scales, block_tables, fmt):
+        raise ValueError(
+            f"mx_flash_decode_paged contract violation: q {q.shape}, "
+            f"k_codes {k_codes.shape}, k_scales {k_scales.shape}, "
+            f"v_codes {v_codes.shape}, v_scales {v_scales.shape}, "
+            f"block_tables {block_tables.shape}, fmt={fmt!r}. Expected "
+            f"q (B, H, Dh); a (N, P, D*bits/8) page pool with "
+            f"D % 32 == 0, D % Dh == 0 and H divisible by the kv-head "
+            f"count D/Dh; scales (N, P, D//32); V shapes matching K; "
+            f"block_tables (B, maxp) int32; fmt one of {_pk.KV_FMTS}.")
+    it = _default_interpret() if interpret is None else interpret
+    return _ma.mx_flash_decode_paged(q, k_codes, k_scales, v_codes,
+                                     v_scales, block_tables, q_pos,
+                                     kv_len, fmt, window=window,
+                                     interpret=it)
 
 
 # re-exported oracles
@@ -153,5 +217,6 @@ mx_quant_ref = ref.mx_quant_ref
 mx_matmul_ref = ref.mx_matmul_ref
 mx_matmul_packed_ref = ref.mx_matmul_packed_ref
 mx_attention_ref = ref.mx_attention_ref
+mx_attention_paged_ref = ref.mx_attention_paged_ref
 hadamard_quant_ref = ref.hadamard_quant_ref
 quantize_weight_for_kernel = ref.quantize_weight_for_kernel

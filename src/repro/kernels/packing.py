@@ -18,6 +18,7 @@ under ``lax.scan``, i.e. one layer dequantized at a time).
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -292,3 +293,107 @@ class PackedKV:
         codes = jnp.full(tuple(lead) + (d * bits // 8,), cbyte, jnp.uint8)
         scales = jnp.full(tuple(lead) + (d // 32,), 127, jnp.uint8)
         return cls(codes, scales, fmt, str(jnp.dtype(dtype)))
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache: a pool of fixed-size pages addressed through block tables
+# ---------------------------------------------------------------------------
+#
+# The contiguous layouts above reserve one (max_len, D) lane per batch slot.
+# The paged layout instead keeps ONE pool of N fixed-size pages (P tokens
+# each) and addresses it through per-request *block tables* — (B, max_pages)
+# int32 arrays of page ids — so memory tracks actual sequence lengths and
+# identical prompt prefixes can share pages by reference (the serving
+# engine's BlockAllocator owns the table bookkeeping; see docs/paged-kv.md).
+# A page is a fixed run of MX 32-blocks whenever the cache is quantized:
+# P tokens x (D * bits/8) code bytes + (D // 32) E8M0 scale bytes per token,
+# exactly the PackedKV byte layout cut into page-sized runs.
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PagedKV:
+    """A paged KV pool usable in place of a contiguous cache leaf.
+
+    codes: (*lead, N, P, D*bits/8) uint8 MX codes (one per byte for 8-bit
+    fmts, nibble-packed for 4-bit fmts) — or (*lead, N, P, D) *dense
+    float* pages when ``fmt == 'none'`` (the unquantized paged cache).
+    scales: (*lead, N, P, D//32) uint8 E8M0 bytes, or ``None`` for dense
+    pages. Registered as a pytree (``None`` scales flatten to an empty
+    subtree), so a cache of PagedKV leaves flows through jit / lax.scan
+    layer slicing untouched; ``fmt``/``dtype`` are static aux data.
+
+    Logical position ``t`` of a request lives at page
+    ``block_table[t // P]``, row ``t % P`` — every reader/writer goes
+    through that indirection (``models.layers`` write helpers, the paged
+    flash-decode kernel's block-table grid, :meth:`gather_dense`)."""
+
+    codes: jnp.ndarray
+    scales: Optional[jnp.ndarray]
+    fmt: str = "none"
+    dtype: str = "float32"
+
+    def tree_flatten(self):
+        return (self.codes, self.scales), (self.fmt, self.dtype)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], *aux)
+
+    @property
+    def page_size(self) -> int:
+        return self.codes.shape[-2]
+
+    @property
+    def n_pages(self) -> int:
+        return self.codes.shape[-3]
+
+    @property
+    def feature_dim(self) -> int:
+        """Logical dense feature width D."""
+        if self.fmt == "none":
+            return self.codes.shape[-1]
+        return self.codes.shape[-1] * 8 // kv_fmt_bits(self.fmt)
+
+    @property
+    def ndim(self) -> int:
+        return self.codes.ndim
+
+    @classmethod
+    def zeros(cls, shape, fmt: str = "none", dtype=jnp.float32) -> "PagedKV":
+        """Fresh pool of logical dense ``shape`` (*lead, N, P, D)."""
+        *lead, n, p, d = shape
+        if fmt == "none":
+            return cls(jnp.zeros((*lead, n, p, d), jnp.dtype(dtype)), None,
+                       "none", str(jnp.dtype(dtype)))
+        bits = kv_fmt_bits(fmt)
+        if d % 32 != 0:
+            raise ValueError(f"KV feature dim {d} not divisible by 32")
+        center = _kv_center(fmt)
+        cbyte = center | (center << 4) if bits == 4 else center
+        codes = jnp.full((*lead, n, p, d * bits // 8), cbyte, jnp.uint8)
+        scales = jnp.full((*lead, n, p, d // 32), 127, jnp.uint8)
+        return cls(codes, scales, fmt, str(jnp.dtype(dtype)))
+
+    def gather_dense(self, block_tables: jnp.ndarray,
+                     dtype=None) -> jnp.ndarray:
+        """Materialize the logical contiguous view of ``block_tables``
+        (B, max_pages) int32: a dense (B, max_pages*P, D) array — page j
+        of lane b supplies rows [j*P, (j+1)*P). The reference attention
+        path reads the cache through this gather; rows past a lane's
+        fill come from whatever page id sits in the unused table slot
+        (the engine parks them on the scrap page) and stay masked by
+        ``kv_len``. Pool must be layer-sliced (no lead dims)."""
+        if self.codes.ndim != 3:
+            raise ValueError("gather_dense expects a layer-sliced pool "
+                             f"(N, P, ·); got ndim={self.codes.ndim}")
+        B, maxp = block_tables.shape
+        P = self.page_size
+        dt = dtype if dtype is not None else jnp.dtype(self.dtype)
+        c = jnp.take(self.codes, block_tables, axis=0)     # (B, maxp, P, ·)
+        c = c.reshape(B, maxp * P, c.shape[-1])
+        if self.fmt == "none":
+            return c.astype(dt)
+        s = jnp.take(self.scales, block_tables, axis=0)
+        s = s.reshape(B, maxp * P, s.shape[-1])
+        return kv_decode(c, s, self.fmt, dt)

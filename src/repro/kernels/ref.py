@@ -104,6 +104,34 @@ def mx_attention_ref(q: jnp.ndarray, k_codes: jnp.ndarray,
     return out.reshape(B, H, Dh)
 
 
+def mx_attention_paged_ref(q: jnp.ndarray, k_codes: jnp.ndarray,
+                           k_scales: jnp.ndarray, v_codes: jnp.ndarray,
+                           v_scales: jnp.ndarray,
+                           block_tables: jnp.ndarray, q_pos: jnp.ndarray,
+                           kv_len: jnp.ndarray, fmt: str = "mxfp8",
+                           window: int = 0) -> jnp.ndarray:
+    """Golden oracle for
+    :func:`repro.kernels.mx_attention.mx_flash_decode_paged`.
+
+    k/v codes + scales are the (N, P, ·) page pool; ``block_tables``
+    (B, maxp) int32 maps lane b's chunk c to a pool page. The oracle
+    gathers each lane's pages into the contiguous logical layout and
+    defers to :func:`mx_attention_ref` — so the paged kernel is pinned
+    against the exact same dense softmax as the contiguous kernel, with
+    the indirection resolved by a plain jnp gather."""
+    bt = jnp.asarray(block_tables, jnp.int32)
+    B, maxp = bt.shape
+    P = k_codes.shape[1]
+
+    def flat(pool):
+        g = jnp.take(pool, bt, axis=0)               # (B, maxp, P, ·)
+        return g.reshape(B, maxp * P, pool.shape[-1])
+
+    return mx_attention_ref(q, flat(k_codes), flat(k_scales),
+                            flat(v_codes), flat(v_scales), q_pos, kv_len,
+                            fmt, window)
+
+
 def quantize_weight_for_kernel(w: jnp.ndarray, fmt: str = "mxfp4",
                                block: int = 32):
     """Pre-quantize a (K, N) weight along K into kernel layout:

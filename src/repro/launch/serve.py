@@ -56,6 +56,19 @@ def main():
                          "scale bytes; ~4x less decode KV traffic for "
                          "mxfp4 vs bf16, ~2x for mxfp8 — see "
                          "docs/kv-cache.md). 'none' keeps the dense cache")
+    ap.add_argument("--kv-layout", default="contiguous",
+                    choices=("contiguous", "paged"),
+                    help="KV-cache layout: 'paged' addresses a pool of "
+                         "fixed-size pages through block tables with "
+                         "ref-counted prefix caching (continuous "
+                         "scheduler only; see docs/paged-kv.md)")
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="tokens per KV page under --kv-layout paged "
+                         "(multiple of 32 and of the attention chunk; "
+                         "default: smallest attn_chunk multiple >= 64)")
+    ap.add_argument("--n-pages", type=int, default=None,
+                    help="KV pool size in pages under --kv-layout paged "
+                         "(default: scrap + batch * ceil(max_len/page))")
     args = ap.parse_args()
 
     import jax
@@ -74,11 +87,14 @@ def main():
             args.artifact, batch_size=args.batch,
             max_len=args.prompt_len + args.max_new + 16, eager=args.eager,
             backend=args.backend, scheduler=args.scheduler,
-            eos_id=args.eos_id, kv_cache=args.kv_cache)
+            eos_id=args.eos_id, kv_cache=args.kv_cache,
+            kv_layout=args.kv_layout, page_size=args.page_size,
+            n_pages=args.n_pages)
         print(f"loaded artifact {args.artifact} in {time.time()-t0:.1f}s "
               f"({'eager' if args.eager else 'packed-lazy'} weights, "
               f"backend={args.backend}, scheduler={args.scheduler}, "
-              f"kv_cache={args.kv_cache}, no re-quantization)")
+              f"kv_cache={args.kv_cache}, kv_layout={args.kv_layout}, "
+              f"no re-quantization)")
         stats = eng.throughput(n_requests=args.requests,
                                prompt_len=args.prompt_len,
                                max_new=args.max_new)
@@ -87,6 +103,11 @@ def main():
               f"({stats['prefill_compiles']} prefill compiles, "
               f"{stats['prefill_chunk_compiles']} chunk compiles, "
               f"decode utilization {stats['decode_utilization']:.2f})")
+        if args.kv_layout == "paged":
+            print(f"paged KV: {stats['prefix_hit_tokens']} prefix-hit "
+                  f"tokens, {stats['blocks_in_use']} blocks in use, "
+                  f"{stats['blocks_evicted']} evicted, "
+                  f"{eng.kv_bytes_resident()} KV bytes resident")
         return
 
     cfg = (configs.get_reduced(args.arch) if args.reduced
@@ -116,7 +137,9 @@ def main():
     eng = Engine(res.params, cfg, res.qm, batch_size=args.batch,
                  max_len=args.prompt_len + args.max_new + 16,
                  backend=args.backend, scheduler=args.scheduler,
-                 eos_id=args.eos_id, kv_cache=args.kv_cache)
+                 eos_id=args.eos_id, kv_cache=args.kv_cache,
+                 kv_layout=args.kv_layout, page_size=args.page_size,
+                 n_pages=args.n_pages)
     stats = eng.throughput(n_requests=args.requests,
                            prompt_len=args.prompt_len,
                            max_new=args.max_new)
@@ -124,6 +147,11 @@ def main():
           f"-> {stats['tok_per_s']:.1f} tok/s "
           f"(scheduler={stats['scheduler']}, "
           f"decode utilization {stats['decode_utilization']:.2f})")
+    if args.kv_layout == "paged":
+        print(f"paged KV: {stats['prefix_hit_tokens']} prefix-hit "
+              f"tokens, {stats['blocks_in_use']} blocks in use, "
+              f"{stats['blocks_evicted']} evicted, "
+              f"{eng.kv_bytes_resident()} KV bytes resident")
 
 
 if __name__ == "__main__":

@@ -84,6 +84,37 @@ def prefill_chunk(params, cfg: ArchConfig, cache, inputs, start, last_idx,
     return mod.prefill_chunk(params, cfg, cache, inputs, start, last_idx, qm)
 
 
+def prefill_chunk_paged(params, cfg: ArchConfig, cache, block_tables,
+                        inputs, start, last_idx,
+                        qm: QuantMode = QuantMode.off()):
+    """Chunked prefill against a paged KV pool addressed through block
+    tables (the paged engine's admission path; ``docs/paged-kv.md``).
+    KV-cache families (dense/moe) only — recurrent ring-buffer families
+    raise."""
+    mod = module_for(cfg)
+    if not hasattr(mod, "prefill_chunk_paged"):
+        raise ValueError(
+            f"family {cfg.family!r} has no paged-cache step (recurrent "
+            f"ring-buffer state cannot be paged); serve it with "
+            f"kv_layout='contiguous'")
+    return mod.prefill_chunk_paged(params, cfg, cache, block_tables,
+                                   inputs, start, last_idx, qm)
+
+
+def decode_paged(params, cfg: ArchConfig, cache, inputs, cur_len,
+                 block_tables, qm: QuantMode = QuantMode.off()):
+    """One decode step over a paged KV pool: per-lane (B,) fills and
+    (B, maxp) block tables. KV-cache families (dense/moe) only."""
+    mod = module_for(cfg)
+    if not hasattr(mod, "decode_paged"):
+        raise ValueError(
+            f"family {cfg.family!r} has no paged-cache step (recurrent "
+            f"ring-buffer state cannot be paged); serve it with "
+            f"kv_layout='contiguous'")
+    return mod.decode_paged(params, cfg, cache, inputs, cur_len,
+                            block_tables, qm)
+
+
 def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.float32,
                kv_quant=None):
     """Allocate the decode cache. ``kv_quant`` stores attention KV as MX
@@ -95,6 +126,20 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.float32,
                          "quantize; serve it with kv_cache='none'")
     return module_for(cfg).init_cache(cfg, batch, max_len, dtype,
                                       kv_quant=kv_quant)
+
+
+def init_cache_paged(cfg: ArchConfig, n_pages: int, page_size: int,
+                     dtype=jnp.float32, kv_quant=None):
+    """Allocate a paged KV pool (N pages of P tokens per layer; see
+    ``docs/paged-kv.md``). KV-cache families (dense/moe) only."""
+    mod = module_for(cfg)
+    if not hasattr(mod, "init_cache_paged"):
+        raise ValueError(
+            f"family {cfg.family!r} has no paged-cache layout (recurrent "
+            f"ring-buffer state cannot be paged); serve it with "
+            f"kv_layout='contiguous'")
+    return mod.init_cache_paged(cfg, n_pages, page_size, dtype,
+                                kv_quant=kv_quant)
 
 
 def fold_norms(params, cfg: ArchConfig):

@@ -11,7 +11,7 @@ import numpy as np
 
 from repro.core.quantize import QuantMode, qlinear
 from repro.kernels import ops
-from repro.kernels.packing import PackedKV, kv_encode
+from repro.kernels.packing import PackedKV, PagedKV, kv_encode
 from repro.launch import pcontext as pctx
 
 NEG_INF = -1e30
@@ -46,6 +46,90 @@ def kv_write_slice(cache, new: jnp.ndarray, start):
             jax.lax.dynamic_update_slice(cache.scales, s, (0, start, 0)),
             cache.fmt, cache.dtype)
     return jax.lax.dynamic_update_slice(cache, new, (0, start, 0))
+
+
+# ---------------------------------------------------------------------------
+# Paged-cache writes: every position goes through the block-table
+# indirection — logical position t of lane b lives at pool page
+# ``block_tables[b, t // P]``, row ``t % P`` (see ``packing.PagedKV`` and
+# ``docs/paged-kv.md``). The engine guarantees writable pages are private
+# to their lane (shared prefix pages are read-only), so the scatters below
+# never race across lanes.
+# ---------------------------------------------------------------------------
+
+def kv_write_token_paged(pool: PagedKV, new: jnp.ndarray,
+                         pages: jnp.ndarray, offs: jnp.ndarray) -> PagedKV:
+    """Scatter one token per lane into a layer-sliced page pool.
+    pool: PagedKV (N, P, ·); new: (B, 1, D) dense; pages/offs: (B,) i32 —
+    lane b writes pool[pages[b], offs[b]]. Quantizes at append time when
+    the pool is MX-packed (the decode scatter path, page-relative)."""
+    if pool.fmt == "none":
+        return PagedKV(pool.codes.at[pages, offs].set(
+            new[:, 0].astype(pool.codes.dtype)), None, "none", pool.dtype)
+    c, s = kv_encode(new, pool.fmt)
+    return PagedKV(pool.codes.at[pages, offs].set(c[:, 0]),
+                   pool.scales.at[pages, offs].set(s[:, 0]),
+                   pool.fmt, pool.dtype)
+
+
+def kv_write_chunk_paged(pool: PagedKV, new: jnp.ndarray,
+                         block_tables: jnp.ndarray, start) -> PagedKV:
+    """Write a C-token chunk at absolute positions start..start+C-1
+    through the block tables (the chunked-prefill append path).
+    pool: PagedKV (N, P, ·); new: (B, C, D) dense; block_tables:
+    (B, maxp) i32; start: traced i32 scalar. Each token lands at its
+    page-relative row — chunks may straddle page boundaries."""
+    B, C = new.shape[0], new.shape[1]
+    P = pool.page_size
+    pos = start + jnp.arange(C, dtype=jnp.int32)            # (C,)
+    pages = jnp.take_along_axis(
+        block_tables, jnp.broadcast_to((pos // P)[None, :], (B, C)),
+        axis=1)                                             # (B, C)
+    offs = jnp.broadcast_to((pos % P)[None, :], (B, C))
+    if pool.fmt == "none":
+        return PagedKV(pool.codes.at[pages, offs].set(
+            new.astype(pool.codes.dtype)), None, "none", pool.dtype)
+    c, s = kv_encode(new, pool.fmt)
+    return PagedKV(pool.codes.at[pages, offs].set(c),
+                   pool.scales.at[pages, offs].set(s),
+                   pool.fmt, pool.dtype)
+
+
+def attention_paged(q: jnp.ndarray, k_pool: PagedKV, v_pool: PagedKV,
+                    block_tables: jnp.ndarray, *, causal: bool,
+                    q_pos: jnp.ndarray, window: int = 0,
+                    kv_len: Optional[jnp.ndarray] = None,
+                    chunk: int = 1024, backend: str = "ref") -> jnp.ndarray:
+    """Attention over a paged KV pool addressed through block tables.
+
+    Under ``backend='fused'`` the single-token decode contract (Sq == 1,
+    a quantized pool, a known per-lane fill) dispatches to the paged
+    Pallas flash-decode kernel, which resolves the block-table
+    indirection in its grid — pages stream from HBM without a contiguous
+    copy. Everything else (chunked prefill with Sq > 1, dense pools, the
+    'ref' backend) gathers each lane's pages into the logical contiguous
+    layout and runs the existing :func:`attention` on the same values,
+    so the paged path is value-identical position-for-position to the
+    contiguous cache."""
+    B, Sq, H, Dh = q.shape
+    if (backend == "fused" and Sq == 1 and causal
+            and k_pool.fmt != "none" and kv_len is not None):
+        qp = jnp.asarray(q_pos, jnp.int32)
+        qpv = qp[:, 0] if qp.ndim == 2 else qp.reshape(-1)
+        out = ops.mx_flash_decode_paged(
+            q.reshape(B, H, Dh), k_pool.codes, k_pool.scales,
+            v_pool.codes, v_pool.scales, block_tables, qpv,
+            jnp.asarray(kv_len, jnp.int32).reshape(-1), k_pool.fmt,
+            window=window)
+        return out.reshape(B, Sq, H, Dh).astype(q.dtype)
+    kvh = k_pool.feature_dim // Dh
+    # gather in the pool's storage dtype — identical read semantics to the
+    # contiguous cache (attention casts q to the cache dtype, not vice
+    # versa), which is what keeps paged/contiguous bitwise-equal
+    kd = kv_heads_view(k_pool.gather_dense(block_tables), kvh, Dh)
+    vd = kv_heads_view(v_pool.gather_dense(block_tables), kvh, Dh)
+    return attention(q, kd, vd, causal=causal, q_pos=q_pos, window=window,
+                     kv_len=kv_len, chunk=chunk)
 
 
 def shard_kv(c, *names):

@@ -185,6 +185,7 @@ def forward(params, cfg: ArchConfig, inputs, qm: QuantMode = QuantMode.off(),
 
 
 init_cache = dense.init_cache
+init_cache_paged = dense.init_cache_paged
 
 
 def prefill(params, cfg: ArchConfig, inputs, qm: QuantMode = QuantMode.off(),
@@ -235,6 +236,56 @@ def prefill_chunk(params, cfg: ArchConfig, cache, inputs, start, last_idx,
     xl = jax.lax.dynamic_slice_in_dim(x, last_idx, 1, axis=1)
     xl = rms_norm(xl, params["ln_f"], cfg.norm_eps)
     logits = dense.head_out(xl[:, 0], params, cfg, qm)
+    return logits, {"k": ks, "v": vs}
+
+
+def prefill_chunk_paged(params, cfg: ArchConfig, cache, block_tables,
+                        inputs, start, last_idx,
+                        qm: QuantMode = QuantMode.off()):
+    """Chunked prefill against a paged pool (see
+    :func:`transformer.prefill_chunk_paged`); router aux losses are
+    dropped (serving path), with the same expert-capacity caveat as
+    :func:`prefill_chunk`."""
+    x = dense.embed_inputs(params, cfg, inputs)
+    C = x.shape[1]
+    pos = start + jnp.arange(C, dtype=jnp.int32)
+    bt = jnp.asarray(block_tables, jnp.int32)
+
+    def body(xc, inp):
+        pl, ck, cv = inp
+        xc, ck, cv = dense.attn_sublayer_chunk_paged(
+            xc, pl, cfg, qm, ck, cv, bt, pos, start + C)
+        xc, _ = ffn_sublayer(xc, pl, cfg, qm)
+        return xc, (ck, cv)
+
+    x, (ks, vs) = scan_layers(body, x, (params["blocks"],
+                               cache["k"], cache["v"]), cfg.scan_layers)
+    xl = jax.lax.dynamic_slice_in_dim(x, last_idx, 1, axis=1)
+    xl = rms_norm(xl, params["ln_f"], cfg.norm_eps)
+    logits = dense.head_out(xl[:, 0], params, cfg, qm)
+    return logits, {"k": ks, "v": vs}
+
+
+def decode_paged(params, cfg: ArchConfig, cache, inputs, cur_len,
+                 block_tables, qm: QuantMode = QuantMode.off()):
+    """One decode step over a paged pool (see
+    :func:`transformer.decode_paged`)."""
+    x = jnp.take(params["embed"], inputs[:, None], axis=0)
+    x = pctx.shard(x.astype(jnp.dtype(cache["k"].dtype)),
+                   "batch", None, None)
+    bt = jnp.asarray(block_tables, jnp.int32)
+
+    def body(xc, inp):
+        pl, ck, cv = inp
+        xc, ck, cv = dense.attn_sublayer_decode_paged(
+            xc, pl, cfg, qm, ck, cv, bt, cur_len)
+        xc, _ = ffn_sublayer(xc, pl, cfg, qm)
+        return xc, (ck, cv)
+
+    x, (ks, vs) = scan_layers(body, x, (params["blocks"],
+                               cache["k"], cache["v"]), cfg.scan_layers)
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = dense.head_out(x[:, 0], params, cfg, qm)
     return logits, {"k": ks, "v": vs}
 
 

@@ -15,11 +15,12 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig
 from repro.core import folding as fold_lib
 from repro.core.quantize import QuantMode, qlinear
-from repro.kernels.packing import PackedKV
+from repro.kernels.packing import PackedKV, PagedKV
 from repro.launch import pcontext as pctx
-from .layers import (apply_rope, attention, dense_init, flash_attention,
-                     gated_mlp, kv_heads_view, kv_write_rows,
-                     kv_write_slice, rms_norm, scan_layers, shard_kv)
+from .layers import (apply_rope, attention, attention_paged, dense_init,
+                     flash_attention, gated_mlp, kv_heads_view,
+                     kv_write_chunk_paged, kv_write_rows, kv_write_slice,
+                     kv_write_token_paged, rms_norm, scan_layers, shard_kv)
 
 
 # ---------------------------------------------------------------------------
@@ -191,6 +192,61 @@ def attn_sublayer_chunk(x, p, cfg: ArchConfig, qm: QuantMode,
     return x + out, cache_k, cache_v
 
 
+def attn_sublayer_decode_paged(x, p, cfg: ArchConfig, qm: QuantMode,
+                               cache_k: PagedKV, cache_v: PagedKV,
+                               block_tables, cur_len, window: int = 0):
+    """One-token attention against a *paged* KV pool. x: (B, 1, d);
+    cache_k/v: layer-sliced ``PagedKV`` pools (N, P, ·); block_tables:
+    (B, maxp) i32; cur_len: (B,) i32 per-lane fills (paged serving is
+    continuous-batching only, so the vector form is the only form).
+
+    The new token's k/v are scattered at the page-relative position
+    ``(block_tables[b, cur_len[b] // P], cur_len[b] % P)`` and attention
+    reads the pool through the same table — the paged Pallas kernel
+    under the fused backend, a gather + dense jnp attention otherwise.
+    Value-identical per lane to :func:`attn_sublayer_decode` at that
+    lane's position."""
+    B = x.shape[0]
+    cl = jnp.asarray(cur_len).astype(jnp.int32)            # (B,)
+    pos = cl[:, None]                                      # (B, 1)
+    q, k, v = _qkv(x, p, cfg, qm, pos)
+    P = cache_k.page_size
+    pages = jnp.take_along_axis(block_tables, (cl // P)[:, None],
+                                axis=1)[:, 0]
+    offs = cl % P
+    cache_k = kv_write_token_paged(cache_k, k, pages, offs)
+    cache_v = kv_write_token_paged(cache_v, v, pages, offs)
+    out = attention_paged(q, cache_k, cache_v, block_tables, causal=True,
+                          q_pos=pos, kv_len=cl + 1, window=window,
+                          chunk=cfg.attn_chunk, backend=qm.backend)
+    out = out.reshape(B, 1, cfg.q_dim)
+    out = qlinear(out, p["wo"], p.get("bo"), qm, "attn_out")
+    return x + out, cache_k, cache_v
+
+
+def attn_sublayer_chunk_paged(x, p, cfg: ArchConfig, qm: QuantMode,
+                              cache_k: PagedKV, cache_v: PagedKV,
+                              block_tables, pos, kv_len, window: int = 0):
+    """Chunked-prefill attention against a paged pool: C prompt tokens
+    write through the block tables and attend the partially filled
+    logical sequence. Same contract as :func:`attn_sublayer_chunk` with
+    the cache rows resolved per page; the chunk grid inside
+    :func:`attention` is unchanged, so chunked paged prefill accumulates
+    over the same KV-chunk sequence as the contiguous path (extra
+    fully-masked trailing pages are exact no-ops of the online
+    softmax)."""
+    B, C = x.shape[0], x.shape[1]
+    q, k, v = _qkv(x, p, cfg, qm, pos)
+    cache_k = kv_write_chunk_paged(cache_k, k, block_tables, pos[0])
+    cache_v = kv_write_chunk_paged(cache_v, v, block_tables, pos[0])
+    out = attention_paged(q, cache_k, cache_v, block_tables, causal=True,
+                          q_pos=pos, kv_len=kv_len, window=window,
+                          chunk=cfg.attn_chunk, backend=qm.backend)
+    out = out.reshape(B, C, cfg.q_dim)
+    out = qlinear(out, p["wo"], p.get("bo"), qm, "attn_out")
+    return x + out, cache_k, cache_v
+
+
 def ffn_sublayer(x, p, cfg: ArchConfig, qm: QuantMode):
     h = rms_norm(x, p["ln2"], cfg.norm_eps)
     return x + gated_mlp(h, p["wg"], p["wu"], p["wd"], qm,
@@ -239,6 +295,18 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.float32,
         return {"k": PackedKV.zeros(shape, kv_quant.fmt, dtype),
                 "v": PackedKV.zeros(shape, kv_quant.fmt, dtype)}
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def init_cache_paged(cfg: ArchConfig, n_pages: int, page_size: int,
+                     dtype=jnp.float32, kv_quant=None):
+    """Allocate a paged KV pool: N pages of P tokens per layer, shared by
+    every batch lane and addressed through per-request block tables
+    (``docs/paged-kv.md``). ``kv_quant`` stores the pages MX-packed
+    (codes + E8M0 scale bytes); otherwise pages are dense ``dtype``."""
+    fmt = kv_quant.fmt if kv_quant is not None else "none"
+    shape = (cfg.n_layers, n_pages, page_size, cfg.kv_dim)
+    return {"k": PagedKV.zeros(shape, fmt, dtype),
+            "v": PagedKV.zeros(shape, fmt, dtype)}
 
 
 def prefill(params, cfg: ArchConfig, inputs,
@@ -304,6 +372,62 @@ def prefill_chunk(params, cfg: ArchConfig, cache, inputs, start, last_idx,
     xl = jax.lax.dynamic_slice_in_dim(x, last_idx, 1, axis=1)
     xl = rms_norm(xl, params["ln_f"], cfg.norm_eps)
     logits = head_out(xl[:, 0], params, cfg, qm)
+    return logits, {"k": ks, "v": vs}
+
+
+def prefill_chunk_paged(params, cfg: ArchConfig, cache, block_tables,
+                        inputs, start, last_idx,
+                        qm: QuantMode = QuantMode.off()):
+    """Chunked prefill against a paged pool: C tokens at absolute
+    positions start..start+C-1 write through ``block_tables`` (B, maxp).
+    Same one-jit-signature contract as :func:`prefill_chunk` — start /
+    last_idx traced, C fixed — with the cache rows resolved per page.
+    Returns (logits (B, V) at last_idx, cache)."""
+    x = embed_inputs(params, cfg, inputs)
+    C = x.shape[1]
+    pos = start + jnp.arange(C, dtype=jnp.int32)
+    bt = jnp.asarray(block_tables, jnp.int32)
+
+    def body(xc, inp):
+        pl, ck, cv = inp
+        xc, ck, cv = attn_sublayer_chunk_paged(xc, pl, cfg, qm, ck, cv,
+                                               bt, pos, start + C,
+                                               window=cfg.window)
+        xc = ffn_sublayer(xc, pl, cfg, qm)
+        return xc, (ck, cv)
+
+    x, (ks, vs) = scan_layers(body, x, (params["blocks"],
+                               cache["k"], cache["v"]), cfg.scan_layers)
+    xl = jax.lax.dynamic_slice_in_dim(x, last_idx, 1, axis=1)
+    xl = rms_norm(xl, params["ln_f"], cfg.norm_eps)
+    logits = head_out(xl[:, 0], params, cfg, qm)
+    return logits, {"k": ks, "v": vs}
+
+
+def decode_paged(params, cfg: ArchConfig, cache, inputs, cur_len,
+                 block_tables, qm: QuantMode = QuantMode.off()):
+    """One decode step over a paged pool. inputs: (B,) int32 tokens;
+    cur_len: (B,) i32 per-lane fills; block_tables: (B, maxp) i32.
+    Returns (logits (B, V) float, cache). Value-identical per lane to
+    :func:`decode` at that lane's position — the paged-vs-contiguous
+    parity tests pin it bitwise for dense pools."""
+    x = jnp.take(params["embed"], inputs[:, None], axis=0)
+    x = pctx.shard(x.astype(jnp.dtype(cache["k"].dtype)),
+                   "batch", None, None)
+    bt = jnp.asarray(block_tables, jnp.int32)
+
+    def body(xc, inp):
+        pl, ck, cv = inp
+        xc, ck, cv = attn_sublayer_decode_paged(xc, pl, cfg, qm, ck, cv,
+                                                bt, cur_len,
+                                                window=cfg.window)
+        xc = ffn_sublayer(xc, pl, cfg, qm)
+        return xc, (ck, cv)
+
+    x, (ks, vs) = scan_layers(body, x, (params["blocks"],
+                               cache["k"], cache["v"]), cfg.scan_layers)
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = head_out(x[:, 0], params, cfg, qm)
     return logits, {"k": ks, "v": vs}
 
 

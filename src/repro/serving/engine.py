@@ -35,6 +35,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import hashlib
 import time
 from typing import Callable, List, Optional
 
@@ -47,6 +48,113 @@ from repro.core.quantize import KVCacheQuant, QuantMode
 from repro.models import api
 
 SCHEDULERS = ("wave", "continuous")
+KV_LAYOUTS = ("contiguous", "paged")
+
+
+class BlockAllocator:
+    """Ref-counted allocator over the paged KV pool's page ids.
+
+    Pages ids live in [reserved, n_pages) (ids below ``reserved`` are
+    engine scrap pages that dead lanes park their block tables on). A
+    page is in exactly one of three states:
+
+      * **free** — on the free list, content garbage;
+      * **referenced** — ``ref > 0`` block tables point at it;
+      * **cached** — ``ref == 0`` but registered under a prefix hash
+        (:meth:`register`): its KV bytes are a reusable prompt-prefix
+        page, parked in an LRU and reclaimed (evicted + unregistered)
+        only when the free list runs dry.
+
+    :meth:`alloc` hands out ``ref == 1`` pages, preferring free pages and
+    LRU-evicting cached ones under pressure; it returns ``None`` when
+    even eviction cannot cover the request (the engine's admission
+    backpressure). :meth:`lookup`/:meth:`incref` revive a cached page
+    into the referenced state — that is the prefix *hit* path. All
+    bookkeeping is host-side and O(1) per page transition."""
+
+    def __init__(self, n_pages: int, page_size: int, reserved: int = 0):
+        if n_pages - reserved < 1:
+            raise ValueError(f"pool needs at least one allocatable page "
+                             f"(n_pages={n_pages}, reserved={reserved})")
+        self.n_pages, self.page_size = n_pages, page_size
+        self.reserved = reserved
+        self._free = collections.deque(range(reserved, n_pages))
+        self._ref = {p: 0 for p in range(reserved, n_pages)}
+        self._page_of: dict = {}                # prefix hash -> page id
+        self._hash_of: dict = {}                # page id -> prefix hash
+        self._lru: collections.OrderedDict = collections.OrderedDict()
+        self.evicted = 0                        # cumulative LRU evictions
+
+    @property
+    def capacity(self) -> int:
+        """Total allocatable pages."""
+        return self.n_pages - self.reserved
+
+    @property
+    def available(self) -> int:
+        """Pages obtainable right now (free + evictable cached)."""
+        return len(self._free) + len(self._lru)
+
+    @property
+    def in_use(self) -> int:
+        """Pages referenced by at least one block table."""
+        return self.capacity - self.available
+
+    @property
+    def resident(self) -> int:
+        """Pages holding live KV bytes (referenced or cached)."""
+        return self.capacity - len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """n fresh pages at ref == 1, or None (caller applies
+        backpressure). Eviction order is least-recently-cached first."""
+        if n > self.available:
+            return None
+        out = []
+        for _ in range(n):
+            if self._free:
+                p = self._free.popleft()
+            else:
+                p, _ = self._lru.popitem(last=False)
+                del self._page_of[self._hash_of.pop(p)]
+                self.evicted += 1
+            self._ref[p] = 1
+            out.append(p)
+        return out
+
+    def incref(self, p: int) -> None:
+        if self._ref[p] == 0:
+            self._lru.pop(p, None)              # cached -> referenced
+        self._ref[p] += 1
+
+    def decref(self, p: int) -> None:
+        if self._ref[p] <= 0:
+            raise ValueError(f"decref of unreferenced page {p}")
+        self._ref[p] -= 1
+        if self._ref[p] == 0:
+            if p in self._hash_of:
+                self._lru[p] = True             # cached: evictable
+            else:
+                self._free.append(p)
+
+    def register(self, h, p: int) -> Optional[int]:
+        """Publish page ``p`` as the cached copy of prefix hash ``h``.
+        First registration wins: if ``h`` is already served by another
+        page (or ``p`` already carries a hash) nothing changes and the
+        existing mapping is returned."""
+        if h in self._page_of or p in self._hash_of:
+            return self._page_of.get(h)
+        self._page_of[h] = p
+        self._hash_of[p] = h
+        return p
+
+    def lookup(self, h) -> Optional[int]:
+        """Page cached under prefix hash ``h`` (refreshing its LRU
+        recency), or None."""
+        p = self._page_of.get(h)
+        if p is not None and self._ref[p] == 0:
+            self._lru.move_to_end(p)
+        return p
 
 
 @dataclasses.dataclass
@@ -100,7 +208,10 @@ class Engine:
                  bucket_prompts: bool = True,
                  scheduler: str = "wave",
                  eos_id: Optional[int] = None,
-                 kv_cache: "str | KVCacheQuant | None" = None):
+                 kv_cache: "str | KVCacheQuant | None" = None,
+                 kv_layout: str = "contiguous",
+                 page_size: Optional[int] = None,
+                 n_pages: Optional[int] = None):
         """bucket_prompts=True rounds prompt lengths up to the attention
         chunk so distinct lengths reuse one prefill compile (wave) / keep
         the chunk grid aligned (continuous). Bucketed pads are left-pad
@@ -119,12 +230,45 @@ class Engine:
         place otherwise). Greedy outputs match the dense cache within a
         small tolerance; 'none'/None (default) keeps the dense fp cache
         bit-identical to previous behavior. Attention-cache families
-        only (dense/moe/hybrid), and kv_dim must divide into 32-blocks."""
+        only (dense/moe/hybrid), and kv_dim must divide into 32-blocks.
+
+        kv_layout: 'contiguous' (default) reserves one (max_len, kv_dim)
+        lane per slot; 'paged' allocates one pool of fixed-size pages
+        addressed through per-request block tables, with ref-counted
+        hash-based prefix caching — a shared prompt prefix is prefilled
+        once and reused by reference (see ``docs/paged-kv.md``). Paged
+        serving requires scheduler='continuous' and a KV-cache family
+        (dense/moe); it places prompts unpadded at position 0 (prompt
+        bucketing does not apply — identical token placement is what
+        makes prefixes shareable). page_size (tokens per page; default
+        the smallest multiple of attn_chunk >= 64) must be a multiple of
+        32 (the MX block) and of cfg.attn_chunk (so prefix-resume
+        positions stay chunk-aligned); n_pages sizes the pool (default:
+        one scrap page + batch_size * ceil(max_len/page_size), the same
+        budget as the contiguous pool)."""
         if cfg.family == "encoder":
             raise ValueError("encoder archs are not served autoregressively")
         if scheduler not in SCHEDULERS:
             raise ValueError(f"unknown scheduler {scheduler!r} "
                              f"(expected one of {SCHEDULERS})")
+        if kv_layout not in KV_LAYOUTS:
+            raise ValueError(f"unknown kv_layout {kv_layout!r} "
+                             f"(expected one of {KV_LAYOUTS})")
+        if kv_layout == "paged":
+            # checked before the generic scheduler/family gating so the
+            # error names the actual conflict (ring buffers cannot page)
+            if cfg.family not in ("dense", "moe"):
+                raise ValueError(
+                    f"kv_layout='paged' pages an attention KV cache "
+                    f"through block tables; family {cfg.family!r} keeps "
+                    f"recurrent ring-buffer state (griffin/ssm hybrids) "
+                    f"that cannot be paged — serve it with "
+                    f"kv_layout='contiguous'")
+            if scheduler != "continuous":
+                raise ValueError(
+                    "kv_layout='paged' requires scheduler='continuous'; "
+                    "the wave scheduler keeps the existing contiguous "
+                    "per-wave cache")
         if scheduler == "continuous" and (
                 cfg.family not in ("dense", "moe") or not cfg.embed_inputs):
             raise ValueError(
@@ -154,6 +298,42 @@ class Engine:
         chunk = cfg.attn_chunk
         self.max_len = (max_len + chunk - 1) // chunk * chunk
 
+        self.kv_layout = kv_layout
+        self.page_size = 0
+        self.pages_per_slot = 0
+        self._alloc: Optional[BlockAllocator] = None
+        if kv_layout == "paged":
+            if page_size is None:
+                page_size = chunk * max(1, -(-64 // chunk))
+            if page_size % 32 != 0:
+                raise ValueError(
+                    f"page_size must be a multiple of the MX 32-block "
+                    f"(a page is a fixed run of MX blocks), got "
+                    f"{page_size}")
+            if page_size % chunk != 0:
+                raise ValueError(
+                    f"page_size must be a whole number of attention "
+                    f"chunks so prefix-resume positions stay "
+                    f"chunk-aligned; got page_size={page_size}, "
+                    f"attn_chunk={chunk}")
+            self.page_size = page_size
+            self.pages_per_slot = -(-self.max_len // page_size)
+            if n_pages is None:
+                n_pages = 1 + self.B * self.pages_per_slot
+            if n_pages < 1 + self.pages_per_slot:
+                raise ValueError(
+                    f"n_pages={n_pages} cannot hold one scrap page plus "
+                    f"a full-length request "
+                    f"({self.pages_per_slot} pages for max_len="
+                    f"{self.max_len})")
+            # page 0 is the scrap page: dead lanes' block tables park on
+            # it, so their idle decode writes never touch live pages
+            self._alloc = BlockAllocator(n_pages, page_size, reserved=1)
+            self._tables = np.zeros((self.B, self.pages_per_slot),
+                                    np.int32)
+            self._tables_dev = None
+            self._slot_pages: List[Optional[List[int]]] = [None] * self.B
+
         # compile accounting: one prefill compile per distinct (B, S) wave
         # shape (bucketing in _wave keeps this set small); the continuous
         # scheduler's chunked prefill and vector decode each compile once.
@@ -169,6 +349,8 @@ class Engine:
         self.decode_steps = 0
         self.slot_steps = 0
         self.useful_decode_tokens = 0
+        self.prefill_chunk_steps = 0
+        self.prefix_hit_tokens = 0
 
         def prefill(params, toks):
             return api.prefill(params, cfg, toks, qm, max_len=self.max_len,
@@ -188,10 +370,30 @@ class Engine:
                 return jax.lax.dynamic_update_slice(c, s, idx)
             return jax.tree.map(upd, cache, slot_cache)
 
+        def prefill_chunk_paged(params, cache, toks, tables, start,
+                                last_idx):
+            return api.prefill_chunk_paged(params, cfg, cache, tables,
+                                           toks, start, last_idx, qm)
+
+        def decode_paged(params, cache, toks, cur_len, tables):
+            logits, cache = api.decode_paged(params, cfg, cache, toks,
+                                             cur_len, tables, qm)
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+        def copy_page(cache, src, dst):
+            # clone one pool page (all layers, k and v, codes and
+            # scales): the admission copy-on-write of a partially
+            # reused prefix page
+            return jax.tree.map(
+                lambda a: a.at[:, dst].set(a[:, src]), cache)
+
         self._prefill = jax.jit(prefill)
         self._prefill_chunk = jax.jit(prefill_chunk)
         self._decode = jax.jit(decode)
         self._merge = jax.jit(merge_slot)
+        self._prefill_chunk_paged = jax.jit(prefill_chunk_paged)
+        self._decode_paged = jax.jit(decode_paged)
+        self._copy_page = jax.jit(copy_page)
 
         # streaming state
         self._queue: collections.deque = collections.deque()
@@ -234,8 +436,10 @@ class Engine:
                       backend: str | None = None,
                       scheduler: str = "wave",
                       eos_id: Optional[int] = None,
-                      kv_cache: "str | KVCacheQuant | None" = None
-                      ) -> "Engine":
+                      kv_cache: "str | KVCacheQuant | None" = None,
+                      kv_layout: str = "contiguous",
+                      page_size: Optional[int] = None,
+                      n_pages: Optional[int] = None) -> "Engine":
         """Serve directly from an exported artifact directory: no
         calibration, no re-quantization — load packed bytes and go.
 
@@ -245,12 +449,15 @@ class Engine:
         routes the quantized matmuls through the packed-native Pallas
         kernels (requires eager=False to have any effect — eager loads
         are dense and fall back to the reference path). scheduler/eos_id/
-        kv_cache are forwarded to :class:`Engine`."""
+        kv_cache/kv_layout/page_size/n_pages are forwarded to
+        :class:`Engine`."""
         from repro.artifacts import load_artifact
         params, cfg, qm = load_artifact(path, eager=eager, verify=verify,
                                         backend=backend)
         return cls(params, cfg, qm, batch_size=batch_size, max_len=max_len,
-                   scheduler=scheduler, eos_id=eos_id, kv_cache=kv_cache)
+                   scheduler=scheduler, eos_id=eos_id, kv_cache=kv_cache,
+                   kv_layout=kv_layout, page_size=page_size,
+                   n_pages=n_pages)
 
     # ------------------------------------------------------------------
     # Streaming API
@@ -382,14 +589,21 @@ class Engine:
     # ------------------------------------------------------------------
 
     def _ensure_pool(self) -> None:
-        if self._cache is None:
-            dt = self._cache_dtype()
+        if self._cache is not None:
+            return
+        dt = self._cache_dtype()
+        if self.kv_layout == "paged":
             self._cache = self._commit(
-                api.init_cache(self.cfg, self.B, self.max_len, dt,
-                               kv_quant=self.kv_quant))
-            self._slot_cache = self._commit(
-                api.init_cache(self.cfg, 1, self.max_len, dt,
-                               kv_quant=self.kv_quant))
+                api.init_cache_paged(self.cfg, self._alloc.n_pages,
+                                     self.page_size, dt,
+                                     kv_quant=self.kv_quant))
+            return
+        self._cache = self._commit(
+            api.init_cache(self.cfg, self.B, self.max_len, dt,
+                           kv_quant=self.kv_quant))
+        self._slot_cache = self._commit(
+            api.init_cache(self.cfg, 1, self.max_len, dt,
+                           kv_quant=self.kv_quant))
 
     def _admit(self, slot: int, req: Request) -> tuple:
         """Chunk-prefill ``req`` into lane ``slot`` of the persistent
@@ -421,6 +635,7 @@ class Engine:
                 self.params, self._slot_cache,
                 jnp.asarray(buf[None, ci * C:(ci + 1) * C]),
                 jnp.int32(ci * C), jnp.int32(width - 1))
+            self.prefill_chunk_steps += 1
         self._cache = self._merge(self._cache, self._slot_cache,
                                   jnp.int32(slot))
         tok = int(np.asarray(jnp.argmax(logits, axis=-1))[0])
@@ -430,9 +645,137 @@ class Engine:
         if req.on_token is not None:
             req.on_token(tok)
 
+    # ------------------------------------------------------------------
+    # Paged admission: block tables + ref-counted prefix caching
+    # ------------------------------------------------------------------
+
+    def _page_hashes(self, prompt: np.ndarray) -> List[bytes]:
+        """Chained content hashes of the prompt's *full* pages: hash j
+        commits to tokens [0, (j+1)*P) — page content alone is not
+        enough, because a page's KV depends on everything before it."""
+        P = self.page_size
+        hs: List[bytes] = []
+        h = hashlib.sha256(b"mx-paged-kv")
+        for j in range(len(prompt) // P):
+            h = hashlib.sha256(
+                h.digest()
+                + np.ascontiguousarray(prompt[j * P:(j + 1) * P],
+                                       np.int32).tobytes())
+            hs.append(h.digest())
+        return hs
+
+    def _tables_committed(self):
+        if self._tables_dev is None:
+            self._tables_dev = self._commit(jnp.asarray(self._tables))
+        return self._tables_dev
+
+    def _release_paged(self, slot: int) -> None:
+        """Drop lane ``slot``'s page references and park its block table
+        on the scrap page (dead-lane decode writes must not touch live
+        pages). Registered pages whose refcount hits zero stay cached
+        for future prefix hits until LRU eviction reclaims them."""
+        pages = self._slot_pages[slot]
+        if pages is not None:
+            for p in pages:
+                self._alloc.decref(p)
+            self._slot_pages[slot] = None
+        self._tables[slot, :] = 0
+        self._tables_dev = None
+
+    def _admit_paged(self, slot: int, req: Request) -> Optional[tuple]:
+        """Admit ``req`` into lane ``slot`` of the paged pool. Returns
+        (prompt length, first sampled token), or ``None`` when the pool
+        cannot supply the pages right now (backpressure — the caller
+        requeues the request and stops admitting this step).
+
+        Prefix caching: the prompt's full pages are chain-hashed and
+        matched against the allocator's registry. Matched pages are
+        reused *by reference* (refcount bump, zero prefill work);
+        chunked prefill resumes at the first unmatched chunk. At least
+        the chunk holding the last prompt token always re-runs — the
+        admission needs its logits to sample the first output token —
+        and when that rewrite would land inside a shared page, the page
+        is copied into a private one first (copy-on-write), preserving
+        the cached bytes for other requests. After prefill, this
+        prompt's own full pages are registered for future sharing.
+
+        Prompts are placed unpadded at position 0 (no bucketing): page
+        content is position-dependent (RoPE), so identical placement is
+        what makes equal prefixes shareable."""
+        s = len(req.prompt)
+        C = self.cfg.attn_chunk
+        P = self.page_size
+        if s + req.max_new > self.max_len:
+            raise ValueError(
+                f"request does not fit the KV pool: prompt {s} + "
+                f"max_new {req.max_new} > max_len {self.max_len}")
+        n_req_pages = -(-(s + req.max_new) // P)
+        hashes = self._page_hashes(req.prompt)
+        matched: List[int] = []
+        for h in hashes:
+            p = self._alloc.lookup(h)
+            if p is None:
+                break
+            matched.append(p)
+        # resume point: whole matched pages, capped so the chunk holding
+        # the last prompt token is always re-run (its logits seed decode)
+        resume = max(0, min(len(matched) * P, (s - 1) // C * C))
+        m_full = resume // P
+        cow_src = matched[m_full] if resume % P else None
+        for p in matched[:m_full]:
+            self._alloc.incref(p)
+        if cow_src is not None:
+            self._alloc.incref(cow_src)     # pin across alloc + copy
+        fresh = self._alloc.alloc(n_req_pages - m_full)
+        if fresh is None:
+            for p in matched[:m_full]:
+                self._alloc.decref(p)
+            if cow_src is not None:
+                self._alloc.decref(cow_src)
+            if not any(sl is not None for sl in self._slots):
+                raise ValueError(
+                    f"KV page pool exhausted with no requests in "
+                    f"flight: request needs {n_req_pages - m_full} "
+                    f"fresh pages but only {self._alloc.available} of "
+                    f"{self._alloc.capacity} are obtainable — raise "
+                    f"n_pages or lower max_new")
+            return None
+        pages = matched[:m_full] + fresh
+        if cow_src is not None:
+            self._cache = self._copy_page(self._cache, jnp.int32(cow_src),
+                                          jnp.int32(fresh[0]))
+            self._alloc.decref(cow_src)
+        self.prefix_hit_tokens += resume
+        self._tables[slot, :] = 0
+        self._tables[slot, :len(pages)] = pages
+        self._tables_dev = None
+        table_row = self._commit(jnp.asarray(self._tables[slot:slot + 1]))
+
+        n_chunks = -(-(s - resume) // C)
+        buf = np.zeros(n_chunks * C, np.int32)
+        buf[:s - resume] = req.prompt[resume:]
+        if ("paged", 1, C) not in self._chunk_shapes:
+            self._chunk_shapes.add(("paged", 1, C))
+            self.prefill_chunk_compiles += 1
+        logits = None
+        for ci in range(n_chunks):
+            width = min(s - resume - ci * C, C)
+            logits, self._cache = self._prefill_chunk_paged(
+                self.params, self._cache,
+                jnp.asarray(buf[None, ci * C:(ci + 1) * C]), table_row,
+                jnp.int32(resume + ci * C), jnp.int32(width - 1))
+            self.prefill_chunk_steps += 1
+        for j in range(s // P):
+            self._alloc.register(hashes[j], pages[j])
+        self._slot_pages[slot] = pages
+        tok = int(np.asarray(jnp.argmax(logits, axis=-1))[0])
+        return s, tok
+
     def _step_continuous(self) -> List[Request]:
         self._ensure_pool()
+        paged = self.kv_layout == "paged"
         done: List[Request] = []
+        blocked = False
         # --- admission: fill free lanes from the queue (ring order) ---
         for off in range(self.B):
             i = (self._admit_cursor + off) % self.B
@@ -445,13 +788,28 @@ class Engine:
                     self._finish(req, [])
                     done.append(req)
                     continue
-                sb, tok = self._admit(i, req)
+                if paged:
+                    res = self._admit_paged(i, req)
+                    if res is None:
+                        # pool pressure: requeue at the front and stop
+                        # admitting — pages free up as lanes finish
+                        self.admitted -= 1
+                        self._queue.appendleft(req)
+                        blocked = True
+                        break
+                    sb, tok = res
+                else:
+                    sb, tok = self._admit(i, req)
                 self._emit(req, tok)
                 if req.max_new == 1 or tok == self.eos_id:
                     self._finish(req, [tok])   # lane freed the same step
                     done.append(req)
+                    if paged:
+                        self._release_paged(i)
                     continue
                 self._slots[i] = _Slot(req, [tok], sb, req.max_new - 1)
+                break
+            if blocked:
                 break
         self._admit_cursor = (self._admit_cursor + 1) % self.B
 
@@ -481,16 +839,22 @@ class Engine:
         for i in live:
             cur[i] = self._slots[i].toks[-1]
             pos[i] = self._slots[i].pos
-        self._count_decode_compile(self.B, "vector")
+        self._count_decode_compile(
+            self.B, "vector-paged" if paged else "vector")
         # committed onto the canonical sharding so the burst's first step
         # shares one jit signature with the steady-state steps (whose
         # cur/pos are the previous step's committed outputs)
         cur_d = self._commit(jnp.asarray(cur))
         pos_d = self._commit(jnp.asarray(pos))
+        tables_d = self._tables_committed() if paged else None
         toks_dev = []
         for _ in range(burst):
-            cur_d, self._cache = self._decode(self.params, self._cache,
-                                              cur_d, pos_d)
+            if paged:
+                cur_d, self._cache = self._decode_paged(
+                    self.params, self._cache, cur_d, pos_d, tables_d)
+            else:
+                cur_d, self._cache = self._decode(self.params, self._cache,
+                                                  cur_d, pos_d)
             toks_dev.append(cur_d)
             pos_d = pos_d + 1
             self.decode_steps += 1
@@ -510,6 +874,8 @@ class Engine:
                     self._finish(sl.req, sl.toks)
                     done.append(sl.req)
                     self._slots[i] = None
+                    if paged:
+                        self._release_paged(i)
         return done
 
     # ------------------------------------------------------------------
@@ -521,11 +887,23 @@ class Engine:
         fraction of decode slot-steps that produced a token which made it
         into a request's output — the wave scheduler burns slot-steps on
         requests shorter than their wave; the continuous scheduler only
-        idles lanes when the queue runs dry."""
+        idles lanes when the queue runs dry.
+
+        Paged-layout counters (zero under 'contiguous'):
+        ``prefix_hit_tokens`` — prompt tokens served from cached prefix
+        pages instead of being re-prefilled; ``blocks_in_use`` — pages
+        currently referenced by live block tables (a gauge);
+        ``blocks_evicted`` — cached prefix pages reclaimed by LRU
+        eviction under pool pressure (cumulative).
+        ``prefill_chunk_steps`` counts chunked-prefill invocations under
+        both layouts — with prefix hits it drops below the no-sharing
+        chunk count, which is how tests prove a shared prefix is
+        prefilled exactly once."""
         util = (self.useful_decode_tokens / self.slot_steps
                 if self.slot_steps else 0.0)
         return {"scheduler": self.scheduler, "backend": self.qm.backend,
                 "kv_cache": (self.kv_quant.fmt if self.kv_quant else "none"),
+                "kv_layout": self.kv_layout,
                 "admitted": self.admitted,
                 "prefill_compiles": self.prefill_compiles,
                 "prefill_chunk_compiles": self.prefill_chunk_compiles,
@@ -533,7 +911,35 @@ class Engine:
                 "decode_steps": self.decode_steps,
                 "slot_steps": self.slot_steps,
                 "useful_decode_tokens": self.useful_decode_tokens,
-                "decode_utilization": util}
+                "decode_utilization": util,
+                "prefill_chunk_steps": self.prefill_chunk_steps,
+                "prefix_hit_tokens": self.prefix_hit_tokens,
+                "blocks_in_use": (self._alloc.in_use if self._alloc
+                                  else 0),
+                "blocks_evicted": (self._alloc.evicted if self._alloc
+                                   else 0)}
+
+    def kv_bytes_resident(self) -> int:
+        """Bytes of KV cache currently holding data the engine may read.
+
+        Contiguous layouts reserve the full (B, max_len) pool up front,
+        so the whole allocation is resident regardless of traffic. The
+        paged layout counts only pages that are referenced by a live
+        block table or cached for prefix reuse (plus the scrap page) —
+        the number the serving benchmark tracks to show paging's memory
+        win on short/mixed traffic."""
+        if self._cache is None:
+            return 0
+        leaves = jax.tree.leaves(self._cache)
+        total = sum(int(a.size) * a.dtype.itemsize for a in leaves)
+        if self.kv_layout != "paged":
+            # the admission scratch lane is part of the contiguous
+            # engine's standing KV allocation
+            leaves = jax.tree.leaves(self._slot_cache)
+            return total + sum(int(a.size) * a.dtype.itemsize
+                               for a in leaves)
+        live = self._alloc.resident + self._alloc.reserved
+        return total * live // self._alloc.n_pages
 
     def throughput(self, n_requests: int = 8, prompt_len: int = 32,
                    max_new: int = 32, seed: int = 0) -> dict:
@@ -556,7 +962,8 @@ class Engine:
         rate = toks / dt if dt > 0 else float("inf")  # clock can tick 0
         run = self.stats()
         for k in ("admitted", "decode_steps", "slot_steps",
-                  "useful_decode_tokens"):
+                  "useful_decode_tokens", "prefill_chunk_steps",
+                  "prefix_hit_tokens", "blocks_evicted"):
             run[k] -= before[k]
         run["decode_utilization"] = (
             run["useful_decode_tokens"] / run["slot_steps"]
