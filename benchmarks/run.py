@@ -14,6 +14,11 @@ def main() -> None:
                          "table3,table8,fig4,kernels,serving,roofline")
     ap.add_argument("--fast", action="store_true",
                     help="fewer transform-learning steps")
+    ap.add_argument("--load", action="store_true", default=True,
+                    help="include the serving latency-under-load sweep "
+                         "(Poisson arrivals; default on)")
+    ap.add_argument("--no-load", dest="load", action="store_false",
+                    help="skip the latency-under-load sweep")
     args = ap.parse_args()
     wanted = set(args.only.split(",")) if args.only else None
 
@@ -32,7 +37,7 @@ def main() -> None:
          {"steps": 30} if args.fast else {}),
         ("fig4", fig4_throughput.run, {}),
         ("kernels", kernels_bench.run, {}),
-        ("serving", serving_bench.run, {}),
+        ("serving", serving_bench.run, {"load": args.load}),
         ("roofline", roofline_report.run, {}),
     ]
     print("name,us_per_call,derived")

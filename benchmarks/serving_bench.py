@@ -1,6 +1,7 @@
 """Serving-scheduler benchmark: wave vs continuous batching on a
-mixed-length workload (the production traffic shape — prompts and decode
-budgets spread over a wide range).
+mixed-length workload, plus latency under load (the production traffic
+shape — prompts and decode budgets spread over a wide range, arriving
+as a Poisson process rather than all at once).
 
 The wave scheduler pads every request in a wave to the wave's longest
 prompt and decodes until the wave's largest ``max_new`` — so on mixed
@@ -9,17 +10,31 @@ continuous scheduler refills finished slots from the queue the step they
 free up, so its decode-step utilization (useful tokens / decode
 slot-steps) approaches 1.0 with a deep queue.
 
+The **load section** measures what batch throughput numbers hide:
+per-request TTFT (submit -> first token) and TPOT (per-token decode
+interval) under open-loop Poisson arrivals, swept across offered load
+(0.5x / 1x / 2x of the engine's measured offline capacity). p50 stays
+flat while p99 degrades as offered load crosses capacity — the
+latency-under-load curve (``docs/observability.md``).
+
 Writes the standard experiments/benchmarks/serving_bench.json and a
-repo-root BENCH_serving.json (the perf-trajectory artifact). ``--smoke``
-uses a tiny random-init model and small traffic for CI.
+repo-root BENCH_serving.json (the perf-trajectory artifact). Rows are
+schema-versioned: ``"schema": 2`` marks rows carrying the telemetry
+fields (offered_rps, ttft/tpot percentiles); rows without the key are
+v1 (pre-telemetry). ``--smoke`` uses a tiny random-init model and small
+traffic for CI; ``--trace OUT.json`` exports a Chrome trace of the
+continuous-scheduler runs (open in https://ui.perfetto.dev).
 
     PYTHONPATH=src python -m benchmarks.serving_bench [--smoke]
+        [--trace OUT.json]
 """
 from __future__ import annotations
 
 import argparse
+import collections
 import json
 import pathlib
+import time
 
 import jax
 import numpy as np
@@ -27,10 +42,19 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.core.quantize import QuantMode
 from repro.models import api
+from repro.obs import Tracer
 from repro.serving.engine import Engine, Request
 from . import common
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+# BENCH_serving.json row-format version. v1 rows (no "schema" key) are
+# the pre-telemetry format; v2 adds the latency-under-load rows and
+# stamps every row.
+SCHEMA_VERSION = 2
+
+# Offered-load sweep points, as fractions of measured offline capacity.
+LOAD_FRACS = (0.5, 1.0, 2.0)
 
 SMOKE_CFG = ArchConfig(
     name="serve-smoke", family="dense", n_layers=2, d_model=64,
@@ -75,18 +99,91 @@ def prefix_requests(cfg: ArchConfig, n: int, prefix_len: int,
     return reqs
 
 
+def poisson_requests(cfg: ArchConfig, rate_rps: float, n: int,
+                     seed: int = 0, len_range=(8, 48),
+                     new_range=(4, 32)):
+    """``n`` mixed-length requests with Poisson arrival offsets at
+    ``rate_rps`` requests/s (exponential inter-arrival gaps, fixed
+    seed). Returns ``[(arrival_offset_s, Request), ...]`` sorted by
+    arrival."""
+    rng = np.random.default_rng(seed)
+    t, out = 0.0, []
+    for _ in range(n):
+        t += float(rng.exponential(1.0 / rate_rps))
+        s = int(rng.integers(len_range[0], len_range[1] + 1))
+        m = int(rng.integers(new_range[0], new_range[1] + 1))
+        out.append((t, Request(
+            prompt=rng.integers(0, cfg.vocab_size, s).astype(np.int32),
+            max_new=m)))
+    return out
+
+
+def run_load(eng: Engine, arrivals) -> float:
+    """Open-loop load test: submit each request once the wall clock
+    passes its arrival offset (never waiting for the engine — queueing
+    delay is part of what we measure), stepping the engine in between.
+    Returns elapsed seconds from first arrival's epoch to drain."""
+    pending = collections.deque(arrivals)
+    t0 = time.perf_counter()
+    while pending or eng.busy:
+        now = time.perf_counter() - t0
+        while pending and pending[0][0] <= now:
+            eng.submit(pending.popleft()[1])
+        if eng.busy:
+            eng.step()
+        elif pending:            # idle gap: sleep to the next arrival
+            time.sleep(max(0.0, min(pending[0][0] - now, 0.02)))
+    return time.perf_counter() - t0
+
+
+def _pct(xs, q) -> float:
+    return float(np.percentile(np.asarray(xs), q)) if len(xs) else None
+
+
+def bench_load(params, cfg, qm, rate_rps: float, n_req: int, *,
+               batch: int, max_len: int, len_range, new_range,
+               tracer=None, seed: int = 7) -> dict:
+    """One offered-load point: fresh continuous engine, warmed up (jit
+    compiles out of the timed window), then ``n_req`` Poisson arrivals
+    at ``rate_rps``. Latencies come from per-request monotonic
+    timestamps (``Request.m_submit/m_first/m_done``)."""
+    eng = Engine(params, cfg, qm, batch_size=batch, max_len=max_len,
+                 scheduler="continuous", tracer=tracer)
+    eng.generate(mixed_requests(cfg, 2, seed=99, len_range=len_range,
+                                new_range=new_range))    # warm the jits
+    eng.reset_stats()
+    arrivals = poisson_requests(cfg, rate_rps, n_req, seed=seed,
+                                len_range=len_range, new_range=new_range)
+    elapsed = run_load(eng, arrivals)
+    reqs = [r for _, r in arrivals]
+    ttft = [r.m_first - r.m_submit for r in reqs]
+    tpot = [(r.m_done - r.m_first) / (len(r.out) - 1)
+            for r in reqs if len(r.out) > 1 and r.m_done > r.m_first]
+    toks = sum(len(r.out) for r in reqs)
+    return {
+        "kind": "latency_under_load",
+        "offered_rps": rate_rps,
+        "achieved_rps": len(reqs) / elapsed if elapsed > 0 else 0.0,
+        "n_requests": len(reqs), "elapsed_s": elapsed,
+        "tok_per_s": toks / elapsed if elapsed > 0 else 0.0,
+        "ttft_p50_ms": _pct(ttft, 50) * 1e3,
+        "ttft_p99_ms": _pct(ttft, 99) * 1e3,
+        "tpot_p50_ms": _pct(tpot, 50) * 1e3 if tpot else None,
+        "tpot_p99_ms": _pct(tpot, 99) * 1e3 if tpot else None,
+    }
+
+
 def bench_scheduler(params, cfg, qm, scheduler: str, reqs, *,
                     batch: int, max_len: int, kv_cache=None,
                     kv_layout: str = "contiguous",
-                    page_size=None) -> dict:
-    import time
+                    page_size=None, tracer=None) -> dict:
     eng = Engine(params, cfg, qm, batch_size=batch, max_len=max_len,
                  scheduler=scheduler, kv_cache=kv_cache,
                  kv_layout=kv_layout, page_size=page_size,
-                 bucket_prompts=(kv_layout != "paged"))
-    t0 = time.time()
+                 bucket_prompts=(kv_layout != "paged"), tracer=tracer)
+    t0 = time.perf_counter()
     done = eng.generate(reqs)
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     toks = sum(len(r.out) for r in done)
     stats = eng.stats()
     return {"tok_per_s": toks / dt if dt > 0 else float("inf"),
@@ -94,17 +191,20 @@ def bench_scheduler(params, cfg, qm, scheduler: str, reqs, *,
             "kv_bytes_resident": eng.kv_bytes_resident(), **stats}
 
 
-def run(log=print, smoke: bool = False):
+def run(log=print, smoke: bool = False, trace=None, load: bool = True):
     if smoke:
         cfg = SMOKE_CFG
         params = api.init(jax.random.PRNGKey(0), cfg)
         n_req, batch, max_len = 10, 2, 96
         len_range, new_range = (4, 24), (2, 12)
+        n_load = 6
     else:
         params, cfg = common.get_model(log)
         n_req, batch, max_len = 32, 4, 128
         len_range, new_range = (8, 48), (4, 32)
+        n_load = 16
 
+    tracer = Tracer() if trace else None
     qm = QuantMode.mxfp4(t3=True)
     rows = []
     results = {}
@@ -112,7 +212,9 @@ def run(log=print, smoke: bool = False):
         reqs = mixed_requests(cfg, n_req, seed=0, len_range=len_range,
                               new_range=new_range)
         r = bench_scheduler(params, cfg, qm, sched, reqs,
-                            batch=batch, max_len=max_len)
+                            batch=batch, max_len=max_len,
+                            tracer=tracer if sched == "continuous"
+                            else None)
         results[sched] = r
         log(f"[serving] {sched:10s} {r['tok_per_s']:9.1f} tok/s  "
             f"util={r['decode_utilization']:.3f}  "
@@ -237,6 +339,42 @@ def run(log=print, smoke: bool = False):
         f"({w['decode_utilization']:.3f} -> {c['decode_utilization']:.3f}); "
         f"tok/s gain {tokps_gain:.2f}x")
 
+    # latency under load: open-loop Poisson arrivals swept across
+    # offered load relative to the continuous scheduler's measured
+    # offline capacity (tok/s / mean tokens-per-request from the batch
+    # run above — the RPS at which the engine saturates).
+    if load:
+        cap_rps = c["tok_per_s"] / max(c["tokens"] / n_req, 1e-9)
+        for frac in LOAD_FRACS:
+            rate = cap_rps * frac
+            r = bench_load(params, cfg, qm, rate, n_load, batch=batch,
+                           max_len=max_len, len_range=len_range,
+                           new_range=new_range, tracer=tracer)
+            tp50 = r["tpot_p50_ms"]
+            log(f"[serving] load {frac:g}x ({rate:6.2f} rps)  "
+                f"ttft p50={r['ttft_p50_ms']:.1f}ms "
+                f"p99={r['ttft_p99_ms']:.1f}ms  "
+                f"tpot p50="
+                f"{'n/a' if tp50 is None else f'{tp50:.1f}ms'}")
+            rows.append({
+                "name": f"serving_load_{frac:g}x",
+                "us_per_call": r["ttft_p50_ms"] * 1e3,
+                "derived": (f"offered_rps={r['offered_rps']:.2f};"
+                            f"achieved_rps={r['achieved_rps']:.2f};"
+                            f"ttft_p50_ms={r['ttft_p50_ms']:.1f};"
+                            f"ttft_p99_ms={r['ttft_p99_ms']:.1f};"
+                            f"tpot_p50_ms={r['tpot_p50_ms']};"
+                            f"tpot_p99_ms={r['tpot_p99_ms']}"),
+                **r})
+
+    for r in rows:                   # v1 rows predate the "schema" key
+        r.setdefault("schema", SCHEMA_VERSION)
+
+    if tracer is not None:
+        tracer.export(trace)
+        log(f"[serving] trace -> {trace} "
+            f"({len(tracer.events())} events)")
+
     # smoke traffic would pollute the perf trajectory (both JSONs)
     common.emit(rows, "serving_bench", persist=not smoke)
     if not smoke:
@@ -248,4 +386,10 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny model + small traffic for CI")
-    run(smoke=ap.parse_args().smoke)
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="export a Chrome trace of the continuous-"
+                         "scheduler runs (open in Perfetto)")
+    ap.add_argument("--no-load", action="store_true",
+                    help="skip the latency-under-load sweep")
+    args = ap.parse_args()
+    run(smoke=args.smoke, trace=args.trace, load=not args.no_load)

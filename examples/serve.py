@@ -3,7 +3,7 @@ targets — LATMiX-folded weights, online T3 block-Hadamard, MX fake-quant
 matmuls, batched KV-cache decode.
 
     PYTHONPATH=src python examples/serve.py [--quant mxfp4|off] [--batch 4]
-        [--scheduler wave|continuous]
+        [--scheduler wave|continuous] [--trace OUT.json] [--metrics]
 
 Pass --artifact DIR to skip PTQ entirely and serve a packed artifact
 exported earlier (examples/latmix_ptq.py --export or
@@ -24,7 +24,9 @@ import numpy as np
 from repro.core import ptq
 from repro.core.quantize import QuantMode
 from repro.configs.base import ArchConfig
+from repro.kernels import ops
 from repro.models import api
+from repro.obs import MetricsRegistry, Tracer
 from repro.serving.engine import Engine, Request
 
 
@@ -52,16 +54,29 @@ def main():
                     help="page the KV cache through block tables with "
                          "prefix caching (continuous scheduler only; "
                          "docs/paged-kv.md)")
+    ap.add_argument("--trace", default="", metavar="OUT.json",
+                    help="export a Chrome trace of the run — open in "
+                         "https://ui.perfetto.dev "
+                         "(docs/observability.md)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="instrument kernel dispatches and print the "
+                         "Prometheus metrics snapshot at exit")
     args = ap.parse_args()
     if args.kv_layout == "paged":
         args.scheduler = "continuous"  # paged serving is continuous-only
+
+    tracer = Tracer() if args.trace else None
+    metrics = MetricsRegistry() if args.metrics else None
+    if metrics is not None:          # kernel-dispatch hooks (ops.py)
+        ops.instrument(metrics, tracer)
 
     if args.artifact:
         eng = Engine.from_artifact(args.artifact, batch_size=args.batch,
                                    max_len=128, eager=args.eager,
                                    scheduler=args.scheduler,
                                    kv_cache=args.kv_cache,
-                                   kv_layout=args.kv_layout)
+                                   kv_layout=args.kv_layout,
+                                   metrics=metrics, tracer=tracer)
         cfg = eng.cfg
         print(f"serving artifact {args.artifact} "
               f"({'eager' if args.eager else 'packed-lazy'} weights, "
@@ -92,7 +107,7 @@ def main():
 
     eng = Engine(params, cfg, qm, batch_size=args.batch, max_len=128,
                  scheduler=args.scheduler, kv_cache=args.kv_cache,
-                 kv_layout=args.kv_layout)
+                 kv_layout=args.kv_layout, metrics=metrics, tracer=tracer)
     _run(eng, cfg, args)
 
 
@@ -133,9 +148,11 @@ def _run(eng, cfg, args):
     else:
         done = eng.generate(reqs)
         for i, r in enumerate(done):
+            # m_* are the monotonic (perf_counter) stamps — durations
+            # never use wall-clock t_* (NTP can step those backwards)
             print(f"req{i}: prompt[-4:]={list(r.prompt[-4:])} "
                   f"-> out[:8]={list(r.out[:8])} "
-                  f"({len(r.out)} tokens in {r.t_done-r.t_submit:.2f}s)")
+                  f"({len(r.out)} tokens in {r.m_done-r.m_submit:.2f}s)")
 
     stats = eng.throughput(n_requests=args.batch, prompt_len=16,
                            max_new=args.new)
@@ -145,6 +162,14 @@ def _run(eng, cfg, args):
           f"scheduler={stats['scheduler']}, "
           f"kv_cache={stats['kv_cache']}, "
           f"decode utilization {stats['decode_utilization']:.2f})")
+    if stats.get("ttft_p50") is not None:
+        print(f"latency: ttft p50={stats['ttft_p50']*1e3:.1f}ms "
+              f"p99={stats['ttft_p99']*1e3:.1f}ms")
+    if args.trace:
+        print(f"trace -> {eng.tracer.export(args.trace)} "
+              f"({len(eng.tracer.events())} events)")
+    if args.metrics:
+        print("\n" + eng.metrics.render_prometheus())
 
 
 if __name__ == "__main__":

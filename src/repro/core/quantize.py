@@ -250,7 +250,9 @@ def qlinear(x: jnp.ndarray, w: jnp.ndarray, b: Optional[jnp.ndarray],
     otherwise it is dequantized here, inside the compiled step, so HBM
     holds only the 4-bit layout either way."""
     if _mode_fusable(w, qm, role) and _fusable_shapes(x, w):
+        ops.record_quant_path("qlinear", "fused", role)
         return _fused_linear(x, w, b, qm, role)
+    ops.record_quant_path("qlinear", "ref", role)
     on_grid = _packed_on_grid(w, qm)
     w = maybe_dense(w)
     if _fused_t3(qm, role):
@@ -305,6 +307,7 @@ def qeinsum(spec: str, x: jnp.ndarray, w: jnp.ndarray,
         if (parsed is not None and x.ndim == x_rank
                 and x.shape[e_pos] == w.shape[0]
                 and x.shape[-1] == w.shape[-2]):
+            ops.record_quant_path("qeinsum", "fused", role)
             xe = jnp.moveaxis(x, e_pos, 0)           # (E, *rest, K)
             rest = xe.shape[1:-1]
             m = int(np.prod(rest)) if rest else 1
@@ -315,6 +318,7 @@ def qeinsum(spec: str, x: jnp.ndarray, w: jnp.ndarray,
             y = y.reshape(w.shape[0], *rest, w.shape[-1])
             y = jnp.moveaxis(y, 0, e_pos).astype(_out_dtype(x, w))
             return y
+    ops.record_quant_path("qeinsum", "ref", role)
     on_grid = _packed_on_grid(w, qm)
     w = maybe_dense(w)
     if _fused_t3(qm, role):

@@ -2,10 +2,22 @@
 
 ``interpret`` defaults to True on CPU (the kernel body executes in Python
 for validation); on TPU backends it defaults to False (compiled Mosaic).
+
+Dispatch instrumentation (``docs/observability.md``): after
+:func:`instrument`, every public wrapper records per-op call counts and
+cumulative host-side dispatch time into a ``repro.obs.MetricsRegistry``
+(``kernel_dispatch_calls_total`` / ``kernel_dispatch_seconds_total``,
+labeled by op), and the fused-vs-ref dispatch decisions made one level
+up in ``core.quantize`` land in ``quant_dispatch_total{op,path}``. Calls
+made *inside* an enclosing ``jax.jit`` trace execute once per compile,
+not once per step — they are labeled ``traced="true"`` so compile-time
+inlines and real dispatches never sum into each other. Uninstrumented
+(the default), the wrappers add a single ``is None`` check per call.
 """
 from __future__ import annotations
 
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
@@ -22,28 +34,121 @@ def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+# ----------------------------------------------------------------------
+# Dispatch instrumentation
+# ----------------------------------------------------------------------
+
+_instr = None       # (registry, tracer) when instrumented
+
+
+def instrument(registry, tracer=None) -> None:
+    """Start recording kernel-dispatch metrics into ``registry`` (a
+    ``repro.obs.MetricsRegistry``); optionally also emit a
+    ``dispatch:<op>`` span per python-level call when a
+    ``repro.obs.Tracer`` is given. Global (module-level) — one
+    instrumentation target at a time; :func:`uninstrument` stops."""
+    global _instr
+    _instr = (registry, tracer)
+
+
+def uninstrument() -> None:
+    global _instr
+    _instr = None
+
+
+def _is_traced(*xs) -> bool:
+    return any(isinstance(x, jax.core.Tracer) for x in xs)
+
+
+def _record(op: str, dt: float, traced: bool) -> None:
+    registry, _ = _instr
+    labels = {"op": op, "traced": "true" if traced else "false"}
+    registry.counter(
+        "kernel_dispatch_calls_total", labels,
+        help="public kernel-wrapper invocations (traced=true rows ran "
+             "inside an enclosing jit trace: once per compile, not per "
+             "step)").inc()
+    registry.counter(
+        "kernel_dispatch_seconds_total", labels, unit="s",
+        help="cumulative host-side dispatch wall time (async device "
+             "work excluded; under interpret mode this is ~the actual "
+             "kernel time)").inc(dt)
+
+
+def _dispatch(op: str, fn, *args, **kwargs):
+    """Call ``fn`` (the jitted implementation), timing the host-side
+    dispatch when instrumented. The timer spans trace+dispatch only —
+    device execution is asynchronous and deliberately NOT waited on (no
+    host sync is ever added to a serving hot loop by instrumentation)."""
+    ins = _instr
+    if ins is None:
+        return fn(*args, **kwargs)
+    traced = _is_traced(*args)
+    _, tracer = ins
+    t0 = time.perf_counter()
+    out = fn(*args, **kwargs)
+    dt = time.perf_counter() - t0
+    _record(op, dt, traced)
+    if tracer is not None and not traced:
+        tracer.complete(f"dispatch:{op}", t0, t0 + dt, cat="kernel")
+    return out
+
+
+def record_quant_path(op: str, path: str, role: str = "") -> None:
+    """Hook for ``core.quantize``: count a fused-vs-ref dispatch
+    decision (``quant_dispatch_total{op, path, role}``). No-op unless
+    :func:`instrument` is active. Runs at trace time for calls inside a
+    jit — counts are per *compiled call site*, not per step."""
+    ins = _instr
+    if ins is None:
+        return
+    ins[0].counter(
+        "quant_dispatch_total", {"op": op, "path": path, "role": role},
+        help="qlinear/qeinsum execution-path decisions (per traced "
+             "call site)").inc()
+
+
 @functools.partial(jax.jit, static_argnames=("fmt", "interpret"))
-def mx_quantize(x, fmt: str = "mxfp4", interpret: bool | None = None):
+def _mx_quantize_jit(x, fmt: str = "mxfp4",
+                     interpret: bool | None = None):
     it = _default_interpret() if interpret is None else interpret
     return _mq.mx_quant(x, fmt, interpret=it)
 
 
+def mx_quantize(x, fmt: str = "mxfp4", interpret: bool | None = None):
+    return _dispatch("mx_quantize", _mx_quantize_jit, x, fmt=fmt,
+                     interpret=interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("fmt", "interpret"))
-def mx_gemm(x, w_codes, w_scales, fmt: str = "mxfp4",
-            interpret: bool | None = None):
+def _mx_gemm_jit(x, w_codes, w_scales, fmt: str = "mxfp4",
+                 interpret: bool | None = None):
     it = _default_interpret() if interpret is None else interpret
     return _mm.mx_matmul(x, w_codes, w_scales, fmt, interpret=it)
 
 
+def mx_gemm(x, w_codes, w_scales, fmt: str = "mxfp4",
+            interpret: bool | None = None):
+    return _dispatch("mx_gemm", _mx_gemm_jit, x, w_codes, w_scales,
+                     fmt=fmt, interpret=interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("fmt", "interpret"))
-def t3_quantize(x, fmt: str = "mxfp4", interpret: bool | None = None):
+def _t3_quantize_jit(x, fmt: str = "mxfp4",
+                     interpret: bool | None = None):
     it = _default_interpret() if interpret is None else interpret
     return _hq.hadamard_quant(x, fmt, interpret=it)
 
 
+def t3_quantize(x, fmt: str = "mxfp4", interpret: bool | None = None):
+    return _dispatch("t3_quantize", _t3_quantize_jit, x, fmt=fmt,
+                     interpret=interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("fmt", "t3", "interpret"))
-def mx_gemm_packed(x, w_packed, w_scales_e8m0, fmt: str = "mxfp4",
-                   t3: bool = False, interpret: bool | None = None):
+def _mx_gemm_packed_jit(x, w_packed, w_scales_e8m0, fmt: str = "mxfp4",
+                        t3: bool = False,
+                        interpret: bool | None = None):
     """Packed-native fused MX GEMM over the HBM layout (PackedWeight
     arrays): nibble-packed codes + E8M0 scale bytes in, fp32 out.
 
@@ -79,6 +184,15 @@ def mx_gemm_packed(x, w_packed, w_scales_e8m0, fmt: str = "mxfp4",
     return fn(x, w_packed, w_scales_e8m0)
 
 
+def mx_gemm_packed(x, w_packed, w_scales_e8m0, fmt: str = "mxfp4",
+                   t3: bool = False, interpret: bool | None = None):
+    return _dispatch("mx_gemm_packed", _mx_gemm_packed_jit, x, w_packed,
+                     w_scales_e8m0, fmt=fmt, t3=t3, interpret=interpret)
+
+
+mx_gemm_packed.__doc__ = _mx_gemm_packed_jit.__doc__
+
+
 def _flash_decode_contract(q, k_codes, k_scales, v_codes,
                            v_scales, fmt: str) -> bool:
     """Does the packed KV meet the Pallas flash-decode kernel contract?"""
@@ -99,10 +213,10 @@ def _flash_decode_contract(q, k_codes, k_scales, v_codes,
 
 @functools.partial(jax.jit,
                    static_argnames=("fmt", "window", "bs", "interpret"))
-def mx_flash_decode(q, k_codes, k_scales, v_codes, v_scales, q_pos,
-                    kv_len, fmt: str = "mxfp8", window: int = 0,
-                    bs: int | None = None,
-                    interpret: bool | None = None):
+def _mx_flash_decode_jit(q, k_codes, k_scales, v_codes, v_scales, q_pos,
+                         kv_len, fmt: str = "mxfp8", window: int = 0,
+                         bs: int | None = None,
+                         interpret: bool | None = None):
     """Flash-decode attention over a packed MX KV cache.
 
     Shapes/dtypes: q (B, H, Dh) float — one decode token per lane;
@@ -151,6 +265,18 @@ def mx_flash_decode(q, k_codes, k_scales, v_codes, v_scales, q_pos,
                                explicit_bs=explicit, interpret=it)
 
 
+def mx_flash_decode(q, k_codes, k_scales, v_codes, v_scales, q_pos,
+                    kv_len, fmt: str = "mxfp8", window: int = 0,
+                    bs: int | None = None,
+                    interpret: bool | None = None):
+    return _dispatch("mx_flash_decode", _mx_flash_decode_jit, q, k_codes,
+                     k_scales, v_codes, v_scales, q_pos, kv_len, fmt=fmt,
+                     window=window, bs=bs, interpret=interpret)
+
+
+mx_flash_decode.__doc__ = _mx_flash_decode_jit.__doc__
+
+
 def _flash_decode_paged_contract(q, k_codes, k_scales, v_codes, v_scales,
                                  block_tables, fmt: str) -> bool:
     """Does the page pool meet the paged flash-decode kernel contract?"""
@@ -172,10 +298,10 @@ def _flash_decode_paged_contract(q, k_codes, k_scales, v_codes, v_scales,
 
 
 @functools.partial(jax.jit, static_argnames=("fmt", "window", "interpret"))
-def mx_flash_decode_paged(q, k_codes, k_scales, v_codes, v_scales,
-                          block_tables, q_pos, kv_len,
-                          fmt: str = "mxfp8", window: int = 0,
-                          interpret: bool | None = None):
+def _mx_flash_decode_paged_jit(q, k_codes, k_scales, v_codes, v_scales,
+                               block_tables, q_pos, kv_len,
+                               fmt: str = "mxfp8", window: int = 0,
+                               interpret: bool | None = None):
     """Flash-decode attention over a *paged* packed MX KV pool.
 
     Shapes/dtypes: q (B, H, Dh) float; k/v_codes (N, P, D*bits/8) uint8
@@ -210,6 +336,19 @@ def mx_flash_decode_paged(q, k_codes, k_scales, v_codes, v_scales,
                                      v_scales, block_tables, q_pos,
                                      kv_len, fmt, window=window,
                                      interpret=it)
+
+
+def mx_flash_decode_paged(q, k_codes, k_scales, v_codes, v_scales,
+                          block_tables, q_pos, kv_len,
+                          fmt: str = "mxfp8", window: int = 0,
+                          interpret: bool | None = None):
+    return _dispatch("mx_flash_decode_paged", _mx_flash_decode_paged_jit,
+                     q, k_codes, k_scales, v_codes, v_scales,
+                     block_tables, q_pos, kv_len, fmt=fmt, window=window,
+                     interpret=interpret)
+
+
+mx_flash_decode_paged.__doc__ = _mx_flash_decode_paged_jit.__doc__
 
 
 # re-exported oracles

@@ -12,6 +12,11 @@ Scheduling: --scheduler wave (static batching, default) or continuous
 (slot-pool continuous batching — per-request outputs are token-identical,
 decode-step utilization is much higher on mixed-length traffic; see
 docs/serving.md).
+
+Observability: --trace OUT.json exports a Chrome trace of the run
+(request lifecycles + engine steps, open in Perfetto); --metrics
+instruments kernel dispatches and prints the Prometheus metrics
+snapshot at exit (docs/observability.md).
 """
 from __future__ import annotations
 
@@ -69,6 +74,13 @@ def main():
     ap.add_argument("--n-pages", type=int, default=None,
                     help="KV pool size in pages under --kv-layout paged "
                          "(default: scrap + batch * ceil(max_len/page))")
+    ap.add_argument("--trace", default="", metavar="OUT.json",
+                    help="export a Chrome trace of the run — open in "
+                         "https://ui.perfetto.dev "
+                         "(docs/observability.md)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="instrument kernel dispatches and print the "
+                         "Prometheus metrics snapshot at exit")
     args = ap.parse_args()
 
     import jax
@@ -77,9 +89,16 @@ def main():
     from repro import configs
     from repro.core import ptq
     from repro.data import synthetic
+    from repro.kernels import ops
     from repro.models import api
+    from repro.obs import MetricsRegistry, Tracer
     from repro.serving.engine import Engine
     from repro.training import checkpoint as ckpt
+
+    tracer = Tracer() if args.trace else None
+    metrics = MetricsRegistry() if args.metrics else None
+    if metrics is not None:          # kernel-dispatch hooks (ops.py)
+        ops.instrument(metrics, tracer)
 
     if args.artifact:
         t0 = time.time()
@@ -89,7 +108,7 @@ def main():
             backend=args.backend, scheduler=args.scheduler,
             eos_id=args.eos_id, kv_cache=args.kv_cache,
             kv_layout=args.kv_layout, page_size=args.page_size,
-            n_pages=args.n_pages)
+            n_pages=args.n_pages, metrics=metrics, tracer=tracer)
         print(f"loaded artifact {args.artifact} in {time.time()-t0:.1f}s "
               f"({'eager' if args.eager else 'packed-lazy'} weights, "
               f"backend={args.backend}, scheduler={args.scheduler}, "
@@ -108,6 +127,7 @@ def main():
                   f"tokens, {stats['blocks_in_use']} blocks in use, "
                   f"{stats['blocks_evicted']} evicted, "
                   f"{eng.kv_bytes_resident()} KV bytes resident")
+        _obs_finish(eng, args)
         return
 
     cfg = (configs.get_reduced(args.arch) if args.reduced
@@ -139,7 +159,7 @@ def main():
                  backend=args.backend, scheduler=args.scheduler,
                  eos_id=args.eos_id, kv_cache=args.kv_cache,
                  kv_layout=args.kv_layout, page_size=args.page_size,
-                 n_pages=args.n_pages)
+                 n_pages=args.n_pages, metrics=metrics, tracer=tracer)
     stats = eng.throughput(n_requests=args.requests,
                            prompt_len=args.prompt_len,
                            max_new=args.max_new)
@@ -152,6 +172,24 @@ def main():
               f"tokens, {stats['blocks_in_use']} blocks in use, "
               f"{stats['blocks_evicted']} evicted, "
               f"{eng.kv_bytes_resident()} KV bytes resident")
+    _obs_finish(eng, args)
+
+
+def _obs_finish(eng, args) -> None:
+    """--trace/--metrics epilogue: export the Chrome trace and print the
+    Prometheus exposition of the engine's registry (which also carries
+    the kernel-dispatch metrics when --metrics instrumented ops)."""
+    if stats := eng.stats():
+        if stats.get("ttft_p50") is not None:
+            print(f"latency: ttft p50={stats['ttft_p50']*1e3:.1f}ms "
+                  f"p99={stats['ttft_p99']*1e3:.1f}ms"
+                  + (f", tpot p50={stats['tpot_p50']*1e3:.1f}ms"
+                     if stats.get("tpot_p50") is not None else ""))
+    if args.trace:
+        print(f"trace -> {eng.tracer.export(args.trace)} "
+              f"({len(eng.tracer.events())} events)")
+    if args.metrics:
+        print(eng.metrics.render_prometheus())
 
 
 if __name__ == "__main__":

@@ -30,10 +30,24 @@ Common posture:
   * optional ``eos_id`` — outputs stop at (and include) the first EOS,
   * per-request latency + decode-utilization accounting for the serving
     benchmark (``benchmarks/serving_bench.py``).
+
+Telemetry (``docs/observability.md``): every engine counter lives in a
+``repro.obs.MetricsRegistry`` (pass one via ``Engine(metrics=...)`` to
+share/export it, else a private one is created) — :meth:`Engine.stats`
+is a view over it, including TTFT/TPOT latency histograms. Request
+lifecycle and engine-step spans are recorded when a ``repro.obs.Tracer``
+is passed (``Engine(tracer=...)``) and exported as Chrome trace-event
+JSON; with no tracer the hot loop records nothing.
+
+Clocks: *intervals* (TTFT/TPOT, throughput, span timestamps) are always
+measured with ``time.perf_counter()`` (monotonic — wall clock can step
+backwards under NTP); ``time.time()`` survives only as the *absolute*
+``Request.t_submit``/``t_first``/``t_done`` timestamps.
 """
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import hashlib
 import time
@@ -46,6 +60,7 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.core.quantize import KVCacheQuant, QuantMode
 from repro.models import api
+from repro.obs import MetricsRegistry, Tracer
 
 SCHEDULERS = ("wave", "continuous")
 KV_LAYOUTS = ("contiguous", "paged")
@@ -99,6 +114,11 @@ class BlockAllocator:
     def in_use(self) -> int:
         """Pages referenced by at least one block table."""
         return self.capacity - self.available
+
+    @property
+    def cached(self) -> int:
+        """Pages parked for prefix reuse (ref == 0, registered)."""
+        return len(self._lru)
 
     @property
     def resident(self) -> int:
@@ -166,14 +186,28 @@ class Request:
     an optional streaming callback invoked with each emitted int token as
     it becomes available (per step under the continuous scheduler; at wave
     end under the wave scheduler). ``out`` is filled with the emitted
-    int32 token array when the request completes."""
+    int32 token array when the request completes.
+
+    Timestamps: ``t_submit``/``t_first``/``t_done`` are *absolute* wall
+    clock (``time.time()``, for logs); the ``m_*`` mirrors are
+    ``time.perf_counter()`` readings — monotonic, the ones every
+    duration (TTFT = ``m_first - m_submit``, TPOT =
+    ``(m_done - m_first)/(len(out) - 1)``) is computed from. Under the
+    wave scheduler all tokens are delivered at wave end, so
+    ``m_first == m_done`` and only TTFT (== wave latency) is
+    meaningful."""
 
     prompt: np.ndarray                  # (S,) int32
     max_new: int = 16
     out: Optional[np.ndarray] = None
-    t_submit: float = 0.0
+    t_submit: float = 0.0               # wall clock (absolute)
+    t_first: float = 0.0
     t_done: float = 0.0
+    m_submit: float = 0.0               # perf_counter (durations)
+    m_first: float = 0.0
+    m_done: float = 0.0
     on_token: Optional[Callable[[int], None]] = None
+    trace_track: Optional[str] = None   # tracer track name (engine-set)
 
 
 @dataclasses.dataclass
@@ -202,6 +236,13 @@ class Engine:
     returning the input list (mutated in place, original order).
     """
 
+    # counters that reset_stats() windows; compile counters are
+    # deliberately absent (cumulative for the engine lifetime — the jit
+    # cache never resets)
+    _WINDOW_KEYS = ("admitted", "decode_steps", "slot_steps",
+                    "useful_decode_tokens", "prefill_chunk_steps",
+                    "prefix_hit_tokens", "blocks_evicted")
+
     def __init__(self, params, cfg: ArchConfig, qm: QuantMode,
                  batch_size: int = 4, max_len: int = 256,
                  backend: str | None = None,
@@ -211,7 +252,9 @@ class Engine:
                  kv_cache: "str | KVCacheQuant | None" = None,
                  kv_layout: str = "contiguous",
                  page_size: Optional[int] = None,
-                 n_pages: Optional[int] = None):
+                 n_pages: Optional[int] = None,
+                 metrics: Optional[MetricsRegistry] = None,
+                 tracer: Optional[Tracer] = None):
         """bucket_prompts=True rounds prompt lengths up to the attention
         chunk so distinct lengths reuse one prefill compile (wave) / keep
         the chunk grid aligned (continuous). Bucketed pads are left-pad
@@ -245,7 +288,16 @@ class Engine:
         32 (the MX block) and of cfg.attn_chunk (so prefix-resume
         positions stay chunk-aligned); n_pages sizes the pool (default:
         one scrap page + batch_size * ceil(max_len/page_size), the same
-        budget as the contiguous pool)."""
+        budget as the contiguous pool).
+
+        metrics: a ``repro.obs.MetricsRegistry`` to report into (shared
+        across engines / exported by the caller); None creates a private
+        one. The registry is always on — counter updates cost what the
+        plain attributes they replaced cost. tracer: a
+        ``repro.obs.Tracer`` recording request-lifecycle and engine-step
+        spans (Chrome trace-event export, ``docs/observability.md``);
+        None (default) records nothing — no timestamps or host syncs are
+        added to the serving loop."""
         if cfg.family == "encoder":
             raise ValueError("encoder archs are not served autoregressively")
         if scheduler not in SCHEDULERS:
@@ -334,23 +386,80 @@ class Engine:
             self._tables_dev = None
             self._slot_pages: List[Optional[List[int]]] = [None] * self.B
 
-        # compile accounting: one prefill compile per distinct (B, S) wave
-        # shape (bucketing in _wave keeps this set small); the continuous
-        # scheduler's chunked prefill and vector decode each compile once.
+        # --- telemetry: every counter lives in the metrics registry;
+        # stats() is a view over it (docs/observability.md has the
+        # catalog). Compile accounting: one prefill compile per distinct
+        # (B, S) wave shape (bucketing in _wave keeps this set small);
+        # the continuous scheduler's chunked prefill and vector decode
+        # each compile once.
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.tracer = tracer
+        reg = self.metrics
         self._prefill_shapes: set = set()
-        self.prefill_compiles = 0
         self._chunk_shapes: set = set()
-        self.prefill_chunk_compiles = 0
         self._decode_shapes: set = set()
-        self.decode_compiles = 0
-
-        # serving counters (see stats())
-        self.admitted = 0
-        self.decode_steps = 0
-        self.slot_steps = 0
-        self.useful_decode_tokens = 0
-        self.prefill_chunk_steps = 0
-        self.prefix_hit_tokens = 0
+        self._c_compiles = {
+            kind: reg.counter("serving_compiles_total", {"step": kind},
+                              help="jit signatures compiled (cumulative "
+                                   "over the engine lifetime; never "
+                                   "reset — the jit cache is an "
+                                   "engine-lifetime property)")
+            for kind in ("prefill", "prefill_chunk", "decode")}
+        self._c_admitted = reg.counter(
+            "serving_requests_admitted_total",
+            help="requests admitted into a scheduler lane")
+        self._c_decode_steps = reg.counter(
+            "serving_decode_steps_total",
+            help="batched decode steps dispatched")
+        self._c_slot_steps = reg.counter(
+            "serving_slot_steps_total",
+            help="decode steps x lanes (utilization denominator)")
+        self._c_useful = reg.counter(
+            "serving_useful_decode_tokens_total",
+            help="decoded tokens that made it into a request's output")
+        self._c_chunk_steps = reg.counter(
+            "serving_prefill_chunk_steps_total",
+            help="chunked-prefill invocations (drops under prefix hits)")
+        self._c_prefix_hit_toks = reg.counter(
+            "serving_prefix_hit_tokens_total", unit="tokens",
+            help="prompt tokens served from cached prefix pages")
+        self._c_prefix_hits = reg.counter(
+            "serving_prefix_cache_hits_total",
+            help="paged admissions that reused >=1 cached prefix page")
+        self._c_prefix_misses = reg.counter(
+            "serving_prefix_cache_misses_total",
+            help="paged admissions with no cached prefix page")
+        self._c_evicted = reg.counter(
+            "serving_blocks_evicted_total",
+            help="cached prefix pages reclaimed by LRU eviction")
+        self._g_blocks_in_use = reg.gauge(
+            "serving_blocks_in_use", unit="pages",
+            help="pages referenced by live block tables")
+        self._g_blocks_cached = reg.gauge(
+            "serving_blocks_cached", unit="pages",
+            help="unreferenced pages parked for prefix reuse")
+        self._g_queue_depth = reg.gauge(
+            "serving_queue_depth", unit="requests",
+            help="requests waiting for a lane")
+        self._h_ttft = reg.histogram(
+            "serving_ttft_seconds", unit="s",
+            help="time to first token (submit -> first token available; "
+                 "wave scheduler: == wave latency, tokens are delivered "
+                 "at wave end)")
+        self._h_tpot = reg.histogram(
+            "serving_tpot_seconds", unit="s",
+            help="time per output token after the first (continuous "
+                 "scheduler only — the wave scheduler delivers all "
+                 "tokens at once)")
+        self._h_latency = reg.histogram(
+            "serving_request_latency_seconds", unit="s",
+            help="submit -> done")
+        self._h_queue_wait = reg.histogram(
+            "serving_queue_wait_seconds", unit="s",
+            help="submit -> admission start (continuous scheduler)")
+        self._evicted_seen = 0       # allocator.evicted -> counter delta
+        # windowed-vs-cumulative split (see stats()/reset_stats())
+        self._window_base = {k: 0 for k in self._WINDOW_KEYS}
 
         def prefill(params, toks):
             return api.prefill(params, cfg, toks, qm, max_len=self.max_len,
@@ -403,6 +512,76 @@ class Engine:
         self._slot_cache = None           # (1, max_len) admission scratch
         self._home = None                 # canonical input sharding (lazy)
 
+    # ------------------------------------------------------------------
+    # Telemetry helpers + legacy counter attributes (registry views)
+    # ------------------------------------------------------------------
+
+    @property
+    def admitted(self) -> int:
+        return int(self._c_admitted.value)
+
+    @property
+    def decode_steps(self) -> int:
+        return int(self._c_decode_steps.value)
+
+    @property
+    def slot_steps(self) -> int:
+        return int(self._c_slot_steps.value)
+
+    @property
+    def useful_decode_tokens(self) -> int:
+        return int(self._c_useful.value)
+
+    @property
+    def prefill_chunk_steps(self) -> int:
+        return int(self._c_chunk_steps.value)
+
+    @property
+    def prefix_hit_tokens(self) -> int:
+        return int(self._c_prefix_hit_toks.value)
+
+    @property
+    def prefill_compiles(self) -> int:
+        return int(self._c_compiles["prefill"].value)
+
+    @property
+    def prefill_chunk_compiles(self) -> int:
+        return int(self._c_compiles["prefill_chunk"].value)
+
+    @property
+    def decode_compiles(self) -> int:
+        return int(self._c_compiles["decode"].value)
+
+    def _span(self, name: str, **args):
+        """Engine-track span, or a no-op when tracing is off."""
+        if self.tracer is None:
+            return contextlib.nullcontext()
+        return self.tracer.span(name, **args)
+
+    def _count_compile(self, kind: str, key) -> None:
+        """First sighting of a jit signature: bump the cumulative
+        compile counter and drop a distinctly-marked trace event."""
+        shapes = {"prefill": self._prefill_shapes,
+                  "prefill_chunk": self._chunk_shapes,
+                  "decode": self._decode_shapes}[kind]
+        if key in shapes:
+            return
+        shapes.add(key)
+        self._c_compiles[kind].inc()
+        if self.tracer is not None:
+            self.tracer.instant(f"compile:{kind}", cat="compile",
+                                signature=str(key))
+
+    def _sync_alloc_metrics(self) -> None:
+        """Mirror BlockAllocator state into gauges/counters (paged)."""
+        if self._alloc is None:
+            return
+        self._g_blocks_in_use.set(self._alloc.in_use)
+        self._g_blocks_cached.set(self._alloc.cached)
+        if self._alloc.evicted > self._evicted_seen:
+            self._c_evicted.inc(self._alloc.evicted - self._evicted_seen)
+            self._evicted_seen = self._alloc.evicted
+
     def _home_sharding(self):
         """Canonical replicated sharding for fresh host-built inputs (the
         pool cache, a burst's first cur/pos). Uncommitted arrays are a
@@ -439,7 +618,9 @@ class Engine:
                       kv_cache: "str | KVCacheQuant | None" = None,
                       kv_layout: str = "contiguous",
                       page_size: Optional[int] = None,
-                      n_pages: Optional[int] = None) -> "Engine":
+                      n_pages: Optional[int] = None,
+                      metrics: Optional[MetricsRegistry] = None,
+                      tracer: Optional[Tracer] = None) -> "Engine":
         """Serve directly from an exported artifact directory: no
         calibration, no re-quantization — load packed bytes and go.
 
@@ -449,15 +630,15 @@ class Engine:
         routes the quantized matmuls through the packed-native Pallas
         kernels (requires eager=False to have any effect — eager loads
         are dense and fall back to the reference path). scheduler/eos_id/
-        kv_cache/kv_layout/page_size/n_pages are forwarded to
-        :class:`Engine`."""
+        kv_cache/kv_layout/page_size/n_pages/metrics/tracer are
+        forwarded to :class:`Engine`."""
         from repro.artifacts import load_artifact
         params, cfg, qm = load_artifact(path, eager=eager, verify=verify,
                                         backend=backend)
         return cls(params, cfg, qm, batch_size=batch_size, max_len=max_len,
                    scheduler=scheduler, eos_id=eos_id, kv_cache=kv_cache,
                    kv_layout=kv_layout, page_size=page_size,
-                   n_pages=n_pages)
+                   n_pages=n_pages, metrics=metrics, tracer=tracer)
 
     # ------------------------------------------------------------------
     # Streaming API
@@ -465,8 +646,14 @@ class Engine:
 
     def submit(self, req: Request) -> Request:
         """Enqueue a request. It starts executing on the next step()."""
-        req.t_submit = time.time()
+        req.t_submit = time.time()             # absolute (logs)
+        req.m_submit = time.perf_counter()     # durations
+        if self.tracer is not None and req.trace_track is None:
+            # Index comes from the tracer, not the engine, so request
+            # tracks stay unique when several engines share one tracer.
+            req.trace_track = f"req-{self.tracer.next_index('req')}"
         self._queue.append(req)
+        self._g_queue_depth.set(len(self._queue))
         return req
 
     def step(self) -> List[Request]:
@@ -480,13 +667,20 @@ class Engine:
         reqs = []
         while self._queue and len(reqs) < self.B:
             reqs.append(self._queue.popleft())
+        self._g_queue_depth.set(len(self._queue))
         return self._wave(reqs) if reqs else []
+
+    @property
+    def busy(self) -> bool:
+        """True while any request is queued or occupies a slot (i.e.
+        :meth:`step` still has work — the load generator's poll)."""
+        return bool(self._queue) or any(s is not None for s in self._slots)
 
     def drain(self) -> List[Request]:
         """Step until the queue and every slot are empty; return all
         requests completed while draining (completion order)."""
         done: List[Request] = []
-        while self._queue or any(s is not None for s in self._slots):
+        while self.busy:
             done.extend(self.step())
         return done
 
@@ -529,7 +723,25 @@ class Engine:
     def _finish(self, req: Request, toks) -> None:
         req.out = np.asarray(toks, np.int32)
         req.t_done = time.time()
-        self.useful_decode_tokens += max(len(req.out) - 1, 0)
+        req.m_done = time.perf_counter()
+        if not req.m_first:                  # wave / empty-budget path:
+            req.m_first = req.m_done         # tokens delivered at once
+            req.t_first = req.t_done
+        self._c_useful.inc(max(len(req.out) - 1, 0))
+        if req.m_submit:
+            self._h_latency.observe(req.m_done - req.m_submit)
+            self._h_ttft.observe(req.m_first - req.m_submit)
+        if len(req.out) > 1 and req.m_done > req.m_first:
+            self._h_tpot.observe((req.m_done - req.m_first)
+                                 / (len(req.out) - 1))
+        if self.tracer is not None and req.trace_track is not None:
+            if req.m_done > req.m_first:
+                self.tracer.complete("decode", req.m_first, req.m_done,
+                                     track=req.trace_track, cat="request")
+            self.tracer.complete("request", req.m_submit or req.m_done,
+                                 req.m_done, track=req.trace_track,
+                                 cat="request", tokens=len(req.out),
+                                 prompt=len(req.prompt))
 
     def _cache_dtype(self):
         emb = self.params.get("embed") if isinstance(self.params, dict) \
@@ -537,9 +749,7 @@ class Engine:
         return emb.dtype if emb is not None else jnp.float32
 
     def _count_decode_compile(self, b: int, kind: str) -> None:
-        if (b, kind) not in self._decode_shapes:
-            self._decode_shapes.add((b, kind))
-            self.decode_compiles += 1
+        self._count_compile("decode", (b, kind))
 
     # ------------------------------------------------------------------
     # Wave scheduler (static batching)
@@ -554,27 +764,30 @@ class Engine:
         for i, r in enumerate(reqs):
             toks[i, S - len(r.prompt):] = r.prompt  # left-pad
 
-        if (B, S) not in self._prefill_shapes:
-            self._prefill_shapes.add((B, S))
-            self.prefill_compiles += 1
+        self._count_compile("prefill", (B, S))
         self._count_decode_compile(B, "scalar")
-        last_logits, cache = self._prefill(self.params, jnp.asarray(toks))
-        nxt = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
-        # accumulate sampled tokens on device; one host transfer at the end
-        # (a per-step np.asarray would sync the dispatch pipeline every
-        # decode step)
-        toks_dev = [nxt]
-        pos = S
-        for _ in range(max_new - 1):
-            nxt, cache = self._decode(self.params, cache, nxt,
-                                      jnp.int32(pos))
-            toks_dev.append(nxt)
-            pos += 1
-        host = np.asarray(jnp.stack(toks_dev, axis=1))  # (B, max_new)
+        with self._span("wave", batch=B, prompt_len=S, max_new=max_new):
+            with self._span("prefill", batch=B, prompt_len=S):
+                last_logits, cache = self._prefill(self.params,
+                                                   jnp.asarray(toks))
+                nxt = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
+            # accumulate sampled tokens on device; one host transfer at
+            # the end (a per-step np.asarray would sync the dispatch
+            # pipeline every decode step)
+            toks_dev = [nxt]
+            pos = S
+            with self._span("decode_loop", steps=max(max_new - 1, 0)):
+                for _ in range(max_new - 1):
+                    nxt, cache = self._decode(self.params, cache, nxt,
+                                              jnp.int32(pos))
+                    toks_dev.append(nxt)
+                    pos += 1
+            with self._span("host_sync", tokens=B * max_new):
+                host = np.asarray(jnp.stack(toks_dev, axis=1))
         t1 = time.time()
-        self.admitted += B
-        self.decode_steps += max(max_new - 1, 0)   # max_new=0 runs no steps
-        self.slot_steps += B * max(max_new - 1, 0)
+        self._c_admitted.inc(B)
+        self._c_decode_steps.inc(max(max_new - 1, 0))  # max_new=0: none
+        self._c_slot_steps.inc(B * max(max_new - 1, 0))
         for i, r in enumerate(reqs):
             out = self._trim_eos(host[i, :r.max_new].astype(np.int32))
             self._finish(r, out)
@@ -625,19 +838,19 @@ class Engine:
         n_chunks = -(-sb // C)
         buf = np.zeros(n_chunks * C, np.int32)
         buf[sb - s:sb] = req.prompt
-        if (1, C) not in self._chunk_shapes:
-            self._chunk_shapes.add((1, C))
-            self.prefill_chunk_compiles += 1
+        self._count_compile("prefill_chunk", (1, C))
         logits = None
         for ci in range(n_chunks):
             width = min(sb - ci * C, C)
-            logits, self._slot_cache = self._prefill_chunk(
-                self.params, self._slot_cache,
-                jnp.asarray(buf[None, ci * C:(ci + 1) * C]),
-                jnp.int32(ci * C), jnp.int32(width - 1))
-            self.prefill_chunk_steps += 1
-        self._cache = self._merge(self._cache, self._slot_cache,
-                                  jnp.int32(slot))
+            with self._span("prefill_chunk", chunk=ci, slot=slot):
+                logits, self._slot_cache = self._prefill_chunk(
+                    self.params, self._slot_cache,
+                    jnp.asarray(buf[None, ci * C:(ci + 1) * C]),
+                    jnp.int32(ci * C), jnp.int32(width - 1))
+            self._c_chunk_steps.inc()
+        with self._span("merge", slot=slot):
+            self._cache = self._merge(self._cache, self._slot_cache,
+                                      jnp.int32(slot))
         tok = int(np.asarray(jnp.argmax(logits, axis=-1))[0])
         return sb, tok
 
@@ -742,10 +955,13 @@ class Engine:
             return None
         pages = matched[:m_full] + fresh
         if cow_src is not None:
-            self._cache = self._copy_page(self._cache, jnp.int32(cow_src),
-                                          jnp.int32(fresh[0]))
+            with self._span("copy_page", src=cow_src, dst=fresh[0]):
+                self._cache = self._copy_page(self._cache,
+                                              jnp.int32(cow_src),
+                                              jnp.int32(fresh[0]))
             self._alloc.decref(cow_src)
-        self.prefix_hit_tokens += resume
+        self._c_prefix_hit_toks.inc(resume)
+        (self._c_prefix_hits if m_full else self._c_prefix_misses).inc()
         self._tables[slot, :] = 0
         self._tables[slot, :len(pages)] = pages
         self._tables_dev = None
@@ -754,27 +970,65 @@ class Engine:
         n_chunks = -(-(s - resume) // C)
         buf = np.zeros(n_chunks * C, np.int32)
         buf[:s - resume] = req.prompt[resume:]
-        if ("paged", 1, C) not in self._chunk_shapes:
-            self._chunk_shapes.add(("paged", 1, C))
-            self.prefill_chunk_compiles += 1
+        self._count_compile("prefill_chunk", ("paged", 1, C))
         logits = None
         for ci in range(n_chunks):
             width = min(s - resume - ci * C, C)
-            logits, self._cache = self._prefill_chunk_paged(
-                self.params, self._cache,
-                jnp.asarray(buf[None, ci * C:(ci + 1) * C]), table_row,
-                jnp.int32(resume + ci * C), jnp.int32(width - 1))
-            self.prefill_chunk_steps += 1
+            with self._span("prefill_chunk", chunk=ci, slot=slot,
+                            paged=True):
+                logits, self._cache = self._prefill_chunk_paged(
+                    self.params, self._cache,
+                    jnp.asarray(buf[None, ci * C:(ci + 1) * C]), table_row,
+                    jnp.int32(resume + ci * C), jnp.int32(width - 1))
+            self._c_chunk_steps.inc()
         for j in range(s // P):
             self._alloc.register(hashes[j], pages[j])
         self._slot_pages[slot] = pages
         tok = int(np.asarray(jnp.argmax(logits, axis=-1))[0])
         return s, tok
 
+    def _admit_one(self, i: int, req: Request, paged: bool):
+        """Admit ``req`` into lane ``i`` with lifecycle telemetry.
+        Returns the (sb, tok) admission result, or None on paged
+        backpressure (nothing was recorded for the request)."""
+        t_a0 = time.perf_counter()
+        with self._span("admit", slot=i, prompt=len(req.prompt),
+                        req=req.trace_track or ""):
+            if paged:
+                res = self._admit_paged(i, req)
+                if res is None:
+                    return None
+            else:
+                res = self._admit(i, req)
+        self._c_admitted.inc()
+        req.m_first = time.perf_counter()
+        req.t_first = time.time()
+        if req.m_submit:
+            self._h_queue_wait.observe(t_a0 - req.m_submit)
+        if self.tracer is not None and req.trace_track is not None:
+            if req.m_submit:
+                self.tracer.complete("queued", req.m_submit, t_a0,
+                                     track=req.trace_track, cat="request")
+            self.tracer.complete("prefill", t_a0, req.m_first,
+                                 track=req.trace_track, cat="request",
+                                 prompt=len(req.prompt))
+            self.tracer.instant("first_token", track=req.trace_track,
+                                cat="request")
+        return res
+
     def _step_continuous(self) -> List[Request]:
         self._ensure_pool()
         paged = self.kv_layout == "paged"
         done: List[Request] = []
+        with self._span("engine_step"):
+            done = self._step_continuous_inner(paged, done)
+        if paged:
+            self._sync_alloc_metrics()
+        self._g_queue_depth.set(len(self._queue))
+        return done
+
+    def _step_continuous_inner(self, paged: bool,
+                               done: List[Request]) -> List[Request]:
         blocked = False
         # --- admission: fill free lanes from the queue (ring order) ---
         for off in range(self.B):
@@ -783,23 +1037,19 @@ class Engine:
                 continue
             while self._queue:
                 req = self._queue.popleft()
-                self.admitted += 1
                 if req.max_new <= 0:
+                    self._c_admitted.inc()
                     self._finish(req, [])
                     done.append(req)
                     continue
-                if paged:
-                    res = self._admit_paged(i, req)
-                    if res is None:
-                        # pool pressure: requeue at the front and stop
-                        # admitting — pages free up as lanes finish
-                        self.admitted -= 1
-                        self._queue.appendleft(req)
-                        blocked = True
-                        break
-                    sb, tok = res
-                else:
-                    sb, tok = self._admit(i, req)
+                res = self._admit_one(i, req, paged)
+                if res is None:
+                    # pool pressure: requeue at the front and stop
+                    # admitting — pages free up as lanes finish
+                    self._queue.appendleft(req)
+                    blocked = True
+                    break
+                sb, tok = res
                 self._emit(req, tok)
                 if req.max_new == 1 or tok == self.eos_id:
                     self._finish(req, [tok])   # lane freed the same step
@@ -848,18 +1098,25 @@ class Engine:
         pos_d = self._commit(jnp.asarray(pos))
         tables_d = self._tables_committed() if paged else None
         toks_dev = []
-        for _ in range(burst):
-            if paged:
-                cur_d, self._cache = self._decode_paged(
-                    self.params, self._cache, cur_d, pos_d, tables_d)
-            else:
-                cur_d, self._cache = self._decode(self.params, self._cache,
-                                                  cur_d, pos_d)
-            toks_dev.append(cur_d)
-            pos_d = pos_d + 1
-            self.decode_steps += 1
-            self.slot_steps += self.B
-        host = np.asarray(jnp.stack(toks_dev, axis=1))   # (B, burst): 1 sync
+        with self._span("decode_burst", steps=burst, lanes=len(live)):
+            for _ in range(burst):
+                # spans time the *dispatch* (device work is async; the
+                # device wait shows up in host_sync below) — no per-step
+                # host sync is ever introduced by tracing
+                with self._span("decode_step", paged=paged):
+                    if paged:
+                        cur_d, self._cache = self._decode_paged(
+                            self.params, self._cache, cur_d, pos_d,
+                            tables_d)
+                    else:
+                        cur_d, self._cache = self._decode(
+                            self.params, self._cache, cur_d, pos_d)
+                toks_dev.append(cur_d)
+                pos_d = pos_d + 1
+                self._c_decode_steps.inc()
+                self._c_slot_steps.inc(self.B)
+            with self._span("host_sync", steps=burst):
+                host = np.asarray(jnp.stack(toks_dev, axis=1))  # 1 sync
         for step in range(burst):
             for i in live:
                 sl = self._slots[i]
@@ -882,12 +1139,57 @@ class Engine:
     # Accounting
     # ------------------------------------------------------------------
 
+    def _counter_values(self) -> dict:
+        """Current cumulative values of the windowable counters."""
+        self._sync_alloc_metrics()
+        return {"admitted": self.admitted,
+                "decode_steps": self.decode_steps,
+                "slot_steps": self.slot_steps,
+                "useful_decode_tokens": self.useful_decode_tokens,
+                "prefill_chunk_steps": self.prefill_chunk_steps,
+                "prefix_hit_tokens": self.prefix_hit_tokens,
+                "blocks_evicted": int(self._c_evicted.value)}
+
+    def reset_stats(self) -> None:
+        """Start a new stats *window*: ``stats()['window']`` counts from
+        here. Explicitly NOT reset: the cumulative (flat) counters, the
+        compile counters (the jit cache is an engine-lifetime property —
+        a "window" of compiles is meaningless), the latency histograms,
+        and the gauges (they describe current state, not a period)."""
+        self._window_base = self._counter_values()
+
+    @staticmethod
+    def _quantiles(h) -> dict:
+        """{p50, p99} of a histogram in seconds; None before any
+        observation (JSON-safe, unlike NaN)."""
+        if h.count == 0:
+            return {"p50": None, "p99": None}
+        return {"p50": h.quantile(0.5), "p99": h.quantile(0.99)}
+
     def stats(self) -> dict:
-        """Serving counters since construction. decode_utilization is the
-        fraction of decode slot-steps that produced a token which made it
-        into a request's output — the wave scheduler burns slot-steps on
-        requests shorter than their wave; the continuous scheduler only
-        idles lanes when the queue runs dry.
+        """Serving counters, as a view over the metrics registry
+        (``Engine.metrics`` holds the full catalog; see
+        ``docs/observability.md``).
+
+        Key classes — the cumulative/window split is explicit:
+
+        * flat counter keys (``admitted`` ... ``blocks_evicted``) —
+          **cumulative since construction** (bit-compatible with every
+          pre-telemetry release);
+        * ``window`` — the same counters **since the last**
+          :meth:`reset_stats` (plus the window's decode_utilization);
+        * ``cumulative_compiles`` — compile counts, never windowed (the
+          jit cache is an engine-lifetime property; the flat
+          ``*_compiles`` keys alias these);
+        * ``ttft_p50/p99`` / ``tpot_p50/p99`` — seconds, from the
+          registry's latency histograms (None before any completion;
+          TPOT needs a multi-token continuous-scheduler completion).
+
+        decode_utilization is the fraction of decode slot-steps that
+        produced a token which made it into a request's output — the
+        wave scheduler burns slot-steps on requests shorter than their
+        wave; the continuous scheduler only idles lanes when the queue
+        runs dry.
 
         Paged-layout counters (zero under 'contiguous'):
         ``prefix_hit_tokens`` — prompt tokens served from cached prefix
@@ -899,25 +1201,40 @@ class Engine:
         both layouts — with prefix hits it drops below the no-sharing
         chunk count, which is how tests prove a shared prefix is
         prefilled exactly once."""
-        util = (self.useful_decode_tokens / self.slot_steps
-                if self.slot_steps else 0.0)
+        cum = self._counter_values()
+        util = (cum["useful_decode_tokens"] / cum["slot_steps"]
+                if cum["slot_steps"] else 0.0)
+        window = {k: cum[k] - self._window_base[k]
+                  for k in self._WINDOW_KEYS}
+        window["decode_utilization"] = (
+            window["useful_decode_tokens"] / window["slot_steps"]
+            if window["slot_steps"] else 0.0)
+        compiles = {"prefill": self.prefill_compiles,
+                    "prefill_chunk": self.prefill_chunk_compiles,
+                    "decode": self.decode_compiles}
+        ttft = self._quantiles(self._h_ttft)
+        tpot = self._quantiles(self._h_tpot)
         return {"scheduler": self.scheduler, "backend": self.qm.backend,
                 "kv_cache": (self.kv_quant.fmt if self.kv_quant else "none"),
                 "kv_layout": self.kv_layout,
-                "admitted": self.admitted,
-                "prefill_compiles": self.prefill_compiles,
-                "prefill_chunk_compiles": self.prefill_chunk_compiles,
-                "decode_compiles": self.decode_compiles,
-                "decode_steps": self.decode_steps,
-                "slot_steps": self.slot_steps,
-                "useful_decode_tokens": self.useful_decode_tokens,
+                "admitted": cum["admitted"],
+                "prefill_compiles": compiles["prefill"],
+                "prefill_chunk_compiles": compiles["prefill_chunk"],
+                "decode_compiles": compiles["decode"],
+                "decode_steps": cum["decode_steps"],
+                "slot_steps": cum["slot_steps"],
+                "useful_decode_tokens": cum["useful_decode_tokens"],
                 "decode_utilization": util,
-                "prefill_chunk_steps": self.prefill_chunk_steps,
-                "prefix_hit_tokens": self.prefix_hit_tokens,
+                "prefill_chunk_steps": cum["prefill_chunk_steps"],
+                "prefix_hit_tokens": cum["prefix_hit_tokens"],
                 "blocks_in_use": (self._alloc.in_use if self._alloc
                                   else 0),
                 "blocks_evicted": (self._alloc.evicted if self._alloc
-                                   else 0)}
+                                   else 0),
+                "ttft_p50": ttft["p50"], "ttft_p99": ttft["p99"],
+                "tpot_p50": tpot["p50"], "tpot_p99": tpot["p99"],
+                "window": window,
+                "cumulative_compiles": compiles}
 
     def kv_bytes_resident(self) -> int:
         """Bytes of KV cache currently holding data the engine may read.
@@ -946,26 +1263,28 @@ class Engine:
         """Tokens/second over a synthetic request wave (Fig. 4 metric),
         plus the scheduler counters from :meth:`stats`.
 
-        The step/token counters and decode_utilization describe *this
-        run* only (deltas against the engine's cumulative counters);
-        compile counts stay cumulative — the jit cache is an
-        engine-lifetime property."""
+        The flat step/token counters and decode_utilization describe
+        *this run* only (deltas against the engine's cumulative
+        counters; ``window`` is overwritten with the same per-run
+        values); compile counts stay cumulative — the jit cache is an
+        engine-lifetime property. Timed with ``time.perf_counter()``
+        (wall clock is not monotonic)."""
         rng = np.random.default_rng(seed)
         reqs = [Request(prompt=rng.integers(
             0, self.cfg.vocab_size, prompt_len).astype(np.int32),
             max_new=max_new) for _ in range(n_requests)]
         before = self.stats()
-        t0 = time.time()
+        t0 = time.perf_counter()
         done = self.generate(reqs)
-        dt = time.time() - t0
+        dt = time.perf_counter() - t0
         toks = sum(len(r.out) for r in done)
         rate = toks / dt if dt > 0 else float("inf")  # clock can tick 0
         run = self.stats()
-        for k in ("admitted", "decode_steps", "slot_steps",
-                  "useful_decode_tokens", "prefill_chunk_steps",
-                  "prefix_hit_tokens", "blocks_evicted"):
+        for k in self._WINDOW_KEYS:
             run[k] -= before[k]
         run["decode_utilization"] = (
             run["useful_decode_tokens"] / run["slot_steps"]
             if run["slot_steps"] else 0.0)
+        run["window"] = {k: run[k] for k in self._WINDOW_KEYS}
+        run["window"]["decode_utilization"] = run["decode_utilization"]
         return {"tokens": toks, "seconds": dt, "tok_per_s": rate, **run}

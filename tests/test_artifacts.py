@@ -215,7 +215,10 @@ def test_engine_from_artifact_matches_in_memory(dense_artifact, eager):
 def test_throughput_zero_dt_guard(dense_artifact, monkeypatch):
     cfg, res, _, _ = dense_artifact
     eng = Engine(res.params, cfg, res.qm, batch_size=2, max_len=64)
-    monkeypatch.setattr("repro.serving.engine.time.time", lambda: 42.0)
+    # intervals are measured with the monotonic clock (perf_counter);
+    # freeze it so throughput() sees dt == 0
+    monkeypatch.setattr("repro.serving.engine.time.perf_counter",
+                        lambda: 42.0)
     stats = eng.throughput(n_requests=2, prompt_len=8, max_new=2)
     assert stats["tok_per_s"] == float("inf")  # no ZeroDivisionError
 
