@@ -44,6 +44,7 @@ from repro.core.quantize import QuantMode
 from repro.models import api
 from repro.obs import Tracer
 from repro.serving.engine import Engine, Request
+from repro.serving.policy import RequestState, SchedulingPolicy
 from . import common
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
@@ -171,6 +172,66 @@ def bench_load(params, cfg, qm, rate_rps: float, n_req: int, *,
         "tpot_p50_ms": _pct(tpot, 50) * 1e3 if tpot else None,
         "tpot_p99_ms": _pct(tpot, 99) * 1e3 if tpot else None,
     }
+
+
+def bench_overload(params, cfg, qm, cap_rps: float, n_req: int, *,
+                   batch: int, max_len: int, len_range, new_range,
+                   seed: int = 13):
+    """Overload behavior (docs/robustness.md): the same 2x-capacity
+    Poisson traffic served with deadlines on vs off. With deadlines the
+    engine sheds the excess as TIMED_OUT and the p99 TTFT of requests
+    that *do* complete stays bounded near the deadline; without them
+    every request completes but p99 TTFT grows with queue depth.
+    Returns the two rows plus the deadline used (ms)."""
+    rate = cap_rps * 2.0
+    # roughly the back half of the offered traffic cannot meet this
+    # budget at 2x load, so the shed/served split is exercised
+    deadline_ms = 0.5 * n_req / max(cap_rps, 1e-9) * 1e3
+    rows = []
+    for tag, policy in (
+            ("on", SchedulingPolicy(deadline_ms=deadline_ms,
+                                    ttft_deadline_ms=deadline_ms)),
+            ("off", SchedulingPolicy())):
+        eng = Engine(params, cfg, qm, batch_size=batch, max_len=max_len,
+                     scheduler="continuous", policy=policy)
+        warm = mixed_requests(cfg, 2, seed=99, len_range=len_range,
+                              new_range=new_range)
+        for r in warm:        # jit-compile time must not expire these
+            r.deadline_ms = r.ttft_deadline_ms = 1e9
+        eng.generate(warm)
+        eng.reset_stats()
+        arrivals = poisson_requests(cfg, rate, n_req, seed=seed,
+                                    len_range=len_range,
+                                    new_range=new_range)
+        elapsed = run_load(eng, arrivals)
+        reqs = [r for _, r in arrivals]
+        fin = [r for r in reqs if r.state is RequestState.FINISHED]
+        ttft = [r.m_first - r.m_submit for r in fin]
+        within = sum((r.m_done - r.m_submit) * 1e3 <= deadline_ms
+                     for r in fin)
+        # count terminals off the arrival requests themselves — the
+        # engine counters are cumulative and include the warm-up
+        timed_out = sum(r.state is RequestState.TIMED_OUT for r in reqs)
+        preempts = sum(r.preemptions for r in reqs)
+        rows.append({
+            "name": f"serving_overload_deadline_{tag}",
+            "kind": "overload",
+            "us_per_call": (_pct(ttft, 99) or 0.0) * 1e6,
+            "offered_rps": rate, "n_requests": n_req,
+            "deadline_ms": deadline_ms, "elapsed_s": elapsed,
+            "completed": len(fin),
+            "timed_out": timed_out,
+            "preemptions": preempts,
+            "ttft_p50_ms": (_pct(ttft, 50) or 0.0) * 1e3,
+            "ttft_p99_ms": (_pct(ttft, 99) or 0.0) * 1e3,
+            "completed_within_deadline": within / n_req,
+            "derived": (f"deadline_ms={deadline_ms:.0f};"
+                        f"completed={len(fin)}/{n_req};"
+                        f"timed_out={timed_out};"
+                        f"ttft_p99_ms={(_pct(ttft, 99) or 0.0)*1e3:.1f};"
+                        f"within_deadline={within / n_req:.2f}"),
+        })
+    return rows, deadline_ms
 
 
 def bench_scheduler(params, cfg, qm, scheduler: str, reqs, *,
@@ -366,6 +427,23 @@ def run(log=print, smoke: bool = False, trace=None, load: bool = True):
                             f"tpot_p50_ms={r['tpot_p50_ms']};"
                             f"tpot_p99_ms={r['tpot_p99_ms']}"),
                 **r})
+
+        # overload: the same traffic shape at 2x capacity, deadlines +
+        # preemption on vs off (docs/robustness.md — bounded p99 TTFT
+        # with load shedding vs unbounded queueing)
+        orows, dms = bench_overload(params, cfg, qm, cap_rps, n_load,
+                                    batch=batch, max_len=max_len,
+                                    len_range=len_range,
+                                    new_range=new_range)
+        for r in orows:
+            tag = r["name"].rsplit("_", 1)[-1]
+            log(f"[serving] overload 2x deadline={tag:3s} "
+                f"(budget {dms:.0f}ms)  "
+                f"completed={r['completed']}/{r['n_requests']}  "
+                f"timed_out={r['timed_out']}  "
+                f"ttft p99={r['ttft_p99_ms']:.1f}ms  "
+                f"within_deadline={r['completed_within_deadline']:.2f}")
+        rows.extend(orows)
 
     for r in rows:                   # v1 rows predate the "schema" key
         r.setdefault("schema", SCHEMA_VERSION)

@@ -28,6 +28,7 @@ from repro.kernels import ops
 from repro.models import api
 from repro.obs import MetricsRegistry, Tracer
 from repro.serving.engine import Engine, Request
+from repro.serving.policy import SchedulingPolicy
 
 
 def main():
@@ -54,6 +55,17 @@ def main():
                     help="page the KV cache through block tables with "
                          "prefix caching (continuous scheduler only; "
                          "docs/paged-kv.md)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="end-to-end TTL per request; expired requests "
+                         "end TIMED_OUT (docs/robustness.md)")
+    ap.add_argument("--ttft-deadline-ms", type=float, default=None,
+                    help="time-to-first-token bound in milliseconds")
+    ap.add_argument("--max-retries", type=int, default=3,
+                    help="preemptions a request survives before the "
+                         "terminal PREEMPTED state")
+    ap.add_argument("--no-preemption", dest="preemption",
+                    action="store_false", default=True,
+                    help="disable priority preemption under pool pressure")
     ap.add_argument("--trace", default="", metavar="OUT.json",
                     help="export a Chrome trace of the run — open in "
                          "https://ui.perfetto.dev "
@@ -64,6 +76,10 @@ def main():
     args = ap.parse_args()
     if args.kv_layout == "paged":
         args.scheduler = "continuous"  # paged serving is continuous-only
+    args.policy = SchedulingPolicy(deadline_ms=args.deadline_ms,
+                                   ttft_deadline_ms=args.ttft_deadline_ms,
+                                   preemption=args.preemption,
+                                   max_retries=args.max_retries)
 
     tracer = Tracer() if args.trace else None
     metrics = MetricsRegistry() if args.metrics else None
@@ -76,7 +92,8 @@ def main():
                                    scheduler=args.scheduler,
                                    kv_cache=args.kv_cache,
                                    kv_layout=args.kv_layout,
-                                   metrics=metrics, tracer=tracer)
+                                   metrics=metrics, tracer=tracer,
+                                   policy=args.policy)
         cfg = eng.cfg
         print(f"serving artifact {args.artifact} "
               f"({'eager' if args.eager else 'packed-lazy'} weights, "
@@ -107,7 +124,8 @@ def main():
 
     eng = Engine(params, cfg, qm, batch_size=args.batch, max_len=128,
                  scheduler=args.scheduler, kv_cache=args.kv_cache,
-                 kv_layout=args.kv_layout, metrics=metrics, tracer=tracer)
+                 kv_layout=args.kv_layout, metrics=metrics, tracer=tracer,
+                 policy=args.policy)
     _run(eng, cfg, args)
 
 
@@ -153,6 +171,11 @@ def _run(eng, cfg, args):
             print(f"req{i}: prompt[-4:]={list(r.prompt[-4:])} "
                   f"-> out[:8]={list(r.out[:8])} "
                   f"({len(r.out)} tokens in {r.m_done-r.m_submit:.2f}s)")
+
+    st = eng.stats()
+    if any(v for k, v in st["terminal"].items() if k != "finished"):
+        print("terminal states: " + ", ".join(
+            f"{k}={v}" for k, v in st["terminal"].items() if v))
 
     stats = eng.throughput(n_requests=args.batch, prompt_len=16,
                            max_new=args.new)

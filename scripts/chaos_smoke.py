@@ -1,0 +1,159 @@
+"""CI chaos smoke: replay seeded fault scenarios against the serving
+engine and validate the observable story end to end — the exported
+trace must contain the preemption/timeout/cancel instants, the metrics
+snapshot must carry the terminal-state counters, and quiescence must
+leave zero leaked pages (docs/robustness.md).
+
+    PYTHONPATH=src python scripts/chaos_smoke.py
+
+Three scenarios, all deterministic (seeded injector + greedy decode):
+
+1. lifecycle — a tight paged pool where a high-priority arrival
+   preempts the running request, a zero-deadline request times out,
+   and a queued request is cancelled; traced.
+2. nan-isolation — a poisoned decode lane fails only its own request.
+3. corruption — a truncated artifact tensor file is rejected with a
+   descriptive IntegrityError, not a zip traceback.
+
+Exit 0 on success, 1 with a message on the first violated invariant.
+"""
+import pathlib
+import sys
+import tempfile
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
+                       / "src"))
+
+import jax
+import numpy as np
+
+from repro.artifacts import IntegrityError, export_artifact, load_artifact
+from repro.artifacts.manifest import WEIGHTS_FILE
+from repro.configs.base import ArchConfig
+from repro.core import ptq
+from repro.core.quantize import QuantMode
+from repro.models import api
+from repro.obs import MetricsRegistry, Tracer, validate_trace
+from repro.serving.engine import Engine, Request
+from repro.serving.faults import FaultInjector, corrupt_file
+from repro.serving.policy import RequestState, SchedulingPolicy
+
+CFG = ArchConfig(name="chaos", family="dense", n_layers=2, d_model=64,
+                 n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=128,
+                 attn_chunk=16)
+
+
+def _req(n, new, seed, **kw):
+    rng = np.random.default_rng(seed)
+    return Request(prompt=rng.integers(0, CFG.vocab_size, n)
+                   .astype(np.int32), max_new=new, **kw)
+
+
+def scenario_lifecycle(params):
+    tracer, metrics = Tracer(), MetricsRegistry()
+    eng = Engine(params, CFG, QuantMode.off(), batch_size=2, max_len=64,
+                 scheduler="continuous", kv_layout="paged", page_size=32,
+                 n_pages=3, policy=SchedulingPolicy(backoff_base_s=0.001),
+                 faults=FaultInjector(seed=0).inject("slow_step", every=6,
+                                                     delay_s=0.001),
+                 metrics=metrics, tracer=tracer)
+    # lo fills the pool (far-future deadline caps its bursts so it is
+    # mid-flight when hi arrives); hi preempts it; doomed times out;
+    # parked is cancelled while queued.
+    lo = _req(40, 10, seed=7, priority=0, deadline_ms=1e7)
+    eng.submit(lo)
+    eng.step()
+    assert lo.state is RequestState.RUNNING, "lo never started"
+    hi = _req(38, 8, seed=8, priority=5)
+    doomed = _req(10, 4, seed=9, deadline_ms=0.0)
+    parked = _req(12, 4, seed=10, deadline_ms=1e7)
+    for r in (hi, doomed, parked):
+        eng.submit(r)
+    assert eng.cancel(parked.request_id), "cancel of queued request failed"
+    steps = 0
+    while eng.busy:
+        eng.step()
+        steps += 1
+        assert steps < 500, "no quiescence"
+        eng._alloc.check()
+
+    st = eng.stats()
+    assert lo.state is RequestState.FINISHED and lo.preemptions >= 1
+    assert hi.state is RequestState.FINISHED
+    assert doomed.state is RequestState.TIMED_OUT
+    assert parked.state is RequestState.CANCELLED
+    assert sum(st["terminal"].values()) == st["submitted"] == 4
+    assert st["preemptions"] >= 1
+    assert st["blocks_in_use"] == 0, "leaked pages"
+    eng._alloc.check()
+
+    with tempfile.TemporaryDirectory() as td:
+        evs = validate_trace(eng.tracer.export(f"{td}/chaos_trace.json"))
+    names = [e["name"] for e in evs]
+    for needle in ("preempt", "timeout", "cancel"):
+        assert needle in names, f"trace is missing the {needle!r} instant"
+    snap = metrics.snapshot()
+    got = {s["labels"]["state"]: s["value"]
+           for s in snap["serving_requests_terminal_total"]}
+    assert got.get("finished") == 2 and got.get("timed_out") == 1 \
+        and got.get("cancelled") == 1, f"terminal counters wrong: {got}"
+    assert snap["serving_preemptions_total"][0]["value"] >= 1
+    print(f"lifecycle OK: {len(evs)} trace events, terminal={got}, "
+          f"{st['preemptions']} preemptions, 0 leaked pages")
+
+
+def scenario_nan_isolation(params):
+    eng = Engine(params, CFG, QuantMode.off(), batch_size=2, max_len=64,
+                 scheduler="continuous",
+                 faults=FaultInjector(seed=0).inject("nan_logits", at=1,
+                                                     lane=0))
+    victim, bystander = _req(16, 6, seed=20), _req(24, 6, seed=21)
+    ref = Engine(params, CFG, QuantMode.off(), batch_size=2, max_len=64,
+                 scheduler="continuous")
+    ref_out = ref.generate([_req(24, 6, seed=21)])[0].out
+    eng.submit(victim)
+    eng.submit(bystander)
+    eng.drain()
+    assert victim.state is RequestState.FAILED, victim.state
+    assert "non-finite" in victim.error
+    assert bystander.state is RequestState.FINISHED
+    np.testing.assert_array_equal(bystander.out, ref_out)
+    assert eng.stats()["nan_guard_trips"] == 1
+    print(f"nan-isolation OK: victim failed ({victim.error!r}), "
+          f"bystander bit-identical to fault-free run")
+
+
+def scenario_corruption(params):
+    calib_rng = np.random.default_rng(0)
+    calib = [{"inputs": calib_rng.integers(0, CFG.vocab_size, (2, 32))}]
+    res = ptq.apply_method("rtn", params, CFG, calib, fmt="mxfp4")
+    with tempfile.TemporaryDirectory() as td:
+        art = pathlib.Path(td) / "art"
+        export_artifact(res, CFG, art)
+        load_artifact(art)                       # sanity: loads clean
+        corrupt_file(art / WEIGHTS_FILE, mode="truncate", seed=1,
+                     within=art)
+        try:
+            load_artifact(art)
+        except IntegrityError as e:
+            assert "corrupt or truncated" in str(e), str(e)
+            print(f"corruption OK: descriptive IntegrityError ({e})")
+        else:
+            raise AssertionError("truncated artifact loaded silently")
+
+
+def main():
+    params = api.init(jax.random.PRNGKey(0), CFG)
+    scenario_lifecycle(params)
+    scenario_nan_isolation(params)
+    scenario_corruption(params)
+    print("chaos smoke: all scenarios green")
+    return 0
+
+
+if __name__ == "__main__":
+    try:
+        sys.exit(main())
+    except AssertionError as e:
+        print(f"chaos smoke FAILED: {e}", file=sys.stderr)
+        sys.exit(1)

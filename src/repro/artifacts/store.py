@@ -195,13 +195,20 @@ def export_artifact(result, cfg: ArchConfig, out_dir, *,
 # ---------------------------------------------------------------------------
 
 def _load_npz(path: pathlib.Path) -> dict:
+    """Read every array in an npz store, translating the zip layer's
+    failure zoo (BadZipFile, truncated reads, CRC mismatches — all of
+    which otherwise surface deep inside numpy's unpacking) into one
+    descriptive IntegrityError naming the file and the cure."""
     try:
         with np.load(path) as z:
             return {k: z[k] for k in z.files}
     except FileNotFoundError:
         raise ArtifactError(f"missing {path.name} in artifact directory")
     except Exception as e:  # BadZipFile / truncated / bit-flipped stores
-        raise IntegrityError(f"corrupt {path.name}: {e}")
+        raise IntegrityError(
+            f"artifact tensor file {path.name} is corrupt or truncated "
+            f"({type(e).__name__}: {e}) — the artifact cannot be served; "
+            f"re-export it or restore the file from backup")
 
 
 def _decode_raw(t: TensorRecord, arr: np.ndarray) -> np.ndarray:
@@ -238,11 +245,17 @@ def _read_arrays(root: pathlib.Path, man: Manifest,
                         or array_sha256(weights[f"{t.key}.scales"])
                         != t.sha256_scales):
                     raise IntegrityError(
-                        f"content hash mismatch for packed tensor {t.key!r}")
+                        f"content hash mismatch for packed tensor "
+                        f"{t.key!r}: the stored bytes differ from the "
+                        f"manifest's sha256 — the file was modified or "
+                        f"corrupted after export")
             else:
                 if array_sha256(aux[t.key]) != t.sha256:
                     raise IntegrityError(
-                        f"content hash mismatch for tensor {t.key!r}")
+                        f"content hash mismatch for tensor {t.key!r}: "
+                        f"the stored bytes differ from the manifest's "
+                        f"sha256 — the file was modified or corrupted "
+                        f"after export")
     return weights, aux
 
 

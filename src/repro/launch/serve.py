@@ -74,6 +74,20 @@ def main():
     ap.add_argument("--n-pages", type=int, default=None,
                     help="KV pool size in pages under --kv-layout paged "
                          "(default: scrap + batch * ceil(max_len/page))")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="end-to-end TTL per request in milliseconds; "
+                         "expired requests end TIMED_OUT instead of "
+                         "queueing unboundedly (docs/robustness.md)")
+    ap.add_argument("--ttft-deadline-ms", type=float, default=None,
+                    help="time-to-first-token bound in milliseconds "
+                         "(expires requests still waiting for a lane)")
+    ap.add_argument("--max-retries", type=int, default=3,
+                    help="preemptions a request survives before the "
+                         "terminal PREEMPTED state (default 3)")
+    ap.add_argument("--no-preemption", dest="preemption",
+                    action="store_false", default=True,
+                    help="disable evicting lower-priority running "
+                         "requests under KV-pool pressure")
     ap.add_argument("--trace", default="", metavar="OUT.json",
                     help="export a Chrome trace of the run — open in "
                          "https://ui.perfetto.dev "
@@ -93,8 +107,13 @@ def main():
     from repro.models import api
     from repro.obs import MetricsRegistry, Tracer
     from repro.serving.engine import Engine
+    from repro.serving.policy import SchedulingPolicy
     from repro.training import checkpoint as ckpt
 
+    policy = SchedulingPolicy(deadline_ms=args.deadline_ms,
+                              ttft_deadline_ms=args.ttft_deadline_ms,
+                              preemption=args.preemption,
+                              max_retries=args.max_retries)
     tracer = Tracer() if args.trace else None
     metrics = MetricsRegistry() if args.metrics else None
     if metrics is not None:          # kernel-dispatch hooks (ops.py)
@@ -108,7 +127,8 @@ def main():
             backend=args.backend, scheduler=args.scheduler,
             eos_id=args.eos_id, kv_cache=args.kv_cache,
             kv_layout=args.kv_layout, page_size=args.page_size,
-            n_pages=args.n_pages, metrics=metrics, tracer=tracer)
+            n_pages=args.n_pages, metrics=metrics, tracer=tracer,
+            policy=policy)
         print(f"loaded artifact {args.artifact} in {time.time()-t0:.1f}s "
               f"({'eager' if args.eager else 'packed-lazy'} weights, "
               f"backend={args.backend}, scheduler={args.scheduler}, "
@@ -159,7 +179,8 @@ def main():
                  backend=args.backend, scheduler=args.scheduler,
                  eos_id=args.eos_id, kv_cache=args.kv_cache,
                  kv_layout=args.kv_layout, page_size=args.page_size,
-                 n_pages=args.n_pages, metrics=metrics, tracer=tracer)
+                 n_pages=args.n_pages, metrics=metrics, tracer=tracer,
+                 policy=policy)
     stats = eng.throughput(n_requests=args.requests,
                            prompt_len=args.prompt_len,
                            max_new=args.max_new)

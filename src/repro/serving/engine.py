@@ -43,6 +43,22 @@ Clocks: *intervals* (TTFT/TPOT, throughput, span timestamps) are always
 measured with ``time.perf_counter()`` (monotonic — wall clock can step
 backwards under NTP); ``time.time()`` survives only as the *absolute*
 ``Request.t_submit``/``t_first``/``t_done`` timestamps.
+
+Lifecycle (``docs/robustness.md``): every request ends in exactly one
+terminal :class:`~repro.serving.policy.RequestState` — ``FINISHED``,
+``CANCELLED`` (:meth:`Engine.cancel`), ``TIMED_OUT`` (per-request TTFT /
+end-to-end deadlines, checked while queued and between decode bursts),
+``FAILED`` (the per-lane non-finite-logit guard, or a request that can
+*never* fit the pool), or ``PREEMPTED`` (evicted under pressure with the
+retry budget exhausted). Admission is priority-ordered; under pool
+exhaustion the lowest-priority running request is preempted (pages
+deref'd, request requeued with bounded retries + exponential backoff —
+re-prefill is cheap under the paged prefix cache) instead of blocking
+admission behind it. All of it is driven by a
+:class:`~repro.serving.policy.SchedulingPolicy` and observable through
+terminal-state counters and lifecycle trace spans; a seeded
+:class:`~repro.serving.faults.FaultInjector` (``Engine(faults=...)``)
+can deterministically force every one of these paths for chaos tests.
 """
 from __future__ import annotations
 
@@ -61,6 +77,10 @@ from repro.configs.base import ArchConfig
 from repro.core.quantize import KVCacheQuant, QuantMode
 from repro.models import api
 from repro.obs import MetricsRegistry, Tracer
+from repro.serving.faults import FaultInjector
+from repro.serving.policy import (RequestQueue, RequestState,
+                                  SchedulingPolicy, TERMINAL_STATES,
+                                  pick_victim)
 
 SCHEDULERS = ("wave", "continuous")
 KV_LAYOUTS = ("contiguous", "paged")
@@ -121,6 +141,11 @@ class BlockAllocator:
         return len(self._lru)
 
     @property
+    def free(self) -> int:
+        """Pages on the free list (content garbage)."""
+        return len(self._free)
+
+    @property
     def resident(self) -> int:
         """Pages holding live KV bytes (referenced or cached)."""
         return self.capacity - len(self._free)
@@ -176,9 +201,62 @@ class BlockAllocator:
             self._lru.move_to_end(p)
         return p
 
+    def flush_cache(self) -> int:
+        """Evict every cached (unreferenced, registered) page back to
+        the free list; returns how many were reclaimed. The forced-
+        eviction chaos hook (``FaultInjector`` point ``evict_cache``) —
+        referenced pages are untouched."""
+        n = 0
+        while self._lru:
+            p, _ = self._lru.popitem(last=False)
+            del self._page_of[self._hash_of.pop(p)]
+            self._free.append(p)
+            self.evicted += 1
+            n += 1
+        return n
 
-@dataclasses.dataclass
-class Request:
+    def check(self) -> dict:
+        """Verify the allocator's internal invariants; raises
+        AssertionError on any violation, else returns the accounting
+        ``{"free", "cached", "in_use", "evicted"}``. The chaos /
+        property tests call this after every interleaved operation:
+        free + cached + referenced must partition [reserved, n_pages)
+        exactly — a page leak or double-free shows up here."""
+        if any(r < 0 for r in self._ref.values()):
+            raise AssertionError("negative refcount")
+        fs = set(self._free)
+        cs = set(self._lru)
+        rs = {p for p, r in self._ref.items() if r > 0}
+        if len(fs) != len(self._free):
+            raise AssertionError("duplicate page on the free list")
+        for a, b, what in ((fs, cs, "free/cached"), (fs, rs, "free/ref"),
+                           (cs, rs, "cached/ref")):
+            if a & b:
+                raise AssertionError(f"page in two states: {what} "
+                                     f"{sorted(a & b)}")
+        allp = set(range(self.reserved, self.n_pages))
+        if fs | cs | rs != allp:
+            raise AssertionError(
+                f"pages unaccounted for: missing {sorted(allp - fs - cs - rs)}"
+                f" extra {sorted((fs | cs | rs) - allp)}")
+        for p in cs:
+            if p not in self._hash_of:
+                raise AssertionError(f"cached page {p} has no hash")
+        if len(self._page_of) != len(self._hash_of):
+            raise AssertionError("hash<->page maps out of sync")
+        for h, p in self._page_of.items():
+            if self._hash_of.get(p) != h:
+                raise AssertionError(f"hash map mismatch on page {p}")
+        if self.in_use + self.free + self.cached != self.capacity:
+            raise AssertionError(
+                f"in_use {self.in_use} + free {self.free} + cached "
+                f"{self.cached} != capacity {self.capacity}")
+        return {"free": self.free, "cached": self.cached,
+                "in_use": self.in_use, "evicted": self.evicted}
+
+
+@dataclasses.dataclass(eq=False)       # identity eq/hash: a request is
+class Request:                         # a handle, not a value
     """One generation request.
 
     prompt: (S,) int32 token ids. max_new: decode budget (the output is
@@ -195,7 +273,20 @@ class Request:
     ``(m_done - m_first)/(len(out) - 1)``) is computed from. Under the
     wave scheduler all tokens are delivered at wave end, so
     ``m_first == m_done`` and only TTFT (== wave latency) is
-    meaningful."""
+    meaningful.
+
+    Lifecycle (``docs/robustness.md``): ``state`` walks
+    QUEUED -> RUNNING -> one terminal :class:`RequestState`; ``error``
+    carries the human-readable reason for any non-FINISHED end.
+    ``priority`` orders admission (higher first) and gates preemption —
+    only strictly lower-priority running requests can be evicted for
+    this one. ``deadline_ms`` (submit -> done) and ``ttft_deadline_ms``
+    (submit -> first token) override the engine policy's defaults; None
+    defers to the policy. ``request_id`` keys :meth:`Engine.cancel`
+    (auto-assigned at submit when None). ``retries``/``preemptions``/
+    ``not_before`` are preemption bookkeeping (engine-managed), and
+    ``_gen`` accumulates emitted tokens across preemptions so a resumed
+    request re-prefills prompt+_gen and continues bit-identically."""
 
     prompt: np.ndarray                  # (S,) int32
     max_new: int = 16
@@ -208,6 +299,17 @@ class Request:
     m_done: float = 0.0
     on_token: Optional[Callable[[int], None]] = None
     trace_track: Optional[str] = None   # tracer track name (engine-set)
+    # --- lifecycle (docs/robustness.md) ---
+    priority: int = 0                   # higher admits (and evicts) first
+    deadline_ms: Optional[float] = None          # submit -> done TTL
+    ttft_deadline_ms: Optional[float] = None     # submit -> first token
+    request_id: Optional[str] = None    # cancel() handle (engine-set)
+    state: RequestState = RequestState.QUEUED
+    error: Optional[str] = None         # reason for a non-FINISHED end
+    retries: int = 0                    # re-admissions after preemption
+    preemptions: int = 0                # times evicted from a lane
+    not_before: float = 0.0             # backoff hold (perf_counter)
+    _gen: List[int] = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
@@ -254,7 +356,9 @@ class Engine:
                  page_size: Optional[int] = None,
                  n_pages: Optional[int] = None,
                  metrics: Optional[MetricsRegistry] = None,
-                 tracer: Optional[Tracer] = None):
+                 tracer: Optional[Tracer] = None,
+                 policy: Optional[SchedulingPolicy] = None,
+                 faults: Optional[FaultInjector] = None):
         """bucket_prompts=True rounds prompt lengths up to the attention
         chunk so distinct lengths reuse one prefill compile (wave) / keep
         the chunk grid aligned (continuous). Bucketed pads are left-pad
@@ -297,7 +401,15 @@ class Engine:
         ``repro.obs.Tracer`` recording request-lifecycle and engine-step
         spans (Chrome trace-event export, ``docs/observability.md``);
         None (default) records nothing — no timestamps or host syncs are
-        added to the serving loop."""
+        added to the serving loop.
+
+        policy: a ``repro.serving.policy.SchedulingPolicy`` — default
+        deadlines, the preemption switch, retry budget/backoff
+        (``docs/robustness.md``); None uses the policy defaults (no
+        deadlines, preemption on). faults: a seeded
+        ``repro.serving.faults.FaultInjector`` whose rules fire at the
+        engine's injection points (chaos tests only; None — the
+        default — adds zero work to the serving loop)."""
         if cfg.family == "encoder":
             raise ValueError("encoder archs are not served autoregressively")
         if scheduler not in SCHEDULERS:
@@ -327,6 +439,8 @@ class Engine:
                 "continuous scheduler requires a token-embedding KV-cache "
                 "family (dense/moe); recurrent-state families must use "
                 "scheduler='wave'")
+        self.policy = policy if policy is not None else SchedulingPolicy()
+        self._faults = faults
         self.kv_quant = KVCacheQuant.parse(kv_cache)
         if self.kv_quant is not None:
             if cfg.family == "ssm":
@@ -457,6 +571,32 @@ class Engine:
         self._h_queue_wait = reg.histogram(
             "serving_queue_wait_seconds", unit="s",
             help="submit -> admission start (continuous scheduler)")
+        self._c_submitted = reg.counter(
+            "serving_requests_submitted_total",
+            help="requests accepted by submit()")
+        self._c_terminal = {
+            s: reg.counter("serving_requests_terminal_total",
+                           {"state": s.value},
+                           help="requests reaching this terminal "
+                                "lifecycle state (docs/robustness.md); "
+                                "the series sum equals submitted "
+                                "requests at quiescence")
+            for s in (RequestState.FINISHED, RequestState.CANCELLED,
+                      RequestState.TIMED_OUT, RequestState.FAILED,
+                      RequestState.PREEMPTED)}
+        self._c_preempt = reg.counter(
+            "serving_preemptions_total",
+            help="running requests evicted from a lane (priority "
+                 "inversion or page pressure); each is requeued with "
+                 "backoff until its retry budget runs out")
+        self._c_nan = reg.counter(
+            "serving_nan_guard_trips_total",
+            help="requests failed by the per-lane non-finite-logit "
+                 "guard (the rest of the decode batch continues)")
+        self._c_never_fit = reg.counter(
+            "serving_rejected_never_fit_total",
+            help="requests rejected at admission because prompt+budget "
+                 "can never fit the pool (terminal FAILED, not requeued)")
         self._evicted_seen = 0       # allocator.evicted -> counter delta
         # windowed-vs-cumulative split (see stats()/reset_stats())
         self._window_base = {k: 0 for k in self._WINDOW_KEYS}
@@ -469,9 +609,20 @@ class Engine:
             return api.prefill_chunk(params, cfg, cache, toks, start,
                                      last_idx, qm)
 
-        def decode(params, cache, toks, cur_len):
+        def decode(params, cache, toks, cur_len, poison_lane):
             logits, cache = api.decode(params, cfg, cache, toks, cur_len, qm)
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+            # per-lane NaN/Inf guard: `ok` rides back with the sampled
+            # tokens (fetched in the existing burst sync — no extra host
+            # round trip). poison_lane is the nan_logits chaos hook; -1
+            # (the always case outside chaos tests) makes the where a
+            # bitwise identity.
+            lanes = jnp.arange(logits.shape[0], dtype=jnp.int32)
+            logits = jnp.where((lanes == poison_lane)[:, None],
+                               jnp.float32(jnp.nan).astype(logits.dtype),
+                               logits)
+            ok = jnp.isfinite(logits).all(axis=-1)
+            return (jnp.argmax(logits, axis=-1).astype(jnp.int32), ok,
+                    cache)
 
         def merge_slot(cache, slot_cache, i):
             def upd(c, s):
@@ -484,10 +635,17 @@ class Engine:
             return api.prefill_chunk_paged(params, cfg, cache, tables,
                                            toks, start, last_idx, qm)
 
-        def decode_paged(params, cache, toks, cur_len, tables):
+        def decode_paged(params, cache, toks, cur_len, tables,
+                         poison_lane):
             logits, cache = api.decode_paged(params, cfg, cache, toks,
                                              cur_len, tables, qm)
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+            lanes = jnp.arange(logits.shape[0], dtype=jnp.int32)
+            logits = jnp.where((lanes == poison_lane)[:, None],
+                               jnp.float32(jnp.nan).astype(logits.dtype),
+                               logits)
+            ok = jnp.isfinite(logits).all(axis=-1)
+            return (jnp.argmax(logits, axis=-1).astype(jnp.int32), ok,
+                    cache)
 
         def copy_page(cache, src, dst):
             # clone one pool page (all layers, k and v, codes and
@@ -505,7 +663,9 @@ class Engine:
         self._copy_page = jax.jit(copy_page)
 
         # streaming state
-        self._queue: collections.deque = collections.deque()
+        self._queue = RequestQueue()      # priority + backoff admission
+        self._by_id: dict = {}            # request_id -> live Request
+        self._next_id = 0                 # request_id autonumber
         self._slots: List[Optional[_Slot]] = [None] * self.B
         self._admit_cursor = 0            # ring rotation over the lanes
         self._cache = None                # persistent (B, max_len) KV pool
@@ -620,7 +780,9 @@ class Engine:
                       page_size: Optional[int] = None,
                       n_pages: Optional[int] = None,
                       metrics: Optional[MetricsRegistry] = None,
-                      tracer: Optional[Tracer] = None) -> "Engine":
+                      tracer: Optional[Tracer] = None,
+                      policy: Optional[SchedulingPolicy] = None,
+                      faults: Optional[FaultInjector] = None) -> "Engine":
         """Serve directly from an exported artifact directory: no
         calibration, no re-quantization — load packed bytes and go.
 
@@ -630,51 +792,112 @@ class Engine:
         routes the quantized matmuls through the packed-native Pallas
         kernels (requires eager=False to have any effect — eager loads
         are dense and fall back to the reference path). scheduler/eos_id/
-        kv_cache/kv_layout/page_size/n_pages/metrics/tracer are
-        forwarded to :class:`Engine`."""
+        kv_cache/kv_layout/page_size/n_pages/metrics/tracer/policy/
+        faults are forwarded to :class:`Engine`."""
         from repro.artifacts import load_artifact
         params, cfg, qm = load_artifact(path, eager=eager, verify=verify,
                                         backend=backend)
         return cls(params, cfg, qm, batch_size=batch_size, max_len=max_len,
                    scheduler=scheduler, eos_id=eos_id, kv_cache=kv_cache,
                    kv_layout=kv_layout, page_size=page_size,
-                   n_pages=n_pages, metrics=metrics, tracer=tracer)
+                   n_pages=n_pages, metrics=metrics, tracer=tracer,
+                   policy=policy, faults=faults)
 
     # ------------------------------------------------------------------
     # Streaming API
     # ------------------------------------------------------------------
 
     def submit(self, req: Request) -> Request:
-        """Enqueue a request. It starts executing on the next step()."""
+        """Enqueue a request. It starts executing on the next step().
+
+        Assigns a ``request_id`` (for :meth:`cancel`) when the request
+        has none, applies the engine policy's default deadlines to
+        requests that don't carry their own, and moves the request into
+        the QUEUED lifecycle state."""
         req.t_submit = time.time()             # absolute (logs)
         req.m_submit = time.perf_counter()     # durations
+        if req.request_id is None:
+            req.request_id = f"req-{self._next_id}"
+            self._next_id += 1
+        if req.deadline_ms is None:
+            req.deadline_ms = self.policy.deadline_ms
+        if req.ttft_deadline_ms is None:
+            req.ttft_deadline_ms = self.policy.ttft_deadline_ms
+        req.state = RequestState.QUEUED
+        self._by_id[req.request_id] = req
+        self._c_submitted.inc()
         if self.tracer is not None and req.trace_track is None:
             # Index comes from the tracer, not the engine, so request
             # tracks stay unique when several engines share one tracer.
             req.trace_track = f"req-{self.tracer.next_index('req')}"
-        self._queue.append(req)
+        self._queue.push(req)
         self._g_queue_depth.set(len(self._queue))
         return req
+
+    def cancel(self, request_id: str) -> bool:
+        """Client-side cancellation: stop ``request_id`` wherever it is.
+
+        Queued requests are dropped (the queue skips non-QUEUED entries
+        lazily); a running request's lane is freed and its pages
+        deref'd mid-flight. The request lands in the terminal CANCELLED
+        state with any tokens emitted so far in ``out``. Returns False
+        when the id is unknown or the request already reached a
+        terminal state (cancellation is idempotent, not an error)."""
+        req = self._by_id.get(request_id)
+        if req is None or req.state in TERMINAL_STATES:
+            return False
+        for i, sl in enumerate(self._slots):
+            if sl is not None and sl.req is req:
+                self._slots[i] = None
+                if self.kv_layout == "paged":
+                    self._release_paged(i)
+                    self._sync_alloc_metrics()
+                break
+        if self.tracer is not None and req.trace_track is not None:
+            self.tracer.instant("cancel", track=req.trace_track,
+                                cat="request")
+        self._finish(req, req._gen, state=RequestState.CANCELLED,
+                     error="cancelled by client")
+        self._g_queue_depth.set(len(self._queue))
+        return True
 
     def step(self) -> List[Request]:
         """Run one scheduler step; return the requests it completed.
 
         Continuous: admit queued requests into free slots (chunked
         prefill), then one batched decode step over all live slots.
-        Wave: serve one full wave of up to B queued requests."""
+        Wave: serve one full wave of up to B queued requests.
+
+        Both schedulers first honor the ``slow_step`` fault point and
+        expire queued requests whose deadlines already passed."""
+        if self._faults is not None:
+            hit = self._faults.fire("slow_step")
+            if hit is not None:
+                time.sleep(float(hit.get("delay_s", 0.01)))
         if self.scheduler == "continuous":
             return self._step_continuous()
+        done: List[Request] = []
+        self._expire_queued(done)
         reqs = []
-        while self._queue and len(reqs) < self.B:
-            reqs.append(self._queue.popleft())
+        now = time.perf_counter()
+        while len(reqs) < self.B:
+            req = self._queue.pop(now)
+            if req is None:
+                break
+            err = self._never_fits(req)
+            if err is not None:
+                self._reject_never_fit(req, err, done)
+                continue
+            reqs.append(req)
         self._g_queue_depth.set(len(self._queue))
-        return self._wave(reqs) if reqs else []
+        return (self._wave(reqs) if reqs else []) + done
 
     @property
     def busy(self) -> bool:
         """True while any request is queued or occupies a slot (i.e.
         :meth:`step` still has work — the load generator's poll)."""
-        return bool(self._queue) or any(s is not None for s in self._slots)
+        return bool(len(self._queue)) or any(
+            s is not None for s in self._slots)
 
     def drain(self) -> List[Request]:
         """Step until the queue and every slot are empty; return all
@@ -720,28 +943,194 @@ class Engine:
         hits = np.flatnonzero(toks == self.eos_id)
         return toks[:hits[0] + 1] if hits.size else toks
 
-    def _finish(self, req: Request, toks) -> None:
+    def _finish(self, req: Request, toks,
+                state: RequestState = RequestState.FINISHED,
+                error: Optional[str] = None) -> None:
+        """Move ``req`` into terminal ``state`` with output ``toks``
+        (possibly partial for the failure states). Every terminal
+        transition funnels through here: it owns the terminal-state
+        counter, the latency histograms, and the lifecycle span, so the
+        counters sum to submitted requests at quiescence."""
         req.out = np.asarray(toks, np.int32)
+        req.state = state
+        if error is not None:
+            req.error = error
         req.t_done = time.time()
         req.m_done = time.perf_counter()
-        if not req.m_first:                  # wave / empty-budget path:
-            req.m_first = req.m_done         # tokens delivered at once
-            req.t_first = req.t_done
+        if not req.m_first and state is RequestState.FINISHED:
+            req.m_first = req.m_done         # wave / empty-budget path:
+            req.t_first = req.t_done         # tokens delivered at once
+        self._c_terminal[state].inc()
         self._c_useful.inc(max(len(req.out) - 1, 0))
         if req.m_submit:
             self._h_latency.observe(req.m_done - req.m_submit)
-            self._h_ttft.observe(req.m_first - req.m_submit)
-        if len(req.out) > 1 and req.m_done > req.m_first:
+            if req.m_first:
+                # no first token (expired in queue, failed prefill):
+                # nothing to observe — a zero would fake a great TTFT
+                self._h_ttft.observe(req.m_first - req.m_submit)
+        if len(req.out) > 1 and req.m_done > req.m_first > 0:
             self._h_tpot.observe((req.m_done - req.m_first)
                                  / (len(req.out) - 1))
         if self.tracer is not None and req.trace_track is not None:
-            if req.m_done > req.m_first:
+            if req.m_first and req.m_done > req.m_first:
                 self.tracer.complete("decode", req.m_first, req.m_done,
                                      track=req.trace_track, cat="request")
             self.tracer.complete("request", req.m_submit or req.m_done,
                                  req.m_done, track=req.trace_track,
                                  cat="request", tokens=len(req.out),
-                                 prompt=len(req.prompt))
+                                 prompt=len(req.prompt),
+                                 state=state.value,
+                                 **({"error": req.error}
+                                    if req.error else {}))
+        self._by_id.pop(req.request_id, None)
+
+    # ------------------------------------------------------------------
+    # Lifecycle policy: deadlines, never-fit rejection, preemption
+    # ------------------------------------------------------------------
+
+    def _never_fits(self, req: Request) -> Optional[str]:
+        """Reason this request can NEVER be served (even by evicting
+        every cached page), or None. Checked once at admission pop —
+        requeueing such a request would block the head of the queue
+        forever (the pre-lifecycle engine's failure mode)."""
+        s = len(req.prompt)
+        if self.scheduler == "continuous" and self.kv_layout == "paged":
+            if s + req.max_new > self.max_len:
+                return (f"prompt {s} + max_new {req.max_new} > max_len "
+                        f"{self.max_len}")
+            pages = -(-(s + req.max_new) // self.page_size)
+            if pages > self._alloc.capacity:
+                return (f"needs {pages} pages but the pool holds only "
+                        f"{self._alloc.capacity} even after evicting "
+                        f"every cached page")
+            return None
+        sb = self._bucket_len(s, req.max_new)
+        if sb + req.max_new > self.max_len:
+            return (f"prompt {s} (bucketed {sb}) + max_new {req.max_new}"
+                    f" > max_len {self.max_len}")
+        return None
+
+    def _reject_never_fit(self, req: Request, err: str,
+                          done: List[Request]) -> None:
+        self._c_never_fit.inc()
+        self._finish(req, req._gen, state=RequestState.FAILED,
+                     error=f"request can never fit the KV pool: {err} — "
+                           f"raise max_len/n_pages or lower max_new")
+        done.append(req)
+
+    def _deadline_reason(self, req: Request, now: float,
+                         where: str) -> Optional[str]:
+        """Which deadline (if any) ``req`` has blown at ``now``."""
+        if not req.m_submit:
+            return None
+        waited_ms = (now - req.m_submit) * 1e3
+        if req.deadline_ms is not None and waited_ms >= req.deadline_ms:
+            return (f"end-to-end deadline {req.deadline_ms:g}ms exceeded "
+                    f"{where} ({waited_ms:.0f}ms elapsed)")
+        if (req.ttft_deadline_ms is not None and not req.m_first
+                and waited_ms >= req.ttft_deadline_ms):
+            return (f"TTFT deadline {req.ttft_deadline_ms:g}ms exceeded "
+                    f"{where} ({waited_ms:.0f}ms elapsed)")
+        return None
+
+    def _timeout(self, req: Request, reason: str,
+                 done: List[Request]) -> None:
+        if self.tracer is not None and req.trace_track is not None:
+            self.tracer.instant("timeout", track=req.trace_track,
+                                cat="request", reason=reason)
+        self._finish(req, req._gen, state=RequestState.TIMED_OUT,
+                     error=reason)
+        done.append(req)
+
+    def _expire_queued(self, done: List[Request]) -> None:
+        """Time out queued requests whose TTFT / end-to-end deadline
+        already passed — they would waste prefill work and then time out
+        anyway. The queue drops the now-terminal entries lazily."""
+        now = time.perf_counter()
+        for req in list(self._queue):
+            reason = self._deadline_reason(req, now, "while queued")
+            if reason is not None:
+                self._timeout(req, reason, done)
+
+    def _expire_running(self, done: List[Request], paged: bool) -> None:
+        """Time out running requests (end-to-end deadline only — a
+        running request has its first token by definition). Called
+        between decode bursts; ``policy.deadline_burst_cap`` bounds how
+        stale this check can get."""
+        now = time.perf_counter()
+        for i in range(self.B):
+            sl = self._slots[i]
+            if sl is None:
+                continue
+            reason = self._deadline_reason(sl.req, now, "while decoding")
+            if reason is not None:
+                self._slots[i] = None
+                if paged:
+                    self._release_paged(i)
+                self._timeout(sl.req, reason, done)
+
+    def _preempt(self, lane: int, done: List[Request],
+                 reason: str) -> None:
+        """Evict lane ``lane``: free the lane + deref its pages, then
+        requeue the request with backoff (tokens emitted so far are kept
+        in ``_gen``; re-admission re-prefills prompt+gen, cheap under
+        the prefix cache, and continues bit-identically). A request out
+        of retry budget lands in the terminal PREEMPTED state."""
+        sl = self._slots[lane]
+        req = sl.req
+        self._slots[lane] = None
+        if self.kv_layout == "paged":
+            self._release_paged(lane)
+        self._c_preempt.inc()
+        req.preemptions += 1
+        req.retries += 1
+        if self.tracer is not None and req.trace_track is not None:
+            self.tracer.instant("preempt", track=req.trace_track,
+                                cat="request", lane=lane, reason=reason,
+                                retry=req.retries)
+        if req.retries > self.policy.max_retries:
+            self._finish(
+                req, req._gen, state=RequestState.PREEMPTED,
+                error=f"preempted {req.preemptions}x ({reason}); retry "
+                      f"budget {self.policy.max_retries} exhausted")
+            done.append(req)
+            return
+        req.state = RequestState.QUEUED
+        req.not_before = (time.perf_counter()
+                          + self.policy.backoff_s(req.retries))
+        self._queue.push_front(req)
+
+    def _victim_lanes(self):
+        return ((i, s.req) for i, s in enumerate(self._slots)
+                if s is not None)
+
+    def _maybe_preempt_priority(self, done: List[Request]) -> None:
+        """Priority-inversion trigger: every lane is busy and a
+        strictly higher-priority request waits — evict the worst lane
+        (at most one per step; admission picks up the freed lane this
+        same step)."""
+        if not self.policy.preemption:
+            return
+        if any(s is None for s in self._slots):
+            return
+        head = self._queue.peek(time.perf_counter())
+        if head is None:
+            return
+        lane = pick_victim(self._victim_lanes(),
+                           max_priority=head.priority)
+        if lane is not None:
+            self._preempt(lane, done, "priority")
+
+    @staticmethod
+    def _effective_prompt(req: Request) -> np.ndarray:
+        """What (re-)admission prefills: the prompt plus every token
+        already emitted before a preemption. Greedy sampling makes the
+        resumed continuation bit-identical to the uninterrupted run."""
+        prompt = np.asarray(req.prompt, np.int32)
+        if not req._gen:
+            return prompt
+        return np.concatenate(
+            [prompt, np.asarray(req._gen, np.int32)])
 
     def _cache_dtype(self):
         emb = self.params.get("embed") if isinstance(self.params, dict) \
@@ -766,31 +1155,57 @@ class Engine:
 
         self._count_compile("prefill", (B, S))
         self._count_decode_compile(B, "scalar")
+        for r in reqs:
+            r.state = RequestState.RUNNING
         with self._span("wave", batch=B, prompt_len=S, max_new=max_new):
             with self._span("prefill", batch=B, prompt_len=S):
                 last_logits, cache = self._prefill(self.params,
                                                    jnp.asarray(toks))
                 nxt = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
+                ok = jnp.isfinite(last_logits).all(axis=-1)
             # accumulate sampled tokens on device; one host transfer at
             # the end (a per-step np.asarray would sync the dispatch
             # pipeline every decode step)
             toks_dev = [nxt]
+            oks_dev = [ok]
             pos = S
             with self._span("decode_loop", steps=max(max_new - 1, 0)):
                 for _ in range(max_new - 1):
-                    nxt, cache = self._decode(self.params, cache, nxt,
-                                              jnp.int32(pos))
+                    poison = -1
+                    if self._faults is not None:
+                        hit = self._faults.fire("nan_logits")
+                        if hit is not None:
+                            poison = int(hit.get("lane", 0))
+                    nxt, ok, cache = self._decode(self.params, cache, nxt,
+                                                  jnp.int32(pos),
+                                                  jnp.int32(poison))
                     toks_dev.append(nxt)
+                    oks_dev.append(ok)
                     pos += 1
             with self._span("host_sync", tokens=B * max_new):
                 host = np.asarray(jnp.stack(toks_dev, axis=1))
+                okh = np.asarray(jnp.stack(oks_dev, axis=1))
         t1 = time.time()
         self._c_admitted.inc(B)
         self._c_decode_steps.inc(max(max_new - 1, 0))  # max_new=0: none
         self._c_slot_steps.inc(B * max(max_new - 1, 0))
         for i, r in enumerate(reqs):
-            out = self._trim_eos(host[i, :r.max_new].astype(np.int32))
-            self._finish(r, out)
+            bad = np.flatnonzero(~okh[i, :r.max_new])
+            if bad.size:
+                # the guard fails only this lane: its output stops just
+                # before the first poisoned step, neighbors are untouched
+                out = self._trim_eos(host[i, :bad[0]].astype(np.int32))
+                self._c_nan.inc()
+                if self.tracer is not None and r.trace_track is not None:
+                    self.tracer.instant("nan_guard", track=r.trace_track,
+                                        cat="request", lane=i,
+                                        step=int(bad[0]))
+                self._finish(r, out, state=RequestState.FAILED,
+                             error=f"non-finite logits in lane {i} at "
+                                   f"wave step {int(bad[0])}")
+            else:
+                out = self._trim_eos(host[i, :r.max_new].astype(np.int32))
+                self._finish(r, out)
             r.t_submit, r.t_done = t0, t1
             if r.on_token is not None:
                 for t in out:
@@ -827,17 +1242,23 @@ class Engine:
         the final piece right-pads to the chunk width and passes the index
         of the last real token, so every prompt length reuses the single
         compiled chunk step. Pad writes land at cache positions beyond
-        the prompt where they stay masked until decode overwrites them."""
-        s = len(req.prompt)
+        the prompt where they stay masked until decode overwrites them.
+
+        A preempted request re-admits with its emitted tokens appended
+        to the prompt (``_effective_prompt``) and the remaining budget;
+        greedy decode then continues bit-identically."""
+        prompt = self._effective_prompt(req)
+        s = len(prompt)
+        max_new = req.max_new - len(req._gen)
         C = self.cfg.attn_chunk
-        sb = self._bucket_len(s, req.max_new)
-        if sb + req.max_new > self.max_len:
+        sb = self._bucket_len(s, max_new)
+        if sb + max_new > self.max_len:
             raise ValueError(
                 f"request does not fit the KV pool: prompt {s} (bucketed "
-                f"{sb}) + max_new {req.max_new} > max_len {self.max_len}")
+                f"{sb}) + max_new {max_new} > max_len {self.max_len}")
         n_chunks = -(-sb // C)
         buf = np.zeros(n_chunks * C, np.int32)
-        buf[sb - s:sb] = req.prompt
+        buf[sb - s:sb] = prompt
         self._count_compile("prefill_chunk", (1, C))
         logits = None
         for ci in range(n_chunks):
@@ -851,8 +1272,9 @@ class Engine:
         with self._span("merge", slot=slot):
             self._cache = self._merge(self._cache, self._slot_cache,
                                       jnp.int32(slot))
-        tok = int(np.asarray(jnp.argmax(logits, axis=-1))[0])
-        return sb, tok
+        row = np.asarray(logits)[0]
+        tok = int(row.argmax())
+        return sb, tok, bool(np.isfinite(row).all())
 
     def _emit(self, req: Request, tok: int) -> None:
         if req.on_token is not None:
@@ -914,16 +1336,22 @@ class Engine:
 
         Prompts are placed unpadded at position 0 (no bucketing): page
         content is position-dependent (RoPE), so identical placement is
-        what makes equal prefixes shareable."""
-        s = len(req.prompt)
+        what makes equal prefixes shareable.
+
+        A preempted request re-admits with prompt+emitted tokens
+        (``_effective_prompt``): its original prompt's registered pages
+        are prefix-cache hits, so the retry re-prefills only the tail."""
+        prompt = self._effective_prompt(req)
+        s = len(prompt)
+        max_new = req.max_new - len(req._gen)
         C = self.cfg.attn_chunk
         P = self.page_size
-        if s + req.max_new > self.max_len:
+        if s + max_new > self.max_len:
             raise ValueError(
                 f"request does not fit the KV pool: prompt {s} + "
-                f"max_new {req.max_new} > max_len {self.max_len}")
-        n_req_pages = -(-(s + req.max_new) // P)
-        hashes = self._page_hashes(req.prompt)
+                f"max_new {max_new} > max_len {self.max_len}")
+        n_req_pages = -(-(s + max_new) // P)
+        hashes = self._page_hashes(prompt)
         matched: List[int] = []
         for h in hashes:
             p = self._alloc.lookup(h)
@@ -939,13 +1367,18 @@ class Engine:
             self._alloc.incref(p)
         if cow_src is not None:
             self._alloc.incref(cow_src)     # pin across alloc + copy
-        fresh = self._alloc.alloc(n_req_pages - m_full)
+        forced = (self._faults is not None and
+                  self._faults.fire("alloc_exhausted",
+                                    need=n_req_pages - m_full) is not None)
+        fresh = (None if forced
+                 else self._alloc.alloc(n_req_pages - m_full))
         if fresh is None:
             for p in matched[:m_full]:
                 self._alloc.decref(p)
             if cow_src is not None:
                 self._alloc.decref(cow_src)
-            if not any(sl is not None for sl in self._slots):
+            if (not forced
+                    and not any(sl is not None for sl in self._slots)):
                 raise ValueError(
                     f"KV page pool exhausted with no requests in "
                     f"flight: request needs {n_req_pages - m_full} "
@@ -969,7 +1402,7 @@ class Engine:
 
         n_chunks = -(-(s - resume) // C)
         buf = np.zeros(n_chunks * C, np.int32)
-        buf[:s - resume] = req.prompt[resume:]
+        buf[:s - resume] = prompt[resume:]
         self._count_compile("prefill_chunk", ("paged", 1, C))
         logits = None
         for ci in range(n_chunks):
@@ -984,13 +1417,16 @@ class Engine:
         for j in range(s // P):
             self._alloc.register(hashes[j], pages[j])
         self._slot_pages[slot] = pages
-        tok = int(np.asarray(jnp.argmax(logits, axis=-1))[0])
-        return s, tok
+        row = np.asarray(logits)[0]
+        tok = int(row.argmax())
+        return s, tok, bool(np.isfinite(row).all())
 
     def _admit_one(self, i: int, req: Request, paged: bool):
         """Admit ``req`` into lane ``i`` with lifecycle telemetry.
-        Returns the (sb, tok) admission result, or None on paged
-        backpressure (nothing was recorded for the request)."""
+        Returns the (sb, tok, ok) admission result, or None on paged
+        backpressure (nothing was recorded for the request). TTFT /
+        queue-wait are observed only on the *first* admission — a
+        preempted request's retry is not a new first token."""
         t_a0 = time.perf_counter()
         with self._span("admit", slot=i, prompt=len(req.prompt),
                         req=req.trace_track or ""):
@@ -1001,19 +1437,25 @@ class Engine:
             else:
                 res = self._admit(i, req)
         self._c_admitted.inc()
-        req.m_first = time.perf_counter()
-        req.t_first = time.time()
-        if req.m_submit:
-            self._h_queue_wait.observe(t_a0 - req.m_submit)
-        if self.tracer is not None and req.trace_track is not None:
+        req.state = RequestState.RUNNING
+        first = not req.m_first
+        t_a1 = time.perf_counter()
+        ok = res[2]
+        if first and ok:
+            req.m_first = t_a1
+            req.t_first = time.time()
             if req.m_submit:
+                self._h_queue_wait.observe(t_a0 - req.m_submit)
+        if self.tracer is not None and req.trace_track is not None:
+            if req.m_submit and first:
                 self.tracer.complete("queued", req.m_submit, t_a0,
                                      track=req.trace_track, cat="request")
-            self.tracer.complete("prefill", t_a0, req.m_first,
+            self.tracer.complete("prefill", t_a0, t_a1,
                                  track=req.trace_track, cat="request",
-                                 prompt=len(req.prompt))
-            self.tracer.instant("first_token", track=req.trace_track,
-                                cat="request")
+                                 prompt=len(req.prompt), resumed=not first)
+            if first and ok:
+                self.tracer.instant("first_token", track=req.trace_track,
+                                    cat="request")
         return res
 
     def _step_continuous(self) -> List[Request]:
@@ -1025,39 +1467,95 @@ class Engine:
         if paged:
             self._sync_alloc_metrics()
         self._g_queue_depth.set(len(self._queue))
+        if not done and not any(s is not None for s in self._slots):
+            # nothing ran and nothing finished: every queued request is
+            # in a backoff hold — sleep toward the nearest release so
+            # drain() doesn't spin the host
+            d = self._queue.next_eligible_delay(time.perf_counter())
+            if d:
+                time.sleep(min(d, 0.02))
         return done
 
     def _step_continuous_inner(self, paged: bool,
                                done: List[Request]) -> List[Request]:
+        # --- lifecycle pre-pass: forced eviction fault, queued-deadline
+        # expiry, then the priority-inversion preemption trigger ---
+        if (self._faults is not None and paged
+                and self._faults.fire("evict_cache") is not None):
+            n = self._alloc.flush_cache()
+            if self.tracer is not None:
+                self.tracer.instant("fault:evict_cache", cat="fault",
+                                    evicted=n)
+        self._expire_queued(done)
+        self._maybe_preempt_priority(done)
+
         blocked = False
         # --- admission: fill free lanes from the queue (ring order) ---
         for off in range(self.B):
             i = (self._admit_cursor + off) % self.B
             if self._slots[i] is not None:
                 continue
-            while self._queue:
-                req = self._queue.popleft()
-                if req.max_new <= 0:
+            while True:
+                req = self._queue.pop(time.perf_counter())
+                if req is None:
+                    break
+                err = self._never_fits(req)
+                if err is not None:
+                    self._reject_never_fit(req, err, done)
+                    continue
+                if req.max_new - len(req._gen) <= 0:
                     self._c_admitted.inc()
-                    self._finish(req, [])
+                    self._finish(req, req._gen)
                     done.append(req)
                     continue
                 res = self._admit_one(i, req, paged)
+                while res is None and self.policy.preemption:
+                    # page pressure: evict a strictly lower-priority
+                    # running request and retry this admission — its
+                    # freed pages (plus cache evictions) cover us
+                    lane = pick_victim(self._victim_lanes(),
+                                       max_priority=req.priority)
+                    if lane is None:
+                        break
+                    self._preempt(lane, done, "page pressure")
+                    res = self._admit_one(i, req, paged)
                 if res is None:
-                    # pool pressure: requeue at the front and stop
-                    # admitting — pages free up as lanes finish
-                    self._queue.appendleft(req)
+                    # pool pressure with nothing evictable: requeue at
+                    # the front and stop admitting — pages free up as
+                    # lanes finish
+                    self._queue.push_front(req)
                     blocked = True
                     break
-                sb, tok = res
+                sb, tok, ok = res
+                if not ok:
+                    # prefill produced non-finite logits: fail this
+                    # request alone, the lane stays free for the next
+                    self._c_nan.inc()
+                    if (self.tracer is not None
+                            and req.trace_track is not None):
+                        self.tracer.instant("nan_guard",
+                                            track=req.trace_track,
+                                            cat="request", lane=i,
+                                            step=-1)
+                    if paged:
+                        self._release_paged(i)
+                    self._finish(req, req._gen,
+                                 state=RequestState.FAILED,
+                                 error=f"non-finite logits at prefill "
+                                       f"(lane {i})")
+                    done.append(req)
+                    continue
+                req._gen.append(tok)
                 self._emit(req, tok)
-                if req.max_new == 1 or tok == self.eos_id:
-                    self._finish(req, [tok])   # lane freed the same step
+                if (req.max_new - len(req._gen) == 0
+                        or tok == self.eos_id):
+                    self._finish(req, req._gen)  # lane freed same step
                     done.append(req)
                     if paged:
                         self._release_paged(i)
                     continue
-                self._slots[i] = _Slot(req, [tok], sb, req.max_new - 1)
+                self._slots[i] = _Slot(req, req._gen, sb,
+                                       req.max_new - len(req._gen))
                 break
             if blocked:
                 break
@@ -1084,6 +1582,11 @@ class Engine:
         # next input token, so the pipeline is inherently serialized).
         burst = 1 if self.eos_id is not None else min(
             self._slots[i].remaining for i in live)
+        if any(self._slots[i].req.deadline_ms is not None for i in live):
+            # deadlines are only observable between bursts; cap the
+            # burst so enforcement granularity stays bounded (deadline-
+            # free traffic keeps the full burst and its single sync)
+            burst = min(burst, max(1, self.policy.deadline_burst_cap))
         cur = np.zeros(self.B, np.int32)
         pos = np.zeros(self.B, np.int32)
         for i in live:
@@ -1098,29 +1601,61 @@ class Engine:
         pos_d = self._commit(jnp.asarray(pos))
         tables_d = self._tables_committed() if paged else None
         toks_dev = []
+        oks_dev = []
         with self._span("decode_burst", steps=burst, lanes=len(live)):
             for _ in range(burst):
+                poison = -1
+                if self._faults is not None:
+                    hit = self._faults.fire("nan_logits")
+                    if hit is not None:
+                        poison = int(hit.get("lane", live[0]))
                 # spans time the *dispatch* (device work is async; the
                 # device wait shows up in host_sync below) — no per-step
                 # host sync is ever introduced by tracing
                 with self._span("decode_step", paged=paged):
                     if paged:
-                        cur_d, self._cache = self._decode_paged(
+                        cur_d, ok_d, self._cache = self._decode_paged(
                             self.params, self._cache, cur_d, pos_d,
-                            tables_d)
+                            tables_d, jnp.int32(poison))
                     else:
-                        cur_d, self._cache = self._decode(
-                            self.params, self._cache, cur_d, pos_d)
+                        cur_d, ok_d, self._cache = self._decode(
+                            self.params, self._cache, cur_d, pos_d,
+                            jnp.int32(poison))
                 toks_dev.append(cur_d)
+                oks_dev.append(ok_d)
                 pos_d = pos_d + 1
                 self._c_decode_steps.inc()
                 self._c_slot_steps.inc(self.B)
             with self._span("host_sync", steps=burst):
                 host = np.asarray(jnp.stack(toks_dev, axis=1))  # 1 sync
+                okh = np.asarray(jnp.stack(oks_dev, axis=1))
         for step in range(burst):
             for i in live:
                 sl = self._slots[i]
                 if sl is None:
+                    continue
+                if not okh[i, step]:
+                    # per-lane failure isolation: only the poisoned
+                    # lane's request fails; its private cache rows are
+                    # garbage now but nothing shared was written (decode
+                    # writes land past the registered prefix pages) and
+                    # the lane's next admission overwrites them
+                    req = sl.req
+                    self._c_nan.inc()
+                    if (self.tracer is not None
+                            and req.trace_track is not None):
+                        self.tracer.instant("nan_guard",
+                                            track=req.trace_track,
+                                            cat="request", lane=i,
+                                            step=step)
+                    self._slots[i] = None
+                    if paged:
+                        self._release_paged(i)
+                    self._finish(req, sl.toks,
+                                 state=RequestState.FAILED,
+                                 error=f"non-finite logits in lane {i} "
+                                       f"at decode position {sl.pos}")
+                    done.append(req)
                     continue
                 tok = int(host[i, step])
                 sl.toks.append(tok)
@@ -1133,6 +1668,7 @@ class Engine:
                     self._slots[i] = None
                     if paged:
                         self._release_paged(i)
+        self._expire_running(done, paged)
         return done
 
     # ------------------------------------------------------------------
@@ -1200,7 +1736,18 @@ class Engine:
         ``prefill_chunk_steps`` counts chunked-prefill invocations under
         both layouts — with prefix hits it drops below the no-sharing
         chunk count, which is how tests prove a shared prefix is
-        prefilled exactly once."""
+        prefilled exactly once.
+
+        Lifecycle keys (``docs/robustness.md``): ``submitted`` —
+        requests accepted by submit(); ``terminal`` — dict of terminal-
+        state counts (finished/cancelled/timed_out/failed/preempted;
+        sums to ``submitted`` at quiescence); ``preemptions`` — lane
+        evictions (each either requeued or terminal-PREEMPTED);
+        ``nan_guard_trips`` — requests failed by the non-finite-logit
+        guard; ``rejected_never_fit`` — admissions rejected because
+        prompt+budget can never fit. All cumulative (not windowed) —
+        ``admitted`` counts every admission *including* preemption
+        retries, so ``admitted >= submitted`` under preemption."""
         cum = self._counter_values()
         util = (cum["useful_decode_tokens"] / cum["slot_steps"]
                 if cum["slot_steps"] else 0.0)
@@ -1233,6 +1780,12 @@ class Engine:
                                    else 0),
                 "ttft_p50": ttft["p50"], "ttft_p99": ttft["p99"],
                 "tpot_p50": tpot["p50"], "tpot_p99": tpot["p99"],
+                "submitted": int(self._c_submitted.value),
+                "terminal": {s.value: int(c.value)
+                             for s, c in self._c_terminal.items()},
+                "preemptions": int(self._c_preempt.value),
+                "nan_guard_trips": int(self._c_nan.value),
+                "rejected_never_fit": int(self._c_never_fit.value),
                 "window": window,
                 "cumulative_compiles": compiles}
 

@@ -1,0 +1,201 @@
+"""Request-lifecycle policy layer for the serving engine.
+
+The engine (``repro.serving.engine``) executes requests; this module
+decides *which* request runs and *when one must stop*:
+
+* :class:`RequestState` — the lifecycle state machine. Every submitted
+  request ends in exactly one terminal state (``docs/robustness.md`` has
+  the full diagram):
+
+  .. code-block:: text
+
+      QUEUED ──admit──▶ RUNNING ──▶ FINISHED      (EOS / budget)
+        │  ▲               │ ├────▶ CANCELLED     (Engine.cancel)
+        │  └──requeue──────┤ ├────▶ TIMED_OUT     (deadline)
+        │   (retry+backoff)│ └────▶ FAILED        (NaN guard / never fits)
+        ├──▶ CANCELLED     └────▶ PREEMPTED       (retry budget exhausted)
+        └──▶ TIMED_OUT
+
+* :class:`SchedulingPolicy` — the knobs: default TTFT / end-to-end
+  deadlines, the preemption switch, the retry budget and backoff for
+  preempted requests, and how often a decode burst is interrupted to
+  check running deadlines.
+
+* :class:`RequestQueue` — the admission queue: strict priority order
+  (higher ``Request.priority`` first), FIFO within a priority level,
+  re-admissions (preempted requests) ahead of their peers, and
+  *backoff holds* — a requeued request is invisible to :meth:`pop`
+  until its ``not_before`` stamp passes, so a preemption storm cannot
+  thrash the same pages every step. Cancelled / expired entries are
+  dropped lazily (the engine flips ``Request.state``; the queue skips
+  anything no longer ``QUEUED``).
+
+* :func:`pick_victim` — the preemption choice: among running requests
+  below the admission's priority, evict the one with the least progress
+  (fewest emitted tokens — cheapest to re-prefill, especially with the
+  paged prefix cache), ties broken by lane for determinism.
+
+Everything here is host-side, deterministic, and engine-agnostic — the
+chaos tests drive it directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import heapq
+import itertools
+import math
+from typing import Iterable, List, Optional, Tuple
+
+__all__ = ["RequestState", "TERMINAL_STATES", "SchedulingPolicy",
+           "RequestQueue", "pick_victim"]
+
+
+class RequestState(enum.Enum):
+    """Lifecycle states. ``value`` doubles as the metrics label."""
+
+    QUEUED = "queued"
+    RUNNING = "running"
+    FINISHED = "finished"        # budget exhausted / EOS — the good end
+    CANCELLED = "cancelled"      # client called Engine.cancel()
+    TIMED_OUT = "timed_out"      # TTFT or end-to-end deadline exceeded
+    FAILED = "failed"            # non-finite logits / can never fit
+    PREEMPTED = "preempted"      # evicted and out of retry budget
+
+    @property
+    def terminal(self) -> bool:
+        return self in TERMINAL_STATES
+
+
+TERMINAL_STATES = frozenset({
+    RequestState.FINISHED, RequestState.CANCELLED, RequestState.TIMED_OUT,
+    RequestState.FAILED, RequestState.PREEMPTED})
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulingPolicy:
+    """Engine-wide lifecycle policy (``Engine(policy=...)``).
+
+    ``deadline_ms`` / ``ttft_deadline_ms`` are *defaults* applied at
+    :meth:`Engine.submit` to requests that do not carry their own; None
+    means no deadline. The TTFT deadline runs from submit until the
+    first token is sampled (it can only expire while queued / during
+    prefill admission); the end-to-end deadline runs submit → done and
+    is also checked between decode bursts.
+
+    ``preemption`` gates both preemption triggers (pool exhaustion and
+    priority inversion). A preempted request is requeued with
+    exponential backoff (``backoff_base_s * 2**(retries-1)``) at most
+    ``max_retries`` times; the next eviction lands it in the terminal
+    ``PREEMPTED`` state. Retries are *cheap*, not free: re-prefill reuses
+    cached prefix pages under the paged layout.
+
+    ``deadline_burst_cap`` bounds how many decode steps the continuous
+    scheduler dispatches back-to-back while any running request carries
+    a deadline — deadlines are only observable between bursts, so the
+    cap is the enforcement granularity (in steps). Deadline-free traffic
+    keeps the unbounded burst (one host sync per lane completion)."""
+
+    deadline_ms: Optional[float] = None
+    ttft_deadline_ms: Optional[float] = None
+    preemption: bool = True
+    max_retries: int = 3
+    backoff_base_s: float = 0.02
+    deadline_burst_cap: int = 4
+
+    def backoff_s(self, retries: int) -> float:
+        """Hold time before a request's ``retries``-th re-admission."""
+        return self.backoff_base_s * (2.0 ** max(retries - 1, 0))
+
+
+class RequestQueue:
+    """Priority admission queue with lazy removal and backoff holds.
+
+    Orders by (priority desc, arrival seq asc). ``push_front`` re-admits
+    ahead of same-priority peers (requeued work resumes before new work
+    — no head-of-line *re*-blocking after a backpressure requeue).
+    Entries whose request left the QUEUED state (cancelled, expired) are
+    skipped and dropped on pop. ``pop(now)`` never returns a request
+    whose ``not_before`` is in the future — those stay queued and
+    :meth:`next_eligible_delay` says how long until one frees up."""
+
+    def __init__(self):
+        self._heap: List[Tuple[float, int, object]] = []
+        self._seq = itertools.count()
+        self._front_seq = itertools.count(-1, -1)
+
+    def push(self, req, front: bool = False) -> None:
+        seq = next(self._front_seq if front else self._seq)
+        heapq.heappush(self._heap, (-float(req.priority), seq, req))
+
+    def push_front(self, req) -> None:
+        self.push(req, front=True)
+
+    def _live(self, req) -> bool:
+        return req.state == RequestState.QUEUED
+
+    def pop(self, now: float):
+        """Highest-priority eligible request, or None (empty queue or
+        every live entry is in a backoff hold)."""
+        held = []
+        out = None
+        while self._heap:
+            item = heapq.heappop(self._heap)
+            req = item[2]
+            if not self._live(req):
+                continue                      # lazy drop
+            if getattr(req, "not_before", 0.0) > now:
+                held.append(item)
+                continue
+            out = req
+            break
+        for item in held:
+            heapq.heappush(self._heap, item)
+        return out
+
+    def peek(self, now: float):
+        """Like :meth:`pop` but leaves the request queued."""
+        req = self.pop(now)
+        if req is not None:
+            self.push_front(req)
+        return req
+
+    def next_eligible_delay(self, now: float) -> Optional[float]:
+        """Seconds until the nearest backoff hold expires (0.0 if an
+        entry is already eligible), or None when the queue is empty."""
+        best = None
+        for _, _, req in self._heap:
+            if not self._live(req):
+                continue
+            d = max(getattr(req, "not_before", 0.0) - now, 0.0)
+            best = d if best is None else min(best, d)
+        return best
+
+    def __len__(self) -> int:
+        return sum(1 for _, _, r in self._heap if self._live(r))
+
+    def __iter__(self):
+        """Live queued requests (arbitrary order — expiry scans)."""
+        return (r for _, _, r in self._heap if self._live(r))
+
+
+def pick_victim(candidates: Iterable[Tuple[int, object]],
+                max_priority: float = math.inf) -> Optional[int]:
+    """Choose the lane to preempt from ``(lane, request)`` pairs.
+
+    Only requests with ``priority < max_priority`` are evictable (strict
+    — equal-priority work is never preempted, which is what makes the
+    policy livelock-free: a preemptor can never itself be preempted by
+    the request it displaced). Among evictable lanes, pick the lowest
+    priority; break ties by least progress (fewest emitted tokens =
+    least re-prefill work thrown away), then lowest lane id. Returns the
+    lane, or None when nothing is evictable."""
+    best = None
+    best_key = None
+    for lane, req in candidates:
+        if req.priority >= max_priority:
+            continue
+        key = (req.priority, len(getattr(req, "_gen", ()) or ()), lane)
+        if best_key is None or key < best_key:
+            best, best_key = lane, key
+    return best

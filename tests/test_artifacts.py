@@ -186,6 +186,40 @@ def test_tamper_detection_manifest(dense_artifact, tmp_path):
         load_artifact(art)
 
 
+def test_truncated_weights_raise_descriptive_error(dense_artifact,
+                                                   tmp_path):
+    """A truncated tensor file must surface as one descriptive
+    IntegrityError naming the file and the cure — not as a zipfile
+    traceback from deep inside numpy's unpacking."""
+    import shutil
+    from repro.serving.faults import corrupt_file
+    _, _, _, src = dense_artifact
+    art = tmp_path / "truncated"
+    shutil.copytree(src, art)
+    info = corrupt_file(art / WEIGHTS_FILE, mode="truncate", seed=1,
+                        within=art)
+    assert info["mode"] == "truncate"
+    with pytest.raises(IntegrityError, match="corrupt or truncated"):
+        load_artifact(art)
+    with pytest.raises(IntegrityError, match="re-export"):
+        load_artifact(art, verify=False)    # zip damage beats no-verify
+
+
+def test_flipped_bytes_raise_descriptive_error(dense_artifact, tmp_path):
+    """Seeded byte flips (the fault injector's corruption hook) are
+    caught either by the zip layer or by sha256 verification — always
+    as a descriptive IntegrityError."""
+    import shutil
+    from repro.serving.faults import corrupt_file
+    _, _, _, src = dense_artifact
+    art = tmp_path / "flipped"
+    shutil.copytree(src, art)
+    corrupt_file(art / WEIGHTS_FILE, mode="flip", nbytes=4, seed=2,
+                 within=art)
+    with pytest.raises(IntegrityError, match="corrupt|hash mismatch"):
+        load_artifact(art)
+
+
 def test_load_rejects_wrong_schema(dense_artifact, tmp_path):
     import shutil
     _, _, _, src = dense_artifact

@@ -1,0 +1,614 @@
+"""Fault-tolerant request lifecycle + deterministic chaos harness.
+
+Covers the policy layer (states, queue, victim selection), the seeded
+FaultInjector, BlockAllocator invariants under randomized chaos, and the
+engine's failure paths end to end: deadlines, cancellation, preemption
+with bit-identical resume, per-lane NaN isolation, and full quiescence
+under a mixed seeded fault plan (docs/robustness.md)."""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig
+from repro.core.quantize import QuantMode
+from repro.models import api
+from repro.serving.engine import BlockAllocator, Engine, Request
+from repro.serving.faults import FaultInjector, corrupt_file
+from repro.serving.policy import (RequestQueue, RequestState,
+                                  SchedulingPolicy, TERMINAL_STATES,
+                                  pick_victim)
+
+
+def _cfg(**kw):
+    base = dict(name="tiny", family="dense", n_layers=2, d_model=64,
+                n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=128,
+                attn_chunk=16)
+    base.update(kw)
+    return ArchConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = _cfg()
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    return params, cfg
+
+
+def _requests(cfg, lens, news, seed=0, **kw):
+    rng = np.random.default_rng(seed)
+    return [Request(prompt=rng.integers(0, cfg.vocab_size, s)
+                    .astype(np.int32), max_new=n, **kw)
+            for s, n in zip(lens, news)]
+
+
+# ---------------------------------------------------------------------------
+# FaultInjector: scripted, seeded, replayable
+# ---------------------------------------------------------------------------
+
+def test_injector_at_fires_exactly_once():
+    fi = FaultInjector()
+    fi.inject("p", at=2, lane=1)
+    hits = [fi.fire("p") for _ in range(6)]
+    assert [h is not None for h in hits] == [False, False, True,
+                                             False, False, False]
+    assert hits[2] == {"lane": 1}
+    assert fi.fired("p") == 1 and fi.calls("p") == 6
+
+
+def test_injector_at_with_times_fires_consecutively():
+    fi = FaultInjector()
+    fi.inject("p", at=1, times=3)
+    hits = [fi.fire("p") is not None for _ in range(6)]
+    assert hits == [False, True, True, True, False, False]
+
+
+def test_injector_every_and_times():
+    fi = FaultInjector()
+    fi.inject("p", every=3, times=2)
+    hits = [fi.fire("p") is not None for _ in range(9)]
+    # fires on the 3rd and 6th invocation, then the cap stops it
+    assert hits == [False, False, True, False, False, True,
+                    False, False, False]
+
+
+def test_injector_prob_is_seed_deterministic():
+    def run(seed):
+        fi = FaultInjector(seed=seed)
+        fi.inject("p", prob=0.5)
+        return [fi.fire("p") is not None for _ in range(32)]
+
+    a, b = run(7), run(7)
+    assert a == b                       # same seed -> same firing pattern
+    assert run(8) != a                  # and the seed matters
+    assert 1 <= sum(a) <= 31            # a real coin, not a constant
+
+
+def test_injector_context_merges_under_payload():
+    fi = FaultInjector()
+    fi.inject("p", delay_s=0.5)
+    hit = fi.fire("p", delay_s=0.1, step=4)
+    assert hit == {"delay_s": 0.5, "step": 4}   # payload wins, context rides
+    assert fi.summary()["fired"]["p"] == 1
+    assert fi.log == [("p", 0, {"delay_s": 0.5, "step": 4})]
+
+
+def test_injector_rejects_conflicting_triggers():
+    with pytest.raises(ValueError, match="at most one"):
+        FaultInjector().inject("p", at=1, every=2)
+
+
+def test_corrupt_file_flip_and_truncate(tmp_path):
+    f = tmp_path / "blob.bin"
+    payload = bytes(range(256)) * 8
+    f.write_bytes(payload)
+    info = corrupt_file(f, mode="flip", offset=100, nbytes=2,
+                        within=tmp_path)
+    assert info["mode"] == "flip" and info["offset"] == 100
+    got = f.read_bytes()
+    assert got[100] == payload[100] ^ 0xFF and got[99] == payload[99]
+
+    f.write_bytes(payload)
+    info = corrupt_file(f, mode="truncate", offset=64, within=tmp_path)
+    assert f.stat().st_size == 64 and info["size"] == 64
+
+    # same seed -> same damage (replayable chaos)
+    f.write_bytes(payload)
+    a = corrupt_file(f, seed=3, within=tmp_path)
+    f.write_bytes(payload)
+    b = corrupt_file(f, seed=3, within=tmp_path)
+    assert a == b
+
+
+def test_corrupt_file_refuses_outside_within(tmp_path):
+    inside = tmp_path / "sub"
+    inside.mkdir()
+    f = tmp_path / "precious.bin"
+    f.write_bytes(b"x" * 64)
+    with pytest.raises(ValueError, match="refusing"):
+        corrupt_file(f, within=inside)
+    assert f.read_bytes() == b"x" * 64
+
+
+# ---------------------------------------------------------------------------
+# Policy layer: queue ordering, backoff holds, victim selection
+# ---------------------------------------------------------------------------
+
+def _qreq(priority=0, not_before=0.0):
+    r = Request(prompt=np.zeros(4, np.int32), max_new=4,
+                priority=priority)
+    r.state = RequestState.QUEUED
+    r.not_before = not_before
+    return r
+
+
+def test_queue_priority_then_fifo():
+    q = RequestQueue()
+    lo1, lo2, hi = _qreq(0), _qreq(0), _qreq(5)
+    for r in (lo1, lo2, hi):
+        q.push(r)
+    assert q.pop(0.0) is hi
+    assert q.pop(0.0) is lo1            # FIFO within a priority level
+    assert q.pop(0.0) is lo2
+    assert q.pop(0.0) is None
+
+
+def test_queue_push_front_beats_same_priority_peers():
+    q = RequestQueue()
+    a, b, c = _qreq(), _qreq(), _qreq()
+    q.push(a)
+    q.push(b)
+    q.push_front(c)                     # a requeued/preempted request
+    assert q.pop(0.0) is c
+
+
+def test_queue_drops_non_queued_lazily():
+    q = RequestQueue()
+    a, b = _qreq(), _qreq()
+    q.push(a)
+    q.push(b)
+    a.state = RequestState.CANCELLED
+    assert len(q) == 1
+    assert q.pop(0.0) is b
+
+
+def test_queue_backoff_hold_and_delay():
+    q = RequestQueue()
+    held = _qreq(priority=9, not_before=100.0)
+    ready = _qreq(priority=0)
+    q.push(held)
+    q.push(ready)
+    assert q.pop(50.0) is ready          # high-pri entry is held, skip it
+    assert q.pop(50.0) is None
+    assert q.next_eligible_delay(50.0) == pytest.approx(50.0)
+    assert q.pop(100.5) is held          # hold expired
+    assert q.next_eligible_delay(0.0) is None
+
+
+def test_queue_peek_preserves_order():
+    q = RequestQueue()
+    a = _qreq(priority=2)
+    q.push(a)
+    assert q.peek(0.0) is a
+    assert len(q) == 1 and q.pop(0.0) is a
+
+
+def test_pick_victim_strictness_and_tiebreaks():
+    def slot(pri, gen_n):
+        r = _qreq(priority=pri)
+        r._gen = list(range(gen_n))
+        return r
+
+    lanes = [(0, slot(1, 5)), (1, slot(0, 7)), (2, slot(0, 3))]
+    # lowest priority first, then least progress
+    assert pick_victim(lanes) == 2
+    # strict <: nothing below priority 0 -> no victim (livelock-free)
+    assert pick_victim(lanes, max_priority=0) is None
+    assert pick_victim(lanes, max_priority=1) == 2
+    assert pick_victim([]) is None
+
+
+def test_policy_backoff_schedule():
+    p = SchedulingPolicy(backoff_base_s=0.01)
+    assert p.backoff_s(1) == pytest.approx(0.01)
+    assert p.backoff_s(3) == pytest.approx(0.04)
+    assert RequestState.FINISHED.terminal
+    assert not RequestState.RUNNING.terminal
+    assert len(TERMINAL_STATES) == 5
+
+
+# ---------------------------------------------------------------------------
+# BlockAllocator invariants under randomized chaos (property-style)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_allocator_invariants_under_chaos(seed):
+    """Seeded interleaving of alloc/incref/decref/register/lookup/
+    flush_cache: the free/cached/referenced partition must hold after
+    every single operation, refcounts return to zero, and nothing
+    leaks."""
+    rng = np.random.default_rng(seed)
+    alloc = BlockAllocator(n_pages=17, page_size=32, reserved=1)
+    held = []                           # [(page, extra_refs)]
+    next_hash = [0]
+
+    def op_alloc():
+        n = int(rng.integers(1, 4))
+        pages = alloc.alloc(n)
+        if pages is not None:
+            held.extend((p, 0) for p in pages)
+
+    def op_release():
+        if not held:
+            return
+        i = int(rng.integers(len(held)))
+        p, extra = held.pop(i)
+        for _ in range(extra + 1):
+            alloc.decref(p)
+
+    def op_incref():
+        if not held:
+            return
+        i = int(rng.integers(len(held)))
+        p, extra = held[i]
+        alloc.incref(p)
+        held[i] = (p, extra + 1)
+
+    def op_register():
+        if not held:
+            return
+        p, _ = held[int(rng.integers(len(held)))]
+        alloc.register(f"h{next_hash[0]}", p)
+        next_hash[0] += 1
+
+    def op_lookup():
+        if next_hash[0]:
+            alloc.lookup(f"h{int(rng.integers(next_hash[0]))}")
+
+    def op_flush():
+        alloc.flush_cache()
+
+    ops = [op_alloc, op_alloc, op_release, op_release, op_incref,
+           op_register, op_lookup, op_flush]
+    for _ in range(400):
+        ops[int(rng.integers(len(ops)))]()
+        acct = alloc.check()            # raises on any violation
+        assert (acct["in_use"] + acct["free"] + acct["cached"]
+                == alloc.capacity)
+
+    # drain: return every ref; no page may leak
+    while held:
+        p, extra = held.pop()
+        for _ in range(extra + 1):
+            alloc.decref(p)
+    acct = alloc.check()
+    assert acct["in_use"] == 0
+    assert acct["free"] + acct["cached"] == alloc.capacity
+    alloc.flush_cache()
+    assert alloc.free == alloc.capacity
+
+
+def test_allocator_check_catches_corruption():
+    alloc = BlockAllocator(n_pages=4, page_size=32, reserved=1)
+    alloc.check()
+    pages = alloc.alloc(2)
+    alloc.check()
+    alloc._free.append(pages[0])        # simulate a double-free bug
+    with pytest.raises(AssertionError, match="two states"):
+        alloc.check()
+
+
+# ---------------------------------------------------------------------------
+# Engine lifecycle: cancellation
+# ---------------------------------------------------------------------------
+
+def test_cancel_queued_and_running(tiny):
+    params, cfg = tiny
+    eng = Engine(params, cfg, QuantMode.off(), batch_size=1, max_len=64,
+                 scheduler="continuous")
+    running, queued = _requests(cfg, [12, 12], [16, 8], seed=1)
+    # a (far-future) deadline caps the decode burst, so one step() leaves
+    # the request mid-flight — that's the state cancel() must handle
+    running.deadline_ms = 1e7
+    eng.submit(running)
+    eng.submit(queued)
+    eng.step()                          # admits `running`; `queued` waits
+    assert running.state is RequestState.RUNNING
+    assert eng.cancel(queued.request_id)
+    assert queued.state is RequestState.CANCELLED
+    assert queued.error == "cancelled by client"
+    assert len(queued.out) == 0
+
+    assert eng.cancel(running.request_id)
+    assert running.state is RequestState.CANCELLED
+    assert 0 < len(running.out) < running.max_new   # partial tokens kept
+    assert not eng.busy                 # lane freed mid-flight
+    assert not eng.cancel(running.request_id)       # idempotent
+    assert not eng.cancel("no-such-id")
+    st = eng.stats()
+    assert st["terminal"]["cancelled"] == 2
+    assert st["submitted"] == 2
+
+
+def test_cancel_running_paged_derefs_pages(tiny):
+    params, cfg = tiny
+    eng = Engine(params, cfg, QuantMode.off(), batch_size=2, max_len=64,
+                 scheduler="continuous", kv_layout="paged", page_size=32)
+    req = _requests(cfg, [20], [16], seed=2, deadline_ms=1e7)[0]
+    eng.submit(req)                     # deadline caps the burst: the
+    eng.step()                          # request is mid-flight after one step
+    assert eng._alloc.in_use > 0
+    assert eng.cancel(req.request_id)
+    assert eng._alloc.in_use == 0       # pages deref'd mid-flight
+    eng._alloc.check()
+
+
+# ---------------------------------------------------------------------------
+# Engine lifecycle: deadlines
+# ---------------------------------------------------------------------------
+
+def test_queued_deadline_expires_without_prefill(tiny):
+    params, cfg = tiny
+    eng = Engine(params, cfg, QuantMode.off(), batch_size=1, max_len=64,
+                 scheduler="continuous")
+    ok_req, doomed = _requests(cfg, [12, 12], [4, 4], seed=3)
+    doomed.ttft_deadline_ms = 0.0       # expired the moment it queues
+    eng.submit(ok_req)
+    eng.submit(doomed)
+    done = eng.drain()
+    assert set(done) == {ok_req, doomed}
+    assert doomed.state is RequestState.TIMED_OUT
+    assert "TTFT deadline" in doomed.error and "queued" in doomed.error
+    assert len(doomed.out) == 0
+    assert ok_req.state is RequestState.FINISHED
+    st = eng.stats()
+    assert st["terminal"]["timed_out"] == 1
+    assert st["terminal"]["finished"] == 1
+    # no first token -> no TTFT sample (a zero would fake a great p99)
+    assert eng.metrics.get("serving_ttft_seconds").count == 1
+
+
+def test_running_deadline_times_out_mid_decode(tiny):
+    params, cfg = tiny
+    fi = FaultInjector().inject("slow_step", every=1, delay_s=0.03)
+    eng = Engine(params, cfg, QuantMode.off(), batch_size=1, max_len=128,
+                 scheduler="continuous", faults=fi,
+                 policy=SchedulingPolicy(deadline_burst_cap=2))
+    # admit under a far-future deadline (caps bursts at 2, so the
+    # request is mid-flight after one step), then tighten it to one
+    # that has already elapsed — robust to arbitrary host load, unlike
+    # racing a real small deadline against jit/scheduler latency
+    req = _requests(cfg, [12], [96], seed=4, deadline_ms=1e7)[0]
+    eng.submit(req)
+    eng.step()
+    assert req.state is RequestState.RUNNING and len(req._gen) > 0
+    req.deadline_ms = 0.1
+    done = eng.drain()
+    assert done == [req]
+    assert req.state is RequestState.TIMED_OUT
+    assert "end-to-end deadline" in req.error
+    assert 0 < len(req.out) < req.max_new       # partial output delivered
+    assert fi.fired("slow_step") >= 1
+
+
+def test_policy_default_deadline_applies_at_submit(tiny):
+    params, cfg = tiny
+    eng = Engine(params, cfg, QuantMode.off(), batch_size=1, max_len=64,
+                 scheduler="continuous",
+                 policy=SchedulingPolicy(deadline_ms=0.0))
+    explicit, defaulted = _requests(cfg, [8, 8], [4, 4], seed=5)
+    explicit.deadline_ms = 10_000.0     # own deadline survives the policy
+    eng.submit(explicit)
+    eng.submit(defaulted)
+    eng.drain()
+    assert explicit.state is RequestState.FINISHED
+    assert defaulted.state is RequestState.TIMED_OUT
+    assert defaulted.deadline_ms == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Engine lifecycle: NaN/Inf guard isolates the poisoned lane
+# ---------------------------------------------------------------------------
+
+def test_nan_guard_isolates_lane_continuous(tiny):
+    params, cfg = tiny
+    lens, news = [12, 17], [8, 8]
+    clean = Engine(params, cfg, QuantMode.off(), batch_size=2, max_len=64,
+                   scheduler="continuous")
+    ref = clean.generate(_requests(cfg, lens, news, seed=6))
+
+    fi = FaultInjector().inject("nan_logits", at=2, lane=1)
+    eng = Engine(params, cfg, QuantMode.off(), batch_size=2, max_len=64,
+                 scheduler="continuous", faults=fi)
+    reqs = _requests(cfg, lens, news, seed=6)
+    eng.generate(reqs)
+    victim, neighbor = reqs[1], reqs[0]
+    assert victim.state is RequestState.FAILED
+    assert "non-finite logits" in victim.error
+    assert len(victim.out) < victim.max_new
+    # its already-emitted tokens are the fault-free prefix
+    np.testing.assert_array_equal(victim.out,
+                                  ref[1].out[:len(victim.out)])
+    # the neighbor lane is bit-identical to the fault-free run
+    assert neighbor.state is RequestState.FINISHED
+    np.testing.assert_array_equal(neighbor.out, ref[0].out)
+    assert eng.stats()["nan_guard_trips"] == 1
+
+
+def test_nan_guard_isolates_lane_wave(tiny):
+    params, cfg = tiny
+    lens, news = [12, 17], [8, 8]
+    clean = Engine(params, cfg, QuantMode.off(), batch_size=2, max_len=64)
+    ref = clean.generate(_requests(cfg, lens, news, seed=6))
+
+    fi = FaultInjector().inject("nan_logits", at=2, lane=0)
+    eng = Engine(params, cfg, QuantMode.off(), batch_size=2, max_len=64,
+                 faults=fi)
+    reqs = _requests(cfg, lens, news, seed=6)
+    eng.generate(reqs)
+    victim, neighbor = reqs[0], reqs[1]
+    assert victim.state is RequestState.FAILED
+    assert len(victim.out) == 3         # prefill tok + 2 clean steps
+    np.testing.assert_array_equal(victim.out, ref[0].out[:3])
+    assert neighbor.state is RequestState.FINISHED
+    np.testing.assert_array_equal(neighbor.out, ref[1].out)
+
+
+# ---------------------------------------------------------------------------
+# Engine lifecycle: preemption + bit-identical resume
+# ---------------------------------------------------------------------------
+
+def test_preemption_resumes_bit_identically(tiny):
+    """Pool fits one request: a higher-priority arrival preempts the
+    running low-priority request (pages deref'd, requeued with backoff);
+    both finish and the preempted request's output is bit-identical to
+    an uninterrupted run — greedy resume over prompt+emitted tokens."""
+    params, cfg = tiny
+
+    def mk():
+        # lo's far-future deadline caps its decode bursts, so it is
+        # still mid-flight when hi arrives (tokens are unaffected)
+        lo = _requests(cfg, [40], [10], seed=7, priority=0,
+                       deadline_ms=1e7)[0]
+        hi = _requests(cfg, [38], [8], seed=8, priority=5)[0]
+        return lo, hi
+
+    # fault-free reference: each runs alone
+    solo = Engine(params, cfg, QuantMode.off(), batch_size=2, max_len=64,
+                  scheduler="continuous", kv_layout="paged", page_size=32,
+                  n_pages=3)
+    lo_ref, hi_ref = mk()
+    solo.generate([lo_ref])
+    solo.generate([hi_ref])
+
+    eng = Engine(params, cfg, QuantMode.off(), batch_size=2, max_len=64,
+                 scheduler="continuous", kv_layout="paged", page_size=32,
+                 n_pages=3,
+                 policy=SchedulingPolicy(backoff_base_s=0.001))
+    lo, hi = mk()
+    eng.submit(lo)
+    eng.step()                          # lo admitted, takes both pages
+    assert lo.state is RequestState.RUNNING
+    eng.submit(hi)
+    eng.drain()
+    assert hi.state is RequestState.FINISHED
+    assert lo.state is RequestState.FINISHED
+    assert lo.preemptions >= 1
+    assert eng.stats()["preemptions"] >= 1
+    np.testing.assert_array_equal(lo.out, lo_ref.out)
+    np.testing.assert_array_equal(hi.out, hi_ref.out)
+    assert eng._alloc.in_use == 0
+    eng._alloc.check()
+
+
+def test_preemption_retry_budget_exhausts_to_terminal(tiny):
+    params, cfg = tiny
+    eng = Engine(params, cfg, QuantMode.off(), batch_size=2, max_len=64,
+                 scheduler="continuous", kv_layout="paged", page_size=32,
+                 n_pages=3,
+                 policy=SchedulingPolicy(max_retries=0))
+    lo = _requests(cfg, [40], [10], seed=7, priority=0,
+                   deadline_ms=1e7)[0]
+    hi = _requests(cfg, [38], [8], seed=8, priority=5)[0]
+    eng.submit(lo)
+    eng.step()
+    eng.submit(hi)
+    eng.drain()
+    assert hi.state is RequestState.FINISHED
+    assert lo.state is RequestState.PREEMPTED   # out of retry budget
+    assert "retry budget" in lo.error
+    assert len(lo.out) >= 1             # partial tokens delivered
+    st = eng.stats()
+    assert st["terminal"]["preempted"] == 1
+    assert eng._alloc.in_use == 0
+
+
+def test_equal_priority_never_preempts(tiny):
+    """Strictly-lower-priority victims only: same-priority contention
+    falls back to backpressure (the pre-lifecycle behavior), which is
+    what makes preemption livelock-free."""
+    params, cfg = tiny
+    eng = Engine(params, cfg, QuantMode.off(), batch_size=2, max_len=64,
+                 scheduler="continuous", kv_layout="paged", page_size=32,
+                 n_pages=3)
+    reqs = _requests(cfg, [40, 38], [8, 8], seed=9)
+    eng.generate(reqs)
+    assert [r.state for r in reqs] == [RequestState.FINISHED] * 2
+    assert eng.stats()["preemptions"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Full chaos scenario: seeded faults -> quiescence, nothing leaks
+# ---------------------------------------------------------------------------
+
+def test_chaos_scenario_reaches_quiescence(tiny):
+    """Mixed seeded fault plan (forced exhaustion, forced cache flush,
+    NaN lane, slow steps) over mixed-priority traffic with a cancel, a
+    zero-deadline request, and a never-fit request: the engine reaches
+    quiescence with every request terminal, terminal counters summing
+    to submitted, and zero leaked pages."""
+    params, cfg = tiny
+    fi = (FaultInjector(seed=0)
+          .inject("alloc_exhausted", at=1, times=2)
+          .inject("evict_cache", at=2)
+          .inject("nan_logits", at=5, lane=0)
+          .inject("slow_step", every=4, delay_s=0.001))
+    eng = Engine(params, cfg, QuantMode.off(), batch_size=2, max_len=64,
+                 scheduler="continuous", kv_layout="paged", page_size=32,
+                 n_pages=5,
+                 policy=SchedulingPolicy(backoff_base_s=0.001),
+                 faults=fi)
+    reqs = _requests(cfg, [20, 40, 12, 33, 8], [6, 10, 4, 8, 5], seed=10,
+                     deadline_ms=1e7)   # far-future: caps bursts only
+    for pri, r in zip([0, 0, 3, 1, 0], reqs):
+        r.priority = pri
+    reqs.append(Request(prompt=np.zeros(60, np.int32), max_new=40))  # never fits
+    doomed = _requests(cfg, [10], [4], seed=11, deadline_ms=0.0)[0]
+    reqs.append(doomed)
+    for r in reqs:
+        eng.submit(r)
+    steps = 0
+    while not any(r.state is RequestState.RUNNING for r in reqs):
+        eng.step()
+        steps += 1
+        assert steps < 50, "nothing ever ran"
+    victim = next(r for r in reqs if r.state is RequestState.RUNNING)
+    assert eng.cancel(victim.request_id)
+
+    steps = 0
+    while eng.busy:
+        eng.step()
+        steps += 1
+        assert steps < 500, "chaos scenario failed to reach quiescence"
+        eng._alloc.check()              # invariants hold mid-flight too
+
+    assert all(r.state in TERMINAL_STATES for r in reqs)
+    st = eng.stats()
+    assert st["submitted"] == len(reqs)
+    assert sum(st["terminal"].values()) == st["submitted"]
+    assert st["terminal"]["cancelled"] == 1
+    assert st["terminal"]["timed_out"] == 1
+    assert st["terminal"]["failed"] >= 1        # never-fit (+ maybe NaN)
+    assert st["blocks_in_use"] == 0             # zero leaked pages
+    acct = eng._alloc.check()
+    assert acct["in_use"] == 0
+    assert fi.fired("alloc_exhausted") == 2
+    assert fi.fired("evict_cache") == 1
+    # the plan is replayable: the summary records every firing
+    assert [e["point"] for e in fi.summary()["log"]].count(
+        "alloc_exhausted") == 2
+
+
+def test_wave_never_fit_is_terminal_failed(tiny):
+    params, cfg = tiny
+    eng = Engine(params, cfg, QuantMode.off(), batch_size=2, max_len=32)
+    big = Request(prompt=np.zeros(30, np.int32), max_new=40)
+    ok_req = _requests(cfg, [8], [4], seed=12)[0]
+    eng.submit(big)
+    eng.submit(ok_req)
+    done = eng.drain()
+    assert set(done) == {big, ok_req}
+    assert big.state is RequestState.FAILED
+    assert "never fit" in big.error
+    assert ok_req.state is RequestState.FINISHED

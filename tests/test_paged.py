@@ -286,13 +286,19 @@ def test_paged_page_size_validation():
 
 
 def test_paged_rejects_oversized_request():
+    from repro.serving.policy import RequestState
     cfg = _cfg()
     params = api.init(jax.random.PRNGKey(0), cfg)
     eng = Engine(params, cfg, QuantMode.off(), batch_size=2, max_len=64,
                  scheduler="continuous", kv_layout="paged", page_size=32)
-    eng.submit(Request(prompt=np.zeros(60, np.int32), max_new=8))
-    with pytest.raises(ValueError, match="does not fit"):
-        eng.drain()
+    req = eng.submit(Request(prompt=np.zeros(60, np.int32), max_new=8))
+    done = eng.drain()
+    assert done == [req]
+    assert req.state is RequestState.FAILED
+    assert "never fit" in req.error
+    # rejection happened before any page was touched
+    assert eng._alloc.in_use == 0
+    eng._alloc.check()
 
 
 # ---------------------------------------------------------------------------

@@ -238,8 +238,10 @@ def test_bucket_len_edge_cases():
 
 
 def test_continuous_rejects_oversized_request():
-    """A request that cannot fit prompt + budget in the KV pool must fail
-    loudly at admission, not silently corrupt the cache."""
+    """A request that cannot fit prompt + budget in the KV pool lands in
+    a descriptive terminal FAILED state at admission — it must neither
+    corrupt the cache nor requeue forever (head-of-line blocking)."""
+    from repro.serving.policy import RequestState
     cfg = _cfg(attn_chunk=16)
     params = api.init(jax.random.PRNGKey(0), cfg)
     eng = Engine(params, cfg, QuantMode.off(), batch_size=1, max_len=32,
@@ -247,8 +249,16 @@ def test_continuous_rejects_oversized_request():
     rng = np.random.default_rng(0)
     big = Request(prompt=rng.integers(0, 128, 30).astype(np.int32),
                   max_new=40)
-    with pytest.raises(ValueError, match="does not fit"):
-        eng.generate([big])
+    small = Request(prompt=rng.integers(0, 128, 8).astype(np.int32),
+                    max_new=4)
+    eng.generate([big, small])
+    assert big.state is RequestState.FAILED
+    assert "never fit" in big.error and "max_len" in big.error
+    assert big.out is not None and len(big.out) == 0
+    # the doomed request must not block the one behind it
+    assert small.state is RequestState.FINISHED
+    assert len(small.out) == 4
+    assert eng.stats()["rejected_never_fit"] == 1
 
 
 def test_continuous_zero_budget_request():
