@@ -15,6 +15,10 @@ continuous-batching scheduler (chunked prefill, per-slot decode positions
 — see docs/serving.md) and demonstrates the streaming submission API:
 requests are submitted one by one and tokens stream back per step via
 ``Request.on_token`` while other requests are still decoding.
+
+--temperature/--top-k/--top-p sample instead of greedy argmax (seeded,
+replayable); --spec-k K adds self-drafting speculative decoding on the
+continuous scheduler — same tokens, fewer forwards (docs/sampling.md).
 """
 import argparse
 
@@ -28,7 +32,8 @@ from repro.kernels import ops
 from repro.models import api
 from repro.obs import MetricsRegistry, Tracer
 from repro.serving.engine import Engine, Request
-from repro.serving.policy import SchedulingPolicy
+from repro.serving.policy import SchedulingPolicy, SpecConfig
+from repro.serving.sampling import SamplingParams
 
 
 def main():
@@ -66,6 +71,19 @@ def main():
     ap.add_argument("--no-preemption", dest="preemption",
                     action="store_false", default=True,
                     help="disable priority preemption under pool pressure")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature; 0 = greedy argmax "
+                         "(docs/sampling.md)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k logit filter (0 = off)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus (top-p) logit filter")
+    ap.add_argument("--sample-seed", type=int, default=0,
+                    help="base RNG seed; request i samples with seed+i")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding draft length (0 = off; "
+                         "forces --scheduler continuous; outputs "
+                         "unchanged — docs/sampling.md)")
     ap.add_argument("--trace", default="", metavar="OUT.json",
                     help="export a Chrome trace of the run — open in "
                          "https://ui.perfetto.dev "
@@ -74,12 +92,18 @@ def main():
                     help="instrument kernel dispatches and print the "
                          "Prometheus metrics snapshot at exit")
     args = ap.parse_args()
-    if args.kv_layout == "paged":
-        args.scheduler = "continuous"  # paged serving is continuous-only
+    if args.kv_layout == "paged" or args.spec_k > 0:
+        args.scheduler = "continuous"  # paged / spec are continuous-only
     args.policy = SchedulingPolicy(deadline_ms=args.deadline_ms,
                                    ttft_deadline_ms=args.ttft_deadline_ms,
                                    preemption=args.preemption,
                                    max_retries=args.max_retries)
+    args.spec = SpecConfig(k=args.spec_k) if args.spec_k > 0 else None
+    args.sampling = (SamplingParams(temperature=args.temperature,
+                                    top_k=args.top_k, top_p=args.top_p,
+                                    seed=args.sample_seed)
+                     if (args.temperature > 0 or args.top_k > 0
+                         or args.top_p < 1.0) else None)
 
     tracer = Tracer() if args.trace else None
     metrics = MetricsRegistry() if args.metrics else None
@@ -93,7 +117,7 @@ def main():
                                    kv_cache=args.kv_cache,
                                    kv_layout=args.kv_layout,
                                    metrics=metrics, tracer=tracer,
-                                   policy=args.policy)
+                                   policy=args.policy, spec=args.spec)
         cfg = eng.cfg
         print(f"serving artifact {args.artifact} "
               f"({'eager' if args.eager else 'packed-lazy'} weights, "
@@ -125,7 +149,7 @@ def main():
     eng = Engine(params, cfg, qm, batch_size=args.batch, max_len=128,
                  scheduler=args.scheduler, kv_cache=args.kv_cache,
                  kv_layout=args.kv_layout, metrics=metrics, tracer=tracer,
-                 policy=args.policy)
+                 policy=args.policy, spec=args.spec)
     _run(eng, cfg, args)
 
 
@@ -140,7 +164,12 @@ def _run(eng, cfg, args):
     reqs = [Request(prompt=np.concatenate(
                 [sys_prompt, rng.integers(0, cfg.vocab_size, 8 + 5 * i)
                  .astype(np.int32)]),
-                    max_new=max(4, args.new - 3 * i))
+                    max_new=max(4, args.new - 3 * i),
+                    sampling=(None if args.sampling is None else
+                              SamplingParams(
+                                  temperature=args.temperature,
+                                  top_k=args.top_k, top_p=args.top_p,
+                                  seed=args.sample_seed + i)))
             for i in range(args.batch * 2)]
 
     if eng.scheduler == "continuous":
@@ -176,9 +205,13 @@ def _run(eng, cfg, args):
     if any(v for k, v in st["terminal"].items() if k != "finished"):
         print("terminal states: " + ", ".join(
             f"{k}={v}" for k, v in st["terminal"].items() if v))
+    if args.spec is not None:
+        print(f"speculative decoding: {st['spec_proposed_tokens']} "
+              f"drafted, {st['spec_accepted_tokens']} accepted "
+              f"(acceptance {st['spec_acceptance']:.2f})")
 
     stats = eng.throughput(n_requests=args.batch, prompt_len=16,
-                           max_new=args.new)
+                           max_new=args.new, sampling=args.sampling)
     src = (f"artifact {args.artifact}" if args.artifact
            else f"{args.quant}{' + LATMiX' if args.latmix else ''}")
     print(f"\nthroughput: {stats['tok_per_s']:.1f} tok/s ({src}, "

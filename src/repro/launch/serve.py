@@ -13,6 +13,12 @@ Scheduling: --scheduler wave (static batching, default) or continuous
 decode-step utilization is much higher on mixed-length traffic; see
 docs/serving.md).
 
+Sampling: --temperature / --top-k / --top-p switch decode from greedy
+argmax to seeded stochastic sampling (--sample-seed; reruns replay
+token-for-token). --spec-k K turns on self-drafting speculative
+decoding — prompt-lookup drafts up to K tokens per step, one batched
+verify forward scores them all; outputs are unchanged (docs/sampling.md).
+
 Observability: --trace OUT.json exports a Chrome trace of the run
 (request lifecycles + engine steps, open in Perfetto); --metrics
 instruments kernel dispatches and prints the Prometheus metrics
@@ -88,6 +94,26 @@ def main():
                     action="store_false", default=True,
                     help="disable evicting lower-priority running "
                          "requests under KV-pool pressure")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature; 0 = greedy argmax "
+                         "(docs/sampling.md)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="keep only the k highest-probability tokens "
+                         "(0 = no top-k filter)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling: keep the smallest prefix of "
+                         "tokens whose probability mass reaches p")
+    ap.add_argument("--sample-seed", type=int, default=0,
+                    help="base RNG seed; request i samples with seed+i, "
+                         "so reruns replay token-for-token")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding: draft up to K tokens per "
+                         "step via prompt-lookup and verify them in one "
+                         "batched forward (0 = off; continuous scheduler "
+                         "only; outputs unchanged — docs/sampling.md)")
+    ap.add_argument("--spec-ngram", type=int, default=3,
+                    help="longest context n-gram the prompt-lookup "
+                         "drafter matches (with --spec-k)")
     ap.add_argument("--trace", default="", metavar="OUT.json",
                     help="export a Chrome trace of the run — open in "
                          "https://ui.perfetto.dev "
@@ -96,6 +122,8 @@ def main():
                     help="instrument kernel dispatches and print the "
                          "Prometheus metrics snapshot at exit")
     args = ap.parse_args()
+    if args.spec_k > 0:
+        args.scheduler = "continuous"  # spec decoding is continuous-only
 
     import jax
     import jax.numpy as jnp
@@ -107,13 +135,21 @@ def main():
     from repro.models import api
     from repro.obs import MetricsRegistry, Tracer
     from repro.serving.engine import Engine
-    from repro.serving.policy import SchedulingPolicy
+    from repro.serving.policy import SchedulingPolicy, SpecConfig
+    from repro.serving.sampling import SamplingParams
     from repro.training import checkpoint as ckpt
 
     policy = SchedulingPolicy(deadline_ms=args.deadline_ms,
                               ttft_deadline_ms=args.ttft_deadline_ms,
                               preemption=args.preemption,
                               max_retries=args.max_retries)
+    sampling = (SamplingParams(temperature=args.temperature,
+                               top_k=args.top_k, top_p=args.top_p,
+                               seed=args.sample_seed)
+                if (args.temperature > 0 or args.top_k > 0
+                    or args.top_p < 1.0) else None)
+    spec = (SpecConfig(k=args.spec_k, ngram_max=args.spec_ngram)
+            if args.spec_k > 0 else None)
     tracer = Tracer() if args.trace else None
     metrics = MetricsRegistry() if args.metrics else None
     if metrics is not None:          # kernel-dispatch hooks (ops.py)
@@ -128,7 +164,7 @@ def main():
             eos_id=args.eos_id, kv_cache=args.kv_cache,
             kv_layout=args.kv_layout, page_size=args.page_size,
             n_pages=args.n_pages, metrics=metrics, tracer=tracer,
-            policy=policy)
+            policy=policy, spec=spec)
         print(f"loaded artifact {args.artifact} in {time.time()-t0:.1f}s "
               f"({'eager' if args.eager else 'packed-lazy'} weights, "
               f"backend={args.backend}, scheduler={args.scheduler}, "
@@ -136,7 +172,7 @@ def main():
               f"no re-quantization)")
         stats = eng.throughput(n_requests=args.requests,
                                prompt_len=args.prompt_len,
-                               max_new=args.max_new)
+                               max_new=args.max_new, sampling=sampling)
         print(f"served {stats['tokens']} tokens in {stats['seconds']:.2f}s "
               f"-> {stats['tok_per_s']:.1f} tok/s "
               f"({stats['prefill_compiles']} prefill compiles, "
@@ -180,10 +216,10 @@ def main():
                  eos_id=args.eos_id, kv_cache=args.kv_cache,
                  kv_layout=args.kv_layout, page_size=args.page_size,
                  n_pages=args.n_pages, metrics=metrics, tracer=tracer,
-                 policy=policy)
+                 policy=policy, spec=spec)
     stats = eng.throughput(n_requests=args.requests,
                            prompt_len=args.prompt_len,
-                           max_new=args.max_new)
+                           max_new=args.max_new, sampling=sampling)
     print(f"served {stats['tokens']} tokens in {stats['seconds']:.2f}s "
           f"-> {stats['tok_per_s']:.1f} tok/s "
           f"(scheduler={stats['scheduler']}, "
@@ -201,6 +237,11 @@ def _obs_finish(eng, args) -> None:
     Prometheus exposition of the engine's registry (which also carries
     the kernel-dispatch metrics when --metrics instrumented ops)."""
     if stats := eng.stats():
+        if args.spec_k > 0:
+            print(f"speculative decoding: "
+                  f"{stats['spec_proposed_tokens']} drafted, "
+                  f"{stats['spec_accepted_tokens']} accepted "
+                  f"(acceptance {stats['spec_acceptance']:.2f})")
         if stats.get("ttft_p50") is not None:
             print(f"latency: ttft p50={stats['ttft_p50']*1e3:.1f}ms "
                   f"p99={stats['ttft_p99']*1e3:.1f}ms"

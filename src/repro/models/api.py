@@ -115,6 +115,37 @@ def decode_paged(params, cfg: ArchConfig, cache, inputs, cur_len,
                             block_tables, qm)
 
 
+def verify(params, cfg: ArchConfig, cache, inputs, pos, n_valid,
+           qm: QuantMode = QuantMode.off()):
+    """Multi-token speculative verify step over the contiguous cache:
+    each lane scores its current token plus up to C - 1 draft tokens in
+    one forward, returning per-slot next-token logits (B, C, V).
+    KV-cache families (dense/moe) only — recurrent state advances one
+    token at a time and cannot rewind, so those families raise."""
+    mod = module_for(cfg)
+    if not hasattr(mod, "verify"):
+        raise ValueError(
+            f"family {cfg.family!r} has no multi-token verify step "
+            f"(recurrent state cannot rewind rejected drafts); serve it "
+            f"without speculative decoding")
+    return mod.verify(params, cfg, cache, inputs, pos, n_valid, qm)
+
+
+def verify_paged(params, cfg: ArchConfig, cache, inputs, pos, n_valid,
+                 block_tables, qm: QuantMode = QuantMode.off()):
+    """Multi-token speculative verify step over a paged KV pool (same
+    contract as :func:`verify`, rows resolved through block tables).
+    KV-cache families (dense/moe) only."""
+    mod = module_for(cfg)
+    if not hasattr(mod, "verify_paged"):
+        raise ValueError(
+            f"family {cfg.family!r} has no multi-token verify step "
+            f"(recurrent state cannot rewind rejected drafts); serve it "
+            f"without speculative decoding")
+    return mod.verify_paged(params, cfg, cache, inputs, pos, n_valid,
+                            block_tables, qm)
+
+
 def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.float32,
                kv_quant=None):
     """Allocate the decode cache. ``kv_quant`` stores attention KV as MX

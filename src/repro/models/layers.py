@@ -95,6 +95,49 @@ def kv_write_chunk_paged(pool: PagedKV, new: jnp.ndarray,
                    pool.fmt, pool.dtype)
 
 
+def kv_write_spec(cache, new: jnp.ndarray, rows: jnp.ndarray):
+    """Per-lane multi-token scatter for the speculative verify step:
+    lane b token j writes row ``rows[b, j]``; rows >= S drop (the masked
+    write of slots past a lane's draft count — ``mode='drop'`` because a
+    clamped index would corrupt a live row instead).
+    cache: (B, S, kv_dim) dense or PackedKV; new: (B, C, kv_dim) dense."""
+    bidx = jnp.arange(new.shape[0], dtype=jnp.int32)[:, None]
+    if isinstance(cache, PackedKV):
+        c, s = kv_encode(new, cache.fmt)
+        return PackedKV(cache.codes.at[bidx, rows].set(c, mode="drop"),
+                        cache.scales.at[bidx, rows].set(s, mode="drop"),
+                        cache.fmt, cache.dtype)
+    return cache.at[bidx, rows].set(new, mode="drop")
+
+
+def kv_write_spec_paged(pool: PagedKV, new: jnp.ndarray,
+                        block_tables: jnp.ndarray, pos: jnp.ndarray,
+                        n_valid: jnp.ndarray) -> PagedKV:
+    """Per-lane multi-token write through block tables: lane b token j
+    lands at logical position ``pos[b] + j`` when ``j < n_valid[b]``.
+    Invalid slots are dropped by forcing their page offset to P (out of
+    the page, ``mode='drop'``); their page *gather* index is clipped
+    instead, because gathers clamp rather than drop and an unclipped
+    ``t // P`` could read past a short lane's table row.
+    pool: PagedKV (N, P, ·); new: (B, C, D); pos/n_valid: (B,) i32."""
+    B, C = new.shape[0], new.shape[1]
+    P = pool.page_size
+    t = pos[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]   # (B, C)
+    valid = jnp.arange(C, dtype=jnp.int32)[None, :] < n_valid[:, None]
+    maxp = block_tables.shape[1]
+    pages = jnp.take_along_axis(
+        block_tables, jnp.clip(t // P, 0, maxp - 1), axis=1)     # (B, C)
+    offs = jnp.where(valid, t % P, P)
+    if pool.fmt == "none":
+        return PagedKV(pool.codes.at[pages, offs].set(
+            new.astype(pool.codes.dtype), mode="drop"), None, "none",
+            pool.dtype)
+    c, s = kv_encode(new, pool.fmt)
+    return PagedKV(pool.codes.at[pages, offs].set(c, mode="drop"),
+                   pool.scales.at[pages, offs].set(s, mode="drop"),
+                   pool.fmt, pool.dtype)
+
+
 def attention_paged(q: jnp.ndarray, k_pool: PagedKV, v_pool: PagedKV,
                     block_tables: jnp.ndarray, *, causal: bool,
                     q_pos: jnp.ndarray, window: int = 0,

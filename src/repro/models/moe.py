@@ -308,6 +308,53 @@ def decode(params, cfg: ArchConfig, cache, inputs, cur_len,
     return logits, {"k": ks, "v": vs}
 
 
+def verify(params, cfg: ArchConfig, cache, inputs, pos, n_valid,
+           qm: QuantMode = QuantMode.off()):
+    """Speculative verify step (see :func:`transformer.verify`)."""
+    x = jnp.take(params["embed"], inputs, axis=0)
+    x = pctx.shard(x.astype(cache["k"].dtype), "batch", None, None)
+    pv = jnp.asarray(pos, jnp.int32)
+    nv = jnp.asarray(n_valid, jnp.int32)
+
+    def body(xc, inp):
+        pl, ck, cv = inp
+        xc, ck, cv = dense.attn_sublayer_verify(xc, pl, cfg, qm, ck, cv,
+                                                pv, nv)
+        xc, _ = ffn_sublayer(xc, pl, cfg, qm)
+        return xc, (ck, cv)
+
+    x, (ks, vs) = scan_layers(body, x, (params["blocks"],
+                               cache["k"], cache["v"]), cfg.scan_layers)
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = dense.head_out(x, params, cfg, qm)
+    return logits, {"k": ks, "v": vs}
+
+
+def verify_paged(params, cfg: ArchConfig, cache, inputs, pos, n_valid,
+                 block_tables, qm: QuantMode = QuantMode.off()):
+    """Speculative verify step over a paged pool (see
+    :func:`transformer.verify_paged`)."""
+    x = jnp.take(params["embed"], inputs, axis=0)
+    x = pctx.shard(x.astype(jnp.dtype(cache["k"].dtype)),
+                   "batch", None, None)
+    pv = jnp.asarray(pos, jnp.int32)
+    nv = jnp.asarray(n_valid, jnp.int32)
+    bt = jnp.asarray(block_tables, jnp.int32)
+
+    def body(xc, inp):
+        pl, ck, cv = inp
+        xc, ck, cv = dense.attn_sublayer_verify_paged(
+            xc, pl, cfg, qm, ck, cv, bt, pv, nv)
+        xc, _ = ffn_sublayer(xc, pl, cfg, qm)
+        return xc, (ck, cv)
+
+    x, (ks, vs) = scan_layers(body, x, (params["blocks"],
+                               cache["k"], cache["v"]), cfg.scan_layers)
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = dense.head_out(x, params, cfg, qm)
+    return logits, {"k": ks, "v": vs}
+
+
 # ---------------------------------------------------------------------------
 # PTQ integration
 # ---------------------------------------------------------------------------

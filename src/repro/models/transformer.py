@@ -20,6 +20,7 @@ from repro.launch import pcontext as pctx
 from .layers import (apply_rope, attention, attention_paged, dense_init,
                      flash_attention, gated_mlp, kv_heads_view,
                      kv_write_chunk_paged, kv_write_rows, kv_write_slice,
+                     kv_write_spec, kv_write_spec_paged,
                      kv_write_token_paged, rms_norm, scan_layers, shard_kv)
 
 
@@ -220,6 +221,64 @@ def attn_sublayer_decode_paged(x, p, cfg: ArchConfig, qm: QuantMode,
                           q_pos=pos, kv_len=cl + 1, window=window,
                           chunk=cfg.attn_chunk, backend=qm.backend)
     out = out.reshape(B, 1, cfg.q_dim)
+    out = qlinear(out, p["wo"], p.get("bo"), qm, "attn_out")
+    return x + out, cache_k, cache_v
+
+
+def attn_sublayer_verify(x, p, cfg: ArchConfig, qm: QuantMode,
+                         cache_k, cache_v, pos, n_valid, window: int = 0):
+    """Multi-token verify attention for speculative decoding: each lane
+    carries C = K + 1 tokens — its current token plus K draft tokens —
+    written at per-lane positions ``pos[b] .. pos[b] + C - 1`` (slots at
+    or past ``n_valid[b]`` are dropped, not clamped) and attending with
+    per-row query positions against its own causal prefix.  The masked
+    key set of row j (keys 0..pos+j) equals what a sequential
+    :func:`attn_sublayer_decode` step at position pos+j would see, so the
+    verify step is value-identical per (lane, slot) to replaying the
+    drafts one decode step at a time."""
+    B, C = x.shape[0], x.shape[1]
+    S = cache_k.shape[1]
+    cl = jnp.asarray(pos).astype(jnp.int32)                  # (B,)
+    iota = jnp.arange(C, dtype=jnp.int32)[None, :]           # (1, C)
+    qpos = cl[:, None] + iota                                # (B, C)
+    q, k, v = _qkv(x, p, cfg, qm, qpos)
+    nv = jnp.asarray(n_valid).astype(jnp.int32)              # (B,)
+    rows = jnp.where(iota < nv[:, None], qpos, S)
+    cache_k = kv_write_spec(cache_k, k, rows)
+    cache_v = kv_write_spec(cache_v, v, rows)
+    cache_k = shard_kv(cache_k, "batch", None, "model")
+    cache_v = shard_kv(cache_v, "batch", None, "model")
+    out = attention(q,
+                    kv_heads_view(cache_k, cfg.n_kv_heads, cfg.head_dim),
+                    kv_heads_view(cache_v, cfg.n_kv_heads, cfg.head_dim),
+                    causal=True, q_pos=qpos, kv_len=cl + nv,
+                    window=window, chunk=cfg.attn_chunk,
+                    backend=qm.backend)
+    out = out.reshape(B, C, cfg.q_dim)
+    out = qlinear(out, p["wo"], p.get("bo"), qm, "attn_out")
+    return x + out, cache_k, cache_v
+
+
+def attn_sublayer_verify_paged(x, p, cfg: ArchConfig, qm: QuantMode,
+                               cache_k: PagedKV, cache_v: PagedKV,
+                               block_tables, pos, n_valid,
+                               window: int = 0):
+    """Paged form of :func:`attn_sublayer_verify`: the C tokens write
+    through the block tables (invalid slots dropped via an out-of-page
+    offset) and attention reads the pool via the gather + dense path
+    (the fused paged kernel is Sq == 1 only; the gather is
+    value-identical, see :func:`attention_paged`)."""
+    B, C = x.shape[0], x.shape[1]
+    cl = jnp.asarray(pos).astype(jnp.int32)                  # (B,)
+    nv = jnp.asarray(n_valid).astype(jnp.int32)              # (B,)
+    qpos = cl[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+    q, k, v = _qkv(x, p, cfg, qm, qpos)
+    cache_k = kv_write_spec_paged(cache_k, k, block_tables, cl, nv)
+    cache_v = kv_write_spec_paged(cache_v, v, block_tables, cl, nv)
+    out = attention_paged(q, cache_k, cache_v, block_tables, causal=True,
+                          q_pos=qpos, kv_len=cl + nv, window=window,
+                          chunk=cfg.attn_chunk, backend=qm.backend)
+    out = out.reshape(B, C, cfg.q_dim)
     out = qlinear(out, p["wo"], p.get("bo"), qm, "attn_out")
     return x + out, cache_k, cache_v
 
@@ -454,6 +513,66 @@ def decode(params, cfg: ArchConfig, cache, inputs, cur_len,
                                cache["k"], cache["v"]), cfg.scan_layers)
     x = rms_norm(x, params["ln_f"], cfg.norm_eps)
     logits = head_out(x[:, 0], params, cfg, qm)
+    return logits, {"k": ks, "v": vs}
+
+
+def verify(params, cfg: ArchConfig, cache, inputs, pos, n_valid,
+           qm: QuantMode = QuantMode.off()):
+    """Speculative verify step over the contiguous cache.
+
+    inputs: (B, C) int32 — each lane's current token followed by C - 1
+    draft tokens; pos: (B,) i32 per-lane write starts (the lane's next
+    cache row); n_valid: (B,) i32 real token counts per lane (1 + draft
+    count; 0 idles the lane — nothing is written).  Returns
+    (logits (B, C, V), cache): logits[:, j] is the next-token
+    distribution after input token j, value-identical to the logits a
+    sequential :func:`decode` replay of the same tokens would produce."""
+    x = jnp.take(params["embed"], inputs, axis=0)
+    x = pctx.shard(x.astype(cache["k"].dtype), "batch", None, None)
+    pv = jnp.asarray(pos, jnp.int32)
+    nv = jnp.asarray(n_valid, jnp.int32)
+
+    def body(xc, inp):
+        pl, ck, cv = inp
+        xc, ck, cv = attn_sublayer_verify(xc, pl, cfg, qm, ck, cv, pv, nv,
+                                          window=cfg.window)
+        xc = ffn_sublayer(xc, pl, cfg, qm)
+        return xc, (ck, cv)
+
+    x, (ks, vs) = scan_layers(body, x, (params["blocks"],
+                               cache["k"], cache["v"]), cfg.scan_layers)
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = head_out(x, params, cfg, qm)
+    return logits, {"k": ks, "v": vs}
+
+
+def verify_paged(params, cfg: ArchConfig, cache, inputs, pos, n_valid,
+                 block_tables, qm: QuantMode = QuantMode.off()):
+    """Speculative verify step over a paged pool — same contract as
+    :func:`verify` with the cache rows resolved through ``block_tables``
+    (B, maxp).  The engine preallocates every page a request can reach
+    at admission, so a rejected draft rolls back by rewinding the lane's
+    position only: the stale rows stay masked (causal + kv_len) until
+    the next verify step overwrites them in place."""
+    x = jnp.take(params["embed"], inputs, axis=0)
+    x = pctx.shard(x.astype(jnp.dtype(cache["k"].dtype)),
+                   "batch", None, None)
+    pv = jnp.asarray(pos, jnp.int32)
+    nv = jnp.asarray(n_valid, jnp.int32)
+    bt = jnp.asarray(block_tables, jnp.int32)
+
+    def body(xc, inp):
+        pl, ck, cv = inp
+        xc, ck, cv = attn_sublayer_verify_paged(xc, pl, cfg, qm, ck, cv,
+                                                bt, pv, nv,
+                                                window=cfg.window)
+        xc = ffn_sublayer(xc, pl, cfg, qm)
+        return xc, (ck, cv)
+
+    x, (ks, vs) = scan_layers(body, x, (params["blocks"],
+                               cache["k"], cache["v"]), cfg.scan_layers)
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = head_out(x, params, cfg, qm)
     return logits, {"k": ks, "v": vs}
 
 

@@ -25,8 +25,16 @@ Schedulers (``Engine(..., scheduler=...)``, see ``docs/serving.md``):
 
 Common posture:
   * cache allocated once at (B, max_len) rounded to the attention chunk,
-  * greedy (argmax) sampling; per-slot sampling state is (last token,
-    position, remaining budget),
+  * greedy (argmax) sampling by default; per-request temperature /
+    top-k / top-p with a replayable seed via ``Request.sampling``
+    (``docs/sampling.md``) — temperature 0 stays bit-identical to the
+    greedy closures. Per-slot sampling state is (last token, position,
+    remaining budget, emitted count = the RNG step index),
+  * optional self-drafting speculative decoding (``Engine(spec=...)``,
+    continuous scheduler): prompt-lookup drafts + one batched verify
+    step per engine step; rejected drafts roll back by rewinding lane
+    positions (paged rollback is a pointer rewind — pages were
+    preallocated at admission and stale rows stay masked),
   * optional ``eos_id`` — outputs stop at (and include) the first EOS,
   * per-request latency + decode-utilization accounting for the serving
     benchmark (``benchmarks/serving_bench.py``).
@@ -79,8 +87,10 @@ from repro.models import api
 from repro.obs import MetricsRegistry, Tracer
 from repro.serving.faults import FaultInjector
 from repro.serving.policy import (RequestQueue, RequestState,
-                                  SchedulingPolicy, TERMINAL_STATES,
-                                  pick_victim)
+                                  SchedulingPolicy, SpecConfig,
+                                  TERMINAL_STATES, pick_victim)
+from repro.serving.sampling import GREEDY, SamplingParams, propose_ngram
+from repro.serving import sampling
 
 SCHEDULERS = ("wave", "continuous")
 KV_LAYOUTS = ("contiguous", "paged")
@@ -309,6 +319,13 @@ class Request:                         # a handle, not a value
     retries: int = 0                    # re-admissions after preemption
     preemptions: int = 0                # times evicted from a lane
     not_before: float = 0.0             # backoff hold (perf_counter)
+    # sampling: None (or temperature<=0) decodes greedily, bit-identical
+    # to an engine without sampling at all. Otherwise temperature/top-k/
+    # top-p with a per-request seed: token i is drawn from
+    # PRNGKey(seed) folded with its emission index, so a run is
+    # replayable and a preemption-resume re-seeds from len(_gen) and
+    # replays its own tail deterministically (docs/sampling.md).
+    sampling: Optional[SamplingParams] = None
     _gen: List[int] = dataclasses.field(default_factory=list)
 
 
@@ -343,7 +360,8 @@ class Engine:
     # cache never resets)
     _WINDOW_KEYS = ("admitted", "decode_steps", "slot_steps",
                     "useful_decode_tokens", "prefill_chunk_steps",
-                    "prefix_hit_tokens", "blocks_evicted")
+                    "prefix_hit_tokens", "blocks_evicted",
+                    "spec_proposed_tokens", "spec_accepted_tokens")
 
     def __init__(self, params, cfg: ArchConfig, qm: QuantMode,
                  batch_size: int = 4, max_len: int = 256,
@@ -358,7 +376,8 @@ class Engine:
                  metrics: Optional[MetricsRegistry] = None,
                  tracer: Optional[Tracer] = None,
                  policy: Optional[SchedulingPolicy] = None,
-                 faults: Optional[FaultInjector] = None):
+                 faults: Optional[FaultInjector] = None,
+                 spec: Optional[SpecConfig] = None):
         """bucket_prompts=True rounds prompt lengths up to the attention
         chunk so distinct lengths reuse one prefill compile (wave) / keep
         the chunk grid aligned (continuous). Bucketed pads are left-pad
@@ -409,7 +428,19 @@ class Engine:
         deadlines, preemption on). faults: a seeded
         ``repro.serving.faults.FaultInjector`` whose rules fire at the
         engine's injection points (chaos tests only; None — the
-        default — adds zero work to the serving loop)."""
+        default — adds zero work to the serving loop).
+
+        spec: a ``repro.serving.policy.SpecConfig`` turns on
+        self-drafting speculative decoding (``docs/sampling.md``):
+        every engine step proposes up to ``spec.k`` draft tokens per
+        lane by prompt lookup and verifies them in one batched
+        multi-token forward; rejected drafts roll back by rewinding the
+        lane's position (paged: a pointer rewind inside the pages the
+        request already owns). Continuous scheduler + KV-cache families
+        only. Outputs are unchanged: greedy spec decoding is
+        token-bit-identical to non-spec greedy and sampled spec
+        preserves the sampling distribution — spec trades draft +
+        verify cost against tokens per step."""
         if cfg.family == "encoder":
             raise ValueError("encoder archs are not served autoregressively")
         if scheduler not in SCHEDULERS:
@@ -439,7 +470,13 @@ class Engine:
                 "continuous scheduler requires a token-embedding KV-cache "
                 "family (dense/moe); recurrent-state families must use "
                 "scheduler='wave'")
+        if spec is not None and scheduler != "continuous":
+            raise ValueError(
+                "speculative decoding (spec=...) requires "
+                "scheduler='continuous': drafts are proposed per slot "
+                "from each request's own emitted tokens")
         self.policy = policy if policy is not None else SchedulingPolicy()
+        self.spec = spec
         self._faults = faults
         self.kv_quant = KVCacheQuant.parse(kv_cache)
         if self.kv_quant is not None:
@@ -597,6 +634,14 @@ class Engine:
             "serving_rejected_never_fit_total",
             help="requests rejected at admission because prompt+budget "
                  "can never fit the pool (terminal FAILED, not requeued)")
+        self._c_spec_proposed = reg.counter(
+            "serving_spec_proposed_total", unit="tokens",
+            help="draft tokens proposed by the prompt-lookup drafter "
+                 "and scored by a verify step")
+        self._c_spec_accepted = reg.counter(
+            "serving_spec_accepted_total", unit="tokens",
+            help="proposed draft tokens accepted by the verify step "
+                 "(acceptance rate = accepted / proposed)")
         self._evicted_seen = 0       # allocator.evicted -> counter delta
         # windowed-vs-cumulative split (see stats()/reset_stats())
         self._window_base = {k: 0 for k in self._WINDOW_KEYS}
@@ -654,6 +699,93 @@ class Engine:
             return jax.tree.map(
                 lambda a: a.at[:, dst].set(a[:, src]), cache)
 
+        # sampled decode variants: same forward + NaN guard as the
+        # greedy closures (which stay byte-identical — their compile
+        # counts are pinned by tests), with the argmax replaced by the
+        # per-lane seeded sampler. Dispatched only when a live lane is
+        # actually non-greedy, so greedy-only traffic never compiles or
+        # pays for them.
+        def decode_sampled(params, cache, toks, cur_len, poison_lane,
+                           temps, top_ks, top_ps, seeds, steps):
+            logits, cache = api.decode(params, cfg, cache, toks, cur_len,
+                                       qm)
+            lanes = jnp.arange(logits.shape[0], dtype=jnp.int32)
+            logits = jnp.where((lanes == poison_lane)[:, None],
+                               jnp.float32(jnp.nan).astype(logits.dtype),
+                               logits)
+            ok = jnp.isfinite(logits).all(axis=-1)
+            nxt = sampling.sample_tokens(logits, temps, top_ks, top_ps,
+                                         seeds, steps)
+            return nxt, ok, cache
+
+        def decode_paged_sampled(params, cache, toks, cur_len, tables,
+                                 poison_lane, temps, top_ks, top_ps,
+                                 seeds, steps):
+            logits, cache = api.decode_paged(params, cfg, cache, toks,
+                                             cur_len, tables, qm)
+            lanes = jnp.arange(logits.shape[0], dtype=jnp.int32)
+            logits = jnp.where((lanes == poison_lane)[:, None],
+                               jnp.float32(jnp.nan).astype(logits.dtype),
+                               logits)
+            ok = jnp.isfinite(logits).all(axis=-1)
+            nxt = sampling.sample_tokens(logits, temps, top_ks, top_ps,
+                                         seeds, steps)
+            return nxt, ok, cache
+
+        # speculative verify: one multi-token forward scores the current
+        # token + drafts, then the acceptance rule picks the emitted run
+        # — all fused in one jit so a verify step is a single dispatch +
+        # a single host sync, like a decode step.
+        # The host-varying per-step state rides in ONE packed int32
+        # array (one device_put per verify step instead of five):
+        #   packed[:, :C]  = verify inputs [cur, d_1..d_K]
+        #   packed[:, C]   = per-lane write position
+        #   packed[:, C+1] = per-lane valid-slot count (1 + draft len)
+        #   packed[:, C+2] = per-lane emission index (the RNG step)
+        #   packed[:, C+3] = poisoned lane id, broadcast (-1 = none)
+        # and the three results come back as one packed int32 array
+        # [out | n_emit | ok] — one blocking fetch per step instead of
+        # three. The drafts spec_accept needs are exactly toks[:, 1:],
+        # sliced inside the jit rather than committed separately.
+        def _verify_unpack(packed):
+            C = packed.shape[1] - 4
+            return (packed[:, :C], packed[:, C], packed[:, C + 1],
+                    packed[:, C + 2], packed[0, C + 3])
+
+        def _verify_accept(logits, toks, n_valid, steps, poison_lane,
+                           temps, top_ks, top_ps, seeds):
+            lanes = jnp.arange(logits.shape[0], dtype=jnp.int32)
+            logits = jnp.where((lanes == poison_lane)[:, None, None],
+                               jnp.float32(jnp.nan).astype(logits.dtype),
+                               logits)
+            out, n_emit, okrow = sampling.spec_accept(
+                logits, toks[:, 1:], n_valid - 1, temps, top_ks, top_ps,
+                seeds, steps)
+            return jnp.concatenate(
+                [out, n_emit[:, None], okrow.astype(jnp.int32)], axis=1)
+
+        def verify_step(params, cache, packed, temps, top_ks, top_ps,
+                        seeds):
+            toks, pos, n_valid, steps, poison_lane = _verify_unpack(
+                packed)
+            logits, cache = api.verify(params, cfg, cache, toks, pos,
+                                       n_valid, qm)
+            res = _verify_accept(logits, toks, n_valid, steps,
+                                 poison_lane, temps, top_ks, top_ps,
+                                 seeds)
+            return res, cache
+
+        def verify_step_paged(params, cache, packed, tables, temps,
+                              top_ks, top_ps, seeds):
+            toks, pos, n_valid, steps, poison_lane = _verify_unpack(
+                packed)
+            logits, cache = api.verify_paged(params, cfg, cache, toks,
+                                             pos, n_valid, tables, qm)
+            res = _verify_accept(logits, toks, n_valid, steps,
+                                 poison_lane, temps, top_ks, top_ps,
+                                 seeds)
+            return res, cache
+
         self._prefill = jax.jit(prefill)
         self._prefill_chunk = jax.jit(prefill_chunk)
         self._decode = jax.jit(decode)
@@ -661,6 +793,11 @@ class Engine:
         self._prefill_chunk_paged = jax.jit(prefill_chunk_paged)
         self._decode_paged = jax.jit(decode_paged)
         self._copy_page = jax.jit(copy_page)
+        self._decode_sampled = jax.jit(decode_sampled)
+        self._decode_paged_sampled = jax.jit(decode_paged_sampled)
+        self._verify = jax.jit(verify_step)
+        self._verify_paged = jax.jit(verify_step_paged)
+        self._sample_tokens = jax.jit(sampling.sample_tokens)
 
         # streaming state
         self._queue = RequestQueue()      # priority + backoff admission
@@ -671,6 +808,7 @@ class Engine:
         self._cache = None                # persistent (B, max_len) KV pool
         self._slot_cache = None           # (1, max_len) admission scratch
         self._home = None                 # canonical input sharding (lazy)
+        self._greedy_vecs: dict = {}      # batch -> constant samp vectors
 
     # ------------------------------------------------------------------
     # Telemetry helpers + legacy counter attributes (registry views)
@@ -782,7 +920,8 @@ class Engine:
                       metrics: Optional[MetricsRegistry] = None,
                       tracer: Optional[Tracer] = None,
                       policy: Optional[SchedulingPolicy] = None,
-                      faults: Optional[FaultInjector] = None) -> "Engine":
+                      faults: Optional[FaultInjector] = None,
+                      spec: Optional[SpecConfig] = None) -> "Engine":
         """Serve directly from an exported artifact directory: no
         calibration, no re-quantization — load packed bytes and go.
 
@@ -793,7 +932,7 @@ class Engine:
         kernels (requires eager=False to have any effect — eager loads
         are dense and fall back to the reference path). scheduler/eos_id/
         kv_cache/kv_layout/page_size/n_pages/metrics/tracer/policy/
-        faults are forwarded to :class:`Engine`."""
+        faults/spec are forwarded to :class:`Engine`."""
         from repro.artifacts import load_artifact
         params, cfg, qm = load_artifact(path, eager=eager, verify=verify,
                                         backend=backend)
@@ -801,7 +940,7 @@ class Engine:
                    scheduler=scheduler, eos_id=eos_id, kv_cache=kv_cache,
                    kv_layout=kv_layout, page_size=page_size,
                    n_pages=n_pages, metrics=metrics, tracer=tracer,
-                   policy=policy, faults=faults)
+                   policy=policy, faults=faults, spec=spec)
 
     # ------------------------------------------------------------------
     # Streaming API
@@ -1153,15 +1292,34 @@ class Engine:
         for i, r in enumerate(reqs):
             toks[i, S - len(r.prompt):] = r.prompt  # left-pad
 
+        # greedy waves keep the untouched argmax + greedy-decode path
+        # (bit-identical, same compile keys); a wave with any sampled
+        # request switches the whole wave to the sampled closures —
+        # greedy members still argmax inside them (per-lane temp 0)
+        sampled = any(r.sampling is not None and not r.sampling.greedy
+                      for r in reqs)
         self._count_compile("prefill", (B, S))
-        self._count_decode_compile(B, "scalar")
+        self._count_decode_compile(
+            B, "scalar-sampled" if sampled else "scalar")
+        if sampled:
+            # wave requests never resume, so every lane's first emission
+            # index is 0; the loop then advances all lanes in lockstep
+            temps_d, tks_d, tps_d, seeds_d, steps_d = self._samp_vectors(
+                list(reqs), [0] * B)
         for r in reqs:
             r.state = RequestState.RUNNING
         with self._span("wave", batch=B, prompt_len=S, max_new=max_new):
             with self._span("prefill", batch=B, prompt_len=S):
                 last_logits, cache = self._prefill(self.params,
                                                    jnp.asarray(toks))
-                nxt = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
+                if sampled:
+                    nxt = self._sample_tokens(last_logits, temps_d,
+                                              tks_d, tps_d, seeds_d,
+                                              steps_d)
+                    steps_d = steps_d + 1
+                else:
+                    nxt = jnp.argmax(last_logits, axis=-1) \
+                             .astype(jnp.int32)
                 ok = jnp.isfinite(last_logits).all(axis=-1)
             # accumulate sampled tokens on device; one host transfer at
             # the end (a per-step np.asarray would sync the dispatch
@@ -1176,9 +1334,16 @@ class Engine:
                         hit = self._faults.fire("nan_logits")
                         if hit is not None:
                             poison = int(hit.get("lane", 0))
-                    nxt, ok, cache = self._decode(self.params, cache, nxt,
-                                                  jnp.int32(pos),
-                                                  jnp.int32(poison))
+                    if sampled:
+                        nxt, ok, cache = self._decode_sampled(
+                            self.params, cache, nxt, jnp.int32(pos),
+                            jnp.int32(poison), temps_d, tks_d, tps_d,
+                            seeds_d, steps_d)
+                        steps_d = steps_d + 1
+                    else:
+                        nxt, ok, cache = self._decode(
+                            self.params, cache, nxt, jnp.int32(pos),
+                            jnp.int32(poison))
                     toks_dev.append(nxt)
                     oks_dev.append(ok)
                     pos += 1
@@ -1273,8 +1438,68 @@ class Engine:
             self._cache = self._merge(self._cache, self._slot_cache,
                                       jnp.int32(slot))
         row = np.asarray(logits)[0]
-        tok = int(row.argmax())
+        tok = self._first_token(req, row)
         return sb, tok, bool(np.isfinite(row).all())
+
+    def _first_token(self, req: Request, row: np.ndarray) -> int:
+        """Sample the admission token from a (V,) prefill-logits row.
+
+        Greedy requests keep the host argmax (bit-identical to the
+        pre-sampling engine). Sampled requests draw through the same
+        jitted per-lane sampler the decode burst uses, on a (1, V)
+        batch: the draw depends only on (seed, emission index), so the
+        admission token equals what a decode-batch draw at the same
+        index would produce — including after a preemption-resume,
+        where the emission index restarts at ``len(req._gen)``."""
+        sp = req.sampling
+        if sp is None or sp.greedy:
+            return int(row.argmax())
+        return int(np.asarray(self._sample_tokens(
+            jnp.asarray(row[None]),
+            jnp.asarray([sp.temperature], jnp.float32),
+            jnp.asarray([sp.top_k], jnp.int32),
+            jnp.asarray([sp.top_p], jnp.float32),
+            jnp.asarray([sp.seed], jnp.uint32),
+            jnp.asarray([len(req._gen)], jnp.int32)))[0])
+
+    def _samp_vectors(self, reqs: List[Optional[Request]],
+                      steps: List[int]) -> tuple:
+        """Build the per-lane sampling argument vectors for a batch.
+
+        ``reqs[i]`` may be None (idle lane — greedy no-op args);
+        ``steps[i]`` is the lane's next emission index.  All-greedy
+        batches reuse one cached constant tuple: greedy lanes take the
+        argmax branch, so none of these vectors (steps included) affect
+        the output, and committing five fresh arrays per spec step is
+        pure host overhead."""
+        n = len(reqs)
+        if all(r is None or r.sampling is None or r.sampling.greedy
+               for r in reqs):
+            cached = self._greedy_vecs.get(n)
+            if cached is None:
+                z = self._commit(jnp.zeros(n, jnp.float32))
+                cached = self._greedy_vecs[n] = (
+                    z, self._commit(jnp.zeros(n, jnp.int32)),
+                    self._commit(jnp.ones(n, jnp.float32)),
+                    self._commit(jnp.zeros(n, jnp.uint32)),
+                    self._commit(jnp.zeros(n, jnp.int32)))
+            return cached
+        temps = np.zeros(n, np.float32)
+        tks = np.zeros(n, np.int32)
+        tps = np.ones(n, np.float32)
+        seeds = np.zeros(n, np.uint32)
+        for i, r in enumerate(reqs):
+            sp = r.sampling if r is not None and r.sampling is not None \
+                else GREEDY
+            temps[i] = sp.temperature
+            tks[i] = sp.top_k
+            tps[i] = sp.top_p
+            seeds[i] = sp.seed
+        return (self._commit(jnp.asarray(temps)),
+                self._commit(jnp.asarray(tks)),
+                self._commit(jnp.asarray(tps)),
+                self._commit(jnp.asarray(seeds)),
+                self._commit(jnp.asarray(np.asarray(steps, np.int32))))
 
     def _emit(self, req: Request, tok: int) -> None:
         if req.on_token is not None:
@@ -1418,7 +1643,7 @@ class Engine:
             self._alloc.register(hashes[j], pages[j])
         self._slot_pages[slot] = pages
         row = np.asarray(logits)[0]
-        tok = int(row.argmax())
+        tok = self._first_token(req, row)
         return s, tok, bool(np.isfinite(row).all())
 
     def _admit_one(self, i: int, req: Request, paged: bool):
@@ -1565,6 +1790,15 @@ class Engine:
         if not live:
             return done
 
+        if self.spec is not None:
+            # speculative decoding replaces the decode burst: one verify
+            # step per engine step (drafts depend on the tokens the
+            # previous step emitted, so steps are inherently host-paced
+            # — each one can emit up to k+1 tokens per lane instead)
+            self._spec_decode_step(live, paged, done)
+            self._expire_running(done, paged)
+            return done
+
         # --- decode burst over every lane (dead lanes idle; their
         # sampled tokens are discarded, their stale cache rows are
         # overwritten wholesale at the next admission merge).
@@ -1592,14 +1826,30 @@ class Engine:
         for i in live:
             cur[i] = self._slots[i].toks[-1]
             pos[i] = self._slots[i].pos
+        # the greedy closures are dispatched untouched whenever every
+        # live lane is greedy, so greedy traffic (and its compile
+        # counts) is bit-identical to an engine without sampling
+        sampled = any(self._slots[i].req.sampling is not None
+                      and not self._slots[i].req.sampling.greedy
+                      for i in live)
         self._count_decode_compile(
-            self.B, "vector-paged" if paged else "vector")
+            self.B, ("vector-paged" if paged else "vector") +
+                    ("-sampled" if sampled else ""))
         # committed onto the canonical sharding so the burst's first step
         # shares one jit signature with the steady-state steps (whose
         # cur/pos are the previous step's committed outputs)
         cur_d = self._commit(jnp.asarray(cur))
         pos_d = self._commit(jnp.asarray(pos))
         tables_d = self._tables_committed() if paged else None
+        if sampled:
+            # steps[i] = the lane's next emission index: sl.toks already
+            # includes the admission token (emission 0), so index =
+            # len(toks). Idle lanes get greedy no-op args.
+            temps_d, tks_d, tps_d, seeds_d, steps_d = self._samp_vectors(
+                [self._slots[i].req if self._slots[i] is not None else None
+                 for i in range(self.B)],
+                [len(self._slots[i].toks) if self._slots[i] is not None
+                 else 0 for i in range(self.B)])
         toks_dev = []
         oks_dev = []
         with self._span("decode_burst", steps=burst, lanes=len(live)):
@@ -1613,10 +1863,21 @@ class Engine:
                 # device wait shows up in host_sync below) — no per-step
                 # host sync is ever introduced by tracing
                 with self._span("decode_step", paged=paged):
-                    if paged:
+                    if paged and sampled:
+                        cur_d, ok_d, self._cache = \
+                            self._decode_paged_sampled(
+                                self.params, self._cache, cur_d, pos_d,
+                                tables_d, jnp.int32(poison), temps_d,
+                                tks_d, tps_d, seeds_d, steps_d)
+                    elif paged:
                         cur_d, ok_d, self._cache = self._decode_paged(
                             self.params, self._cache, cur_d, pos_d,
                             tables_d, jnp.int32(poison))
+                    elif sampled:
+                        cur_d, ok_d, self._cache = self._decode_sampled(
+                            self.params, self._cache, cur_d, pos_d,
+                            jnp.int32(poison), temps_d, tks_d, tps_d,
+                            seeds_d, steps_d)
                     else:
                         cur_d, ok_d, self._cache = self._decode(
                             self.params, self._cache, cur_d, pos_d,
@@ -1624,6 +1885,8 @@ class Engine:
                 toks_dev.append(cur_d)
                 oks_dev.append(ok_d)
                 pos_d = pos_d + 1
+                if sampled:
+                    steps_d = steps_d + 1
                 self._c_decode_steps.inc()
                 self._c_slot_steps.inc(self.B)
             with self._span("host_sync", steps=burst):
@@ -1671,6 +1934,133 @@ class Engine:
         self._expire_running(done, paged)
         return done
 
+    def _spec_decode_step(self, live: List[int], paged: bool,
+                          done: List[Request]) -> None:
+        """One speculative decode step over every live lane.
+
+        Host side proposes up to ``spec.k`` draft tokens per lane by
+        prompt lookup over (prompt + emitted tokens); one batched verify
+        forward scores current-token + drafts at the lane's positions
+        and the fused acceptance rule emits 1..k+1 tokens per lane
+        (accepted draft prefix, then the rejection resample or the
+        bonus sample). Rollback is a pure position rewind: ``sl.pos``
+        advances only by the emitted count, so rejected slots' cache
+        rows stay masked (causal + kv_len) until the next verify step
+        overwrites them in place — under the paged layout the pages
+        were preallocated at admission, so no page is allocated,
+        dereffed, or leaked by acceptance or rejection."""
+        K = self.spec.k
+        C = K + 1
+        # the whole host-varying step state in one packed array — see
+        # the verify_step closure for the column layout
+        packed = np.zeros((self.B, C + 4), np.int32)
+        steps = [0] * self.B
+        reqs: List[Optional[Request]] = [None] * self.B
+        n_prop = 0
+        for i in live:
+            sl = self._slots[i]
+            reqs[i] = sl.req
+            # drafts come from the request's own history; d_len is
+            # capped at remaining-1 so the emitted run (<= d_len+1)
+            # never overruns the decode budget — which also keeps every
+            # verify write inside the rows/pages admission reserved
+            ctx = np.concatenate([np.asarray(sl.req.prompt, np.int64),
+                                  np.asarray(sl.toks, np.int64)])
+            d = propose_ngram(ctx, K, self.spec.ngram_max,
+                              self.spec.ngram_min)
+            dn = max(0, min(len(d), sl.remaining - 1))
+            packed[i, 0] = sl.toks[-1]
+            packed[i, 1:1 + dn] = d[:dn]
+            packed[i, C] = sl.pos
+            packed[i, C + 1] = dn + 1
+            packed[i, C + 2] = len(sl.toks)
+            steps[i] = len(sl.toks)
+            n_prop += dn
+        self._c_spec_proposed.inc(n_prop)
+        temps_d, tks_d, tps_d, seeds_d, _ = self._samp_vectors(
+            reqs, steps)
+        self._count_decode_compile(
+            self.B, "verify-paged" if paged else "verify")
+        poison = -1
+        if self._faults is not None:
+            hit = self._faults.fire("nan_logits")
+            if hit is not None:
+                poison = int(hit.get("lane", live[0]))
+        packed[:, C + 3] = poison
+        packed_d = self._commit(jnp.asarray(packed))
+        with self._span("verify_step", lanes=len(live), k=K,
+                        proposed=n_prop, paged=paged):
+            if paged:
+                res_d, self._cache = self._verify_paged(
+                    self.params, self._cache, packed_d,
+                    self._tables_committed(),
+                    temps_d, tks_d, tps_d, seeds_d)
+            else:
+                res_d, self._cache = self._verify(
+                    self.params, self._cache, packed_d,
+                    temps_d, tks_d, tps_d, seeds_d)
+            with self._span("host_sync", steps=1):
+                res = np.asarray(res_d)
+        out = res[:, :C]
+        ne = res[:, C]
+        okh = res[:, C + 1:].astype(bool)
+        self._c_decode_steps.inc()
+        self._c_slot_steps.inc(self.B)
+        for i in live:
+            sl = self._slots[i]
+            if sl is None:
+                continue
+            n = int(ne[i])
+            self._c_spec_accepted.inc(n - 1)
+            row = out[i]
+            bad = np.flatnonzero(~okh[i, :n])
+            if bad.size:
+                # poisoned verify: the lane keeps the tokens before the
+                # first non-finite slot, then fails alone (a NaN'd lane
+                # accepts nothing, so n == 1 and nothing garbage is
+                # emitted); neighbors are untouched
+                k0 = int(bad[0])
+                for t in row[:k0]:
+                    sl.toks.append(int(t))
+                    self._emit(sl.req, int(t))
+                sl.pos += k0
+                req = sl.req
+                self._c_nan.inc()
+                if (self.tracer is not None
+                        and req.trace_track is not None):
+                    self.tracer.instant("nan_guard",
+                                        track=req.trace_track,
+                                        cat="request", lane=i, step=k0)
+                self._slots[i] = None
+                if paged:
+                    self._release_paged(i)
+                self._finish(req, sl.toks, state=RequestState.FAILED,
+                             error=f"non-finite logits in lane {i} at "
+                                   f"verify position {sl.pos}")
+                done.append(req)
+                continue
+            emitted = row[:n]
+            if self.eos_id is not None:
+                hits = np.flatnonzero(emitted == self.eos_id)
+                if hits.size:
+                    # stop at (and include) the first EOS: later
+                    # accepted drafts are discarded, their stale cache
+                    # rows die with the lane
+                    emitted = emitted[:int(hits[0]) + 1]
+            kept = len(emitted)
+            for t in emitted:
+                sl.toks.append(int(t))
+                self._emit(sl.req, int(t))
+            sl.pos += kept
+            sl.remaining -= kept
+            if (sl.remaining == 0
+                    or (kept and int(emitted[-1]) == self.eos_id)):
+                self._finish(sl.req, sl.toks)
+                done.append(sl.req)
+                self._slots[i] = None
+                if paged:
+                    self._release_paged(i)
+
     # ------------------------------------------------------------------
     # Accounting
     # ------------------------------------------------------------------
@@ -1684,7 +2074,9 @@ class Engine:
                 "useful_decode_tokens": self.useful_decode_tokens,
                 "prefill_chunk_steps": self.prefill_chunk_steps,
                 "prefix_hit_tokens": self.prefix_hit_tokens,
-                "blocks_evicted": int(self._c_evicted.value)}
+                "blocks_evicted": int(self._c_evicted.value),
+                "spec_proposed_tokens": int(self._c_spec_proposed.value),
+                "spec_accepted_tokens": int(self._c_spec_accepted.value)}
 
     def reset_stats(self) -> None:
         """Start a new stats *window*: ``stats()['window']`` counts from
@@ -1756,6 +2148,9 @@ class Engine:
         window["decode_utilization"] = (
             window["useful_decode_tokens"] / window["slot_steps"]
             if window["slot_steps"] else 0.0)
+        window["spec_acceptance"] = (
+            window["spec_accepted_tokens"] / window["spec_proposed_tokens"]
+            if window["spec_proposed_tokens"] else 0.0)
         compiles = {"prefill": self.prefill_compiles,
                     "prefill_chunk": self.prefill_chunk_compiles,
                     "decode": self.decode_compiles}
@@ -1774,6 +2169,12 @@ class Engine:
                 "decode_utilization": util,
                 "prefill_chunk_steps": cum["prefill_chunk_steps"],
                 "prefix_hit_tokens": cum["prefix_hit_tokens"],
+                "spec_proposed_tokens": cum["spec_proposed_tokens"],
+                "spec_accepted_tokens": cum["spec_accepted_tokens"],
+                "spec_acceptance": (
+                    cum["spec_accepted_tokens"]
+                    / cum["spec_proposed_tokens"]
+                    if cum["spec_proposed_tokens"] else 0.0),
                 "blocks_in_use": (self._alloc.in_use if self._alloc
                                   else 0),
                 "blocks_evicted": (self._alloc.evicted if self._alloc
@@ -1812,7 +2213,8 @@ class Engine:
         return total * live // self._alloc.n_pages
 
     def throughput(self, n_requests: int = 8, prompt_len: int = 32,
-                   max_new: int = 32, seed: int = 0) -> dict:
+                   max_new: int = 32, seed: int = 0,
+                   sampling: Optional[SamplingParams] = None) -> dict:
         """Tokens/second over a synthetic request wave (Fig. 4 metric),
         plus the scheduler counters from :meth:`stats`.
 
@@ -1825,7 +2227,10 @@ class Engine:
         rng = np.random.default_rng(seed)
         reqs = [Request(prompt=rng.integers(
             0, self.cfg.vocab_size, prompt_len).astype(np.int32),
-            max_new=max_new) for _ in range(n_requests)]
+            max_new=max_new,
+            sampling=(dataclasses.replace(sampling, seed=sampling.seed + i)
+                      if sampling is not None else None))
+            for i in range(n_requests)]
         before = self.stats()
         t0 = time.perf_counter()
         done = self.generate(reqs)
@@ -1838,6 +2243,10 @@ class Engine:
         run["decode_utilization"] = (
             run["useful_decode_tokens"] / run["slot_steps"]
             if run["slot_steps"] else 0.0)
+        run["spec_acceptance"] = (
+            run["spec_accepted_tokens"] / run["spec_proposed_tokens"]
+            if run["spec_proposed_tokens"] else 0.0)
         run["window"] = {k: run[k] for k in self._WINDOW_KEYS}
         run["window"]["decode_utilization"] = run["decode_utilization"]
+        run["window"]["spec_acceptance"] = run["spec_acceptance"]
         return {"tokens": toks, "seconds": dt, "tok_per_s": rate, **run}

@@ -108,6 +108,37 @@ class SchedulingPolicy:
         return self.backoff_base_s * (2.0 ** max(retries - 1, 0))
 
 
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """Speculative-decoding knobs (``Engine(spec=...)``; docs/sampling.md).
+
+    Passing a SpecConfig turns self-drafting speculative decoding on for
+    every request served by the engine (continuous scheduler only):
+    each engine step, an n-gram prompt-lookup draft proposes up to ``k``
+    tokens per lane and one batched verify forward scores them all.
+
+    ``k`` is the draft length — each verify step scores ``k + 1``
+    positions (current token + drafts) and emits 1..k+1 tokens.
+    ``ngram_max`` / ``ngram_min`` bound the context-suffix n-gram the
+    prompt-lookup drafter matches (longest match wins; the most recent
+    earlier occurrence supplies the continuation). Outputs are unchanged
+    by any of these knobs — greedy spec decoding is token-bit-identical
+    to non-spec greedy, and sampled spec preserves the sampling
+    distribution; they trade only draft cost against acceptance rate."""
+
+    k: int = 4
+    ngram_max: int = 3
+    ngram_min: int = 1
+
+    def __post_init__(self):
+        if self.k < 1:
+            raise ValueError(f"spec k must be >= 1, got {self.k}")
+        if not 1 <= self.ngram_min <= self.ngram_max:
+            raise ValueError(
+                f"need 1 <= ngram_min <= ngram_max, got "
+                f"ngram_min={self.ngram_min}, ngram_max={self.ngram_max}")
+
+
 class RequestQueue:
     """Priority admission queue with lazy removal and backoff holds.
 

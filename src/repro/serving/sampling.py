@@ -1,0 +1,239 @@
+"""Per-lane token sampling and speculative-decoding acceptance.
+
+Three pieces, all shape-polymorphic over the lane axis so the engine can
+jit them once per batch size:
+
+- ``sample_tokens``: temperature / top-k / top-p sampling with a
+  per-lane ``(seed, step)`` RNG key.  The filtering order matches the
+  NeMo ``text_generation_utils.py`` reference: divide by temperature,
+  then keep the top-k logits, then keep the smallest sorted prefix whose
+  cumulative probability covers ``top_p`` (the rule is
+  ``cum - prob <= top_p`` in sorted-descending space, which always keeps
+  the most likely token).  ``temperature <= 0`` short-circuits to argmax
+  of the *raw* logits, bit-identical to the greedy decode path.
+
+- ``propose_ngram``: host-side prompt-lookup drafting.  Find the longest
+  n-gram (``ngram_min <= n <= ngram_max``) whose most recent earlier
+  occurrence in the context matches the context suffix, and propose the
+  up-to-``k`` tokens that followed it.  Self-drafting needs no draft
+  model; it wins exactly on repetitive continuations, which is also
+  where speculative decoding pays off.
+
+- ``spec_accept``: the leading-accepts rule of speculative sampling with
+  a *one-hot* draft distribution.  Draft token ``x`` at slot ``j`` is
+  accepted with probability ``min(1, p_j(x))`` under the target's
+  filtered distribution ``p_j``; the first rejection resamples from
+  ``p_j`` with ``x`` masked out (the residual of a one-hot proposal),
+  and a fully accepted run earns one bonus token from the next
+  position's distribution.  Greedy lanes accept iff the draft equals the
+  argmax, so every emitted token is the argmax of its own position's
+  logits — token-level bit-identity with non-spec greedy decoding.
+
+RNG discipline: every draw comes from
+``fold_in(fold_in(PRNGKey(seed), step), channel)`` where ``step`` is the
+token's emission index (0 = the token sampled from prefill logits) and
+``channel`` separates the categorical draw (0) from the acceptance
+uniform (1).  Draws depend only on ``(seed, step)`` — never on batch
+size, lane index, or scheduler — so admission-time sampling on a
+``(1, V)`` row, decode-burst sampling on a ``(B, V)`` batch, and a
+preemption-resume replay that re-seeds from the emitted-token count all
+produce the same tokens.  See docs/sampling.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30  # matches models/layers.py masking constant
+_MIN_TEMP = 1e-4
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling knobs carried on ``Request.sampling``.
+
+    ``temperature <= 0`` means greedy: top_k/top_p/seed are ignored and
+    the decode is bit-identical to a request with no sampling at all.
+    ``top_k == 0`` disables the top-k filter; ``top_p == 1.0`` disables
+    the nucleus filter.  ``seed`` makes the request replayable: the same
+    (prompt, params, seed) always yields the same tokens.
+    """
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+        if self.seed < 0:
+            raise ValueError(f"seed must be >= 0, got {self.seed}")
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+
+GREEDY = SamplingParams()
+
+
+def _key(seed, step, channel):
+    """Derive the draw key for one (request, emission-index, channel)."""
+    k = jax.random.PRNGKey(jnp.asarray(seed, jnp.uint32))
+    return jax.random.fold_in(jax.random.fold_in(k, step), channel)
+
+
+def _filter_logits(scaled, top_k, top_p):
+    """Apply top-k then top-p masks to temperature-scaled logits (V,).
+
+    Works in sorted-descending space and scatters the keep-mask back, the
+    same shape as the NeMo reference filter.  Always keeps the top-1
+    token, so the filtered distribution is never empty.
+    """
+    V = scaled.shape[-1]
+    sorted_l, sort_idx = jax.lax.top_k(scaled, V)
+    rank = jnp.arange(V, dtype=jnp.int32)
+    drop_k = (top_k > 0) & (rank >= top_k)
+    probs = jax.nn.softmax(jnp.where(drop_k, NEG_INF, sorted_l))
+    cum = jnp.cumsum(probs)
+    # keep iff the cumulative mass *before* this token is within top_p;
+    # the first sorted token always has cum - prob ~ 0 and survives
+    drop = drop_k | ((cum - probs) > top_p)
+    keep = jnp.zeros((V,), bool).at[sort_idx].set(~drop)
+    return jnp.where(keep, scaled, NEG_INF)
+
+
+def _sample_one(logits, temp, top_k, top_p, seed, step):
+    lf = logits.astype(jnp.float32)
+    gtok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    filt = _filter_logits(lf / jnp.maximum(temp, _MIN_TEMP), top_k, top_p)
+    stok = jax.random.categorical(_key(seed, step, 0), filt)
+    return jnp.where(temp <= 0.0, gtok, stok.astype(jnp.int32))
+
+
+def sample_tokens(logits, temps, top_ks, top_ps, seeds, steps):
+    """Sample one token per lane.  logits (B, V); the rest (B,).
+
+    Greedy lanes (temp <= 0) return ``argmax(logits)`` computed on the
+    raw dtype — bitwise the token the greedy closure would produce.
+    """
+    return jax.vmap(_sample_one)(logits, temps, top_ks, top_ps,
+                                 seeds, steps)
+
+
+def _spec_one(logits, drafts, n_drafts, temp, top_k, top_p, seed, step):
+    """Accept/resample for one lane.  logits (C, V), drafts (K,), C=K+1.
+
+    Returns (out (C,), n_emit, okrow (C,)): the lane emits
+    ``out[:n_emit]`` — the accepted draft prefix plus one token that is
+    either the rejection resample or the bonus/bootstrap sample.
+
+    Every per-slot quantity is computed with a vmap over the slot axis
+    (not a Python loop — C identical op groups would dominate the
+    verify dispatch on small models).  Key derivation is the same
+    ``_key(seed, step + j, channel)`` the non-spec path uses, so the
+    draw at emission index ``t`` is bit-identical whether ``t`` was
+    reached by plain decode or inside a verify step.
+    """
+    C, V = logits.shape
+    K = C - 1
+    greedy = temp <= 0.0
+    okrow = jnp.isfinite(logits).all(axis=-1)
+    iota_c = jnp.arange(C, dtype=jnp.int32)
+
+    lf = logits.astype(jnp.float32)
+    gtok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    filt = jax.vmap(_filter_logits, in_axes=(0, None, None))(
+        lf / jnp.maximum(temp, _MIN_TEMP), top_k, top_p)
+    keys0 = jax.vmap(lambda j: _key(seed, step + j, 0))(iota_c)
+    plain = jnp.where(
+        greedy, gtok,
+        jax.vmap(jax.random.categorical)(keys0, filt).astype(jnp.int32))
+
+    if K:
+        keys1 = jax.vmap(lambda j: _key(seed, step + j, 1))(iota_c[:K])
+        p_x = jnp.take_along_axis(jax.nn.softmax(filt[:K], axis=-1),
+                                  drafts[:, None], axis=1)[:, 0]
+        u = jax.vmap(lambda k: jax.random.uniform(k))(keys1)
+        acc = (jnp.where(greedy, gtok[:K] == drafts, u < p_x)
+               & (iota_c[:K] < n_drafts))
+        # residual of a one-hot proposal: target with the draft masked
+        # out (the same key as the plain draw — only one of the two is
+        # ever emitted for a given step index)
+        onehot = (jax.lax.broadcasted_iota(jnp.int32, (K, V), 1)
+                  == drafts[:, None])
+        resamp = jax.vmap(jax.random.categorical)(
+            keys0[:K], jnp.where(onehot, NEG_INF, filt[:K]))
+        rej = jnp.concatenate(
+            [jnp.where(greedy, gtok[:K], resamp.astype(jnp.int32)),
+             plain[K:]])
+        # m = number of leading accepted drafts
+        m = jnp.sum(jnp.cumprod(acc.astype(jnp.int32))).astype(jnp.int32)
+    else:
+        rej = plain
+        m = jnp.int32(0)
+
+    # slot j is emitted iff j <= m: the draft when j < m, else the
+    # rejection resample (a draft existed and was refused) or the
+    # plain sample (bonus after a full accept / no draft at all)
+    tok = jnp.where(m < n_drafts, rej, plain)
+    pad_drafts = jnp.concatenate(
+        [drafts, jnp.zeros((1,), drafts.dtype)]).astype(jnp.int32)
+    out = jnp.where(iota_c < m, pad_drafts, tok)
+    return (out.astype(jnp.int32),
+            (m + jnp.int32(1)).astype(jnp.int32), okrow)
+
+
+def spec_accept(logits, drafts, n_drafts, temps, top_ks, top_ps,
+                seeds, steps):
+    """Vectorized speculative acceptance.
+
+    logits (B, C, V) — verify-step logits, position j conditioned on the
+    current token plus drafts[:, :j]; drafts (B, K) with K = C - 1;
+    n_drafts (B,) real draft counts (0 for idle lanes); the sampling
+    vectors are (B,) and ``steps`` is each lane's next emission index.
+    Returns (out (B, C), n_emit (B,), okrow (B, C)).
+    """
+    return jax.vmap(_spec_one)(logits, drafts, n_drafts, temps,
+                               top_ks, top_ps, seeds, steps)
+
+
+def propose_ngram(ctx, k, ngram_max=3, ngram_min=1):
+    """Prompt-lookup draft: ``k`` tokens periodically extending the most
+    recent earlier occurrence of the longest matching context suffix
+    n-gram.
+
+    Host-side numpy on the request's (prompt + generated) token history.
+    A hit at position ``i`` means the suffix recurred at distance
+    ``p = L - n - i`` — evidence of period-``p`` structure — so the
+    draft reads the continuation ``ctx[i + n + (t % p)]``, wrapping
+    cyclically once it reaches the context end.  The wrap matters:
+    greedy decode loves short cycles (constant runs are period 1), and
+    without it the draft length is capped by how much of the current
+    cycle already follows the match (a run of four identical tokens
+    could only ever draft one).  Returns an int32 array of length 0 or
+    ``k``; length 0 means "no match, verify step degenerates to a plain
+    decode step".
+    """
+    ctx = np.asarray(ctx, dtype=np.int64).ravel()
+    L = ctx.size
+    if L < 2 or k <= 0:
+        return np.zeros(0, np.int32)
+    lo = max(int(ngram_min), 1)
+    hi = min(int(ngram_max), L - 1)
+    for n in range(hi, lo - 1, -1):
+        pat = ctx[L - n:]
+        win = np.lib.stride_tricks.sliding_window_view(ctx, n)
+        hits = np.flatnonzero((win[:L - n] == pat).all(axis=1))
+        if hits.size:
+            i = int(hits[-1])
+            p = L - n - i                      # implied period, >= 1
+            t = np.arange(k)
+            return ctx[i + n + (t % p)].astype(np.int32)
+    return np.zeros(0, np.int32)

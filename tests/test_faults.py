@@ -17,8 +17,9 @@ from repro.models import api
 from repro.serving.engine import BlockAllocator, Engine, Request
 from repro.serving.faults import FaultInjector, corrupt_file
 from repro.serving.policy import (RequestQueue, RequestState,
-                                  SchedulingPolicy, TERMINAL_STATES,
-                                  pick_victim)
+                                  SchedulingPolicy, SpecConfig,
+                                  TERMINAL_STATES, pick_victim)
+from repro.serving.sampling import SamplingParams
 
 
 def _cfg(**kw):
@@ -542,12 +543,19 @@ def test_equal_priority_never_preempts(tiny):
 # Full chaos scenario: seeded faults -> quiescence, nothing leaks
 # ---------------------------------------------------------------------------
 
-def test_chaos_scenario_reaches_quiescence(tiny):
+@pytest.mark.parametrize("spec", [None, SpecConfig(k=3)],
+                         ids=["plain", "spec"])
+def test_chaos_scenario_reaches_quiescence(tiny, spec):
     """Mixed seeded fault plan (forced exhaustion, forced cache flush,
     NaN lane, slow steps) over mixed-priority traffic with a cancel, a
     zero-deadline request, and a never-fit request: the engine reaches
     quiescence with every request terminal, terminal counters summing
-    to submitted, and zero leaked pages."""
+    to submitted, and zero leaked pages.
+
+    Runs twice: the plain decode path, and the same scenario under
+    speculative decoding + per-request sampling (the spec verify /
+    rollback path must uphold the same lifecycle + page-accounting
+    invariants — the rollback property test of docs/sampling.md)."""
     params, cfg = tiny
     fi = (FaultInjector(seed=0)
           .inject("alloc_exhausted", at=1, times=2)
@@ -558,11 +566,15 @@ def test_chaos_scenario_reaches_quiescence(tiny):
                  scheduler="continuous", kv_layout="paged", page_size=32,
                  n_pages=5,
                  policy=SchedulingPolicy(backoff_base_s=0.001),
-                 faults=fi)
+                 faults=fi, spec=spec)
     reqs = _requests(cfg, [20, 40, 12, 33, 8], [6, 10, 4, 8, 5], seed=10,
                      deadline_ms=1e7)   # far-future: caps bursts only
     for pri, r in zip([0, 0, 3, 1, 0], reqs):
         r.priority = pri
+    if spec is not None:                # mixed greedy + sampled lanes
+        for i, r in enumerate(reqs[::2]):
+            r.sampling = SamplingParams(temperature=0.8, top_k=12,
+                                        seed=i)
     reqs.append(Request(prompt=np.zeros(60, np.int32), max_new=40))  # never fits
     doomed = _requests(cfg, [10], [4], seed=11, deadline_ms=0.0)[0]
     reqs.append(doomed)

@@ -1,0 +1,632 @@
+"""Sampling + speculative decoding: statistical correctness suite.
+
+Pins the three guarantees docs/sampling.md makes:
+
+1. The jitted per-lane sampler draws from the *right distribution*:
+   seeded chi-squared tests of temperature / top-k / top-p draws against
+   a float64 numpy softmax reference over small vocabularies, plus
+   exact-support checks (a draw outside the filtered set is an instant
+   failure, not a statistical one).
+2. ``temperature=0`` is *bit-identical* to the pre-sampling greedy
+   engine on both schedulers and both KV layouts — including mixed
+   batches where greedy lanes share a decode dispatch with sampled ones.
+3. Speculative decoding *preserves outputs*: greedy spec decode is
+   token-bit-identical to non-spec greedy (both layouts), sampled spec
+   passes a two-sample frequency test against non-spec sampling at the
+   same ``SamplingParams``, rollback never leaks a page
+   (``BlockAllocator.check()`` after every engine step), and a
+   preemption-resume replays a sampled request's tail deterministically.
+
+Statistical tests are seeded (no flakiness: same jax version -> same
+draws) and marked ``slow`` so CI can run them as their own job
+(``pytest -m slow``).  Acceptance thresholds use alpha = 1e-3 critical
+values from the Wilson-Hilferty approximation — no scipy dependency.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig
+from repro.core.quantize import QuantMode
+from repro.models import api
+from repro.serving.engine import Engine, Request
+from repro.serving.policy import (RequestState, SchedulingPolicy,
+                                  SpecConfig)
+from repro.serving.sampling import (GREEDY, SamplingParams, propose_ngram,
+                                    sample_tokens, spec_accept)
+
+slow = pytest.mark.slow
+
+
+# ---------------------------------------------------------------------------
+# Statistical helpers (numpy reference + chi-squared machinery)
+# ---------------------------------------------------------------------------
+
+def _chi2_crit(df: int, z: float = 3.0902) -> float:
+    """Upper critical value of chi2(df) at alpha ~= 1e-3 via the
+    Wilson-Hilferty cube approximation (within ~1% of exact for the
+    dof range used here; errs slightly permissive)."""
+    assert df >= 1
+    c = 2.0 / (9.0 * df)
+    return df * (1.0 - c + z * np.sqrt(c)) ** 3
+
+
+def _ref_filtered_probs(logits, temp, top_k, top_p):
+    """float64 numpy mirror of sampling._filter_logits + softmax: the
+    NeMo-ordered filter — scale by temperature, keep top-k, keep the
+    smallest sorted prefix with ``cum - prob <= top_p`` (top-1 always
+    survives) — then softmax over the kept set."""
+    scaled = np.asarray(logits, np.float64) / max(temp, 1e-4)
+    V = scaled.size
+    order = np.argsort(-scaled, kind="stable")   # jax top_k tie order
+    s = scaled[order]
+    drop_k = np.zeros(V, bool)
+    if top_k > 0:
+        drop_k[top_k:] = True
+    e = np.exp(s - s[~drop_k].max())
+    e[drop_k] = 0.0
+    probs = e / e.sum()
+    cum = np.cumsum(probs)
+    drop = drop_k | ((cum - probs) > top_p)
+    keep = np.zeros(V, bool)
+    keep[order[~drop]] = True
+    out = np.zeros(V)
+    kept = scaled[keep]
+    ee = np.exp(kept - kept.max())
+    out[keep] = ee / ee.sum()
+    return out
+
+
+def _chi2_vs_ref(counts, probs):
+    """One-sample chi-squared of observed counts against reference
+    probabilities; expected bins below 5 are merged into one. Returns
+    (stat, df). Draws on zero-probability tokens are asserted out
+    before the statistic (exact support check)."""
+    counts = np.asarray(counts, np.float64)
+    assert counts[probs == 0].sum() == 0, \
+        "draw outside the filtered support"
+    if (probs > 0).sum() == 1:           # degenerate support: exact
+        return 0.0, 1
+    n = counts.sum()
+    e = n * probs[probs > 0]
+    o = counts[probs > 0]
+    big = e >= 5
+    stat = float((((o - e) ** 2 / e)[big]).sum())
+    df = int(big.sum()) - 1
+    if (~big).any():
+        eo, oo = e[~big].sum(), o[~big].sum()
+        stat += (oo - eo) ** 2 / eo
+        df += 1
+    assert df >= 1
+    return stat, df
+
+
+def _two_sample_chi2(c1, c2, min_bin=8):
+    """Two-sample chi-squared over a shared support; bins with combined
+    count < min_bin merge into a rest bin. Returns (stat, df)."""
+    c1 = np.asarray(c1, np.float64)
+    c2 = np.asarray(c2, np.float64)
+    tot = c1 + c2
+    big = tot >= min_bin
+    o1 = np.append(c1[big], c1[~big].sum())
+    o2 = np.append(c2[big], c2[~big].sum())
+    use = (o1 + o2) > 0
+    o1, o2 = o1[use], o2[use]
+    n1, n2 = o1.sum(), o2.sum()
+    p = (o1 + o2) / (n1 + n2)
+    stat = float((((o1 - n1 * p) ** 2) / (n1 * p)).sum()
+                 + (((o2 - n2 * p) ** 2) / (n2 * p)).sum())
+    df = max(len(o1) - 1, 1)
+    return stat, df
+
+
+def _draw_counts(logits_row, sp: SamplingParams, n: int, seed0: int = 0):
+    """n independent draws from one logits row: lane i uses seed
+    seed0 + i at emission index 0 (draws depend only on (seed, step),
+    so distinct seeds are the independence axis)."""
+    V = logits_row.shape[-1]
+    lg = jnp.tile(jnp.asarray(logits_row, jnp.float32)[None], (n, 1))
+    toks = sample_tokens(
+        lg,
+        jnp.full((n,), sp.temperature, jnp.float32),
+        jnp.full((n,), sp.top_k, jnp.int32),
+        jnp.full((n,), sp.top_p, jnp.float32),
+        jnp.arange(seed0, seed0 + n, dtype=jnp.uint32),
+        jnp.zeros((n,), jnp.int32))
+    return np.bincount(np.asarray(toks), minlength=V)
+
+
+# ---------------------------------------------------------------------------
+# Sampler distribution: chi-squared vs the numpy softmax reference
+# ---------------------------------------------------------------------------
+
+@slow
+@pytest.mark.parametrize("temp", [0.7, 1.0, 1.6])
+def test_temperature_matches_softmax_reference(temp):
+    rng = np.random.default_rng(0)
+    logits = rng.normal(0.0, 1.0, 8).astype(np.float32)
+    sp = SamplingParams(temperature=temp)
+    counts = _draw_counts(logits, sp, 8000)
+    ref = _ref_filtered_probs(logits, temp, 0, 1.0)
+    stat, df = _chi2_vs_ref(counts, ref)
+    assert stat < _chi2_crit(df), (stat, df, counts, ref)
+
+
+@slow
+@pytest.mark.parametrize("top_k", [1, 3, 5])
+def test_top_k_support_and_frequencies(top_k):
+    rng = np.random.default_rng(1)
+    logits = rng.normal(0.0, 1.5, 16).astype(np.float32)
+    sp = SamplingParams(temperature=1.0, top_k=top_k)
+    counts = _draw_counts(logits, sp, 8000, seed0=10_000)
+    ref = _ref_filtered_probs(logits, 1.0, top_k, 1.0)
+    assert (ref > 0).sum() == top_k           # exact support size
+    stat, df = _chi2_vs_ref(counts, ref) if top_k > 1 else (0.0, 1)
+    if top_k == 1:                            # degenerate: exact check
+        assert counts[int(np.argmax(logits))] == 8000
+    else:
+        assert stat < _chi2_crit(df), (stat, df, counts, ref)
+
+
+@slow
+@pytest.mark.parametrize("top_p", [0.3, 0.6, 0.9])
+def test_top_p_nucleus_support_and_frequencies(top_p):
+    rng = np.random.default_rng(2)
+    logits = rng.normal(0.0, 1.5, 16).astype(np.float32)
+    sp = SamplingParams(temperature=1.0, top_p=top_p)
+    counts = _draw_counts(logits, sp, 8000, seed0=20_000)
+    ref = _ref_filtered_probs(logits, 1.0, 0, top_p)
+    # the nucleus rule keeps the smallest cum-prob prefix; every draw
+    # must land inside it (asserted inside _chi2_vs_ref)
+    stat, df = _chi2_vs_ref(counts, ref)
+    assert stat < _chi2_crit(df), (stat, df, counts, ref)
+
+
+@slow
+def test_combined_filters_match_reference():
+    rng = np.random.default_rng(3)
+    logits = rng.normal(0.0, 1.0, 32).astype(np.float32)
+    sp = SamplingParams(temperature=0.9, top_k=6, top_p=0.8)
+    counts = _draw_counts(logits, sp, 8000, seed0=30_000)
+    ref = _ref_filtered_probs(logits, 0.9, 6, 0.8)
+    assert 1 < (ref > 0).sum() <= 6      # both filters actually bite
+    stat, df = _chi2_vs_ref(counts, ref)
+    assert stat < _chi2_crit(df), (stat, df, counts, ref)
+
+
+def test_greedy_is_bitwise_argmax():
+    """temperature<=0 returns argmax of the *raw* logits regardless of
+    seed/step/filters — the greedy bit-exactness anchor."""
+    rng = np.random.default_rng(4)
+    logits = rng.normal(0.0, 3.0, (32, 64)).astype(np.float32)
+    toks = sample_tokens(
+        jnp.asarray(logits),
+        jnp.zeros(32, jnp.float32),
+        jnp.full((32,), 7, jnp.int32),        # ignored when greedy
+        jnp.full((32,), 0.5, jnp.float32),    # ignored when greedy
+        jnp.arange(32, dtype=jnp.uint32),
+        jnp.arange(32, dtype=jnp.int32))
+    np.testing.assert_array_equal(np.asarray(toks),
+                                  logits.argmax(-1).astype(np.int32))
+
+
+def test_draws_replayable_and_step_dependent():
+    rng = np.random.default_rng(5)
+    logits = jnp.asarray(rng.normal(0.0, 1.0, (64, 16)), jnp.float32)
+    args = (jnp.ones(64, jnp.float32), jnp.zeros(64, jnp.int32),
+            jnp.ones(64, jnp.float32), jnp.full((64,), 3, jnp.uint32))
+    a = sample_tokens(logits, *args, jnp.zeros(64, jnp.int32))
+    b = sample_tokens(logits, *args, jnp.zeros(64, jnp.int32))
+    c = sample_tokens(logits, *args, jnp.ones(64, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert (np.asarray(a) != np.asarray(c)).any()   # step moves the key
+
+
+def test_sampling_params_validation():
+    with pytest.raises(ValueError):
+        SamplingParams(top_k=-1)
+    with pytest.raises(ValueError):
+        SamplingParams(top_p=0.0)
+    with pytest.raises(ValueError):
+        SamplingParams(top_p=1.5)
+    with pytest.raises(ValueError):
+        SamplingParams(seed=-3)
+    assert SamplingParams().greedy
+    assert not SamplingParams(temperature=0.5).greedy
+
+
+# ---------------------------------------------------------------------------
+# Speculative acceptance rule (module level)
+# ---------------------------------------------------------------------------
+
+def _spec_args(n, temp=0.0, top_k=0, top_p=1.0, seed0=0, step=0):
+    return (jnp.full((n,), temp, jnp.float32),
+            jnp.full((n,), top_k, jnp.int32),
+            jnp.full((n,), top_p, jnp.float32),
+            jnp.arange(seed0, seed0 + n, dtype=jnp.uint32),
+            jnp.full((n,), step, jnp.int32))
+
+
+def test_spec_greedy_accepts_matching_prefix():
+    """Greedy lanes accept a draft iff it equals its own position's
+    argmax, so every emitted token is the argmax of its slot — the
+    token-level mechanism behind spec==non-spec greedy bit-identity."""
+    V, C = 16, 4
+    rng = np.random.default_rng(6)
+    logits = rng.normal(0.0, 1.0, (C, V)).astype(np.float32)
+    t = logits.argmax(-1)                      # target argmax sequence
+    # drafts match 2 slots then diverge
+    drafts = np.array([t[0], t[1], (t[2] + 1) % V], np.int32)
+    out, n_emit, okrow = spec_accept(
+        jnp.asarray(logits)[None], jnp.asarray(drafts)[None],
+        jnp.asarray([3], jnp.int32), *_spec_args(1))
+    assert int(n_emit[0]) == 3
+    np.testing.assert_array_equal(np.asarray(out)[0, :3], t[:3])
+    assert bool(np.asarray(okrow).all())
+
+    # full accept earns the bonus token from the last position
+    out, n_emit, _ = spec_accept(
+        jnp.asarray(logits)[None], jnp.asarray(t[:3], jnp.int32)[None],
+        jnp.asarray([3], jnp.int32), *_spec_args(1))
+    assert int(n_emit[0]) == 4
+    np.testing.assert_array_equal(np.asarray(out)[0], t)
+
+    # zero drafts degenerate to a plain decode step
+    out, n_emit, _ = spec_accept(
+        jnp.asarray(logits)[None], jnp.zeros((1, 3), jnp.int32),
+        jnp.asarray([0], jnp.int32), *_spec_args(1))
+    assert int(n_emit[0]) == 1
+    assert int(np.asarray(out)[0, 0]) == t[0]
+
+
+@slow
+@pytest.mark.parametrize("draft_rank", [0, 2, 6])
+def test_spec_acceptance_preserves_marginal(draft_rank):
+    """The accept-or-resample rule with a one-hot draft preserves the
+    target marginal exactly: accept draft x w.p. p(x), else resample
+    from p with x masked — chi-squared of the emitted first token over
+    6000 seeds against the filtered softmax, with the draft at high /
+    middling / low probability rank."""
+    V, N, temp = 8, 6000, 0.9
+    rng = np.random.default_rng(7)
+    logits = rng.normal(0.0, 1.2, (2, V)).astype(np.float32)
+    draft = int(np.argsort(-logits[0])[draft_rank])
+    out, n_emit, _ = spec_accept(
+        jnp.tile(jnp.asarray(logits)[None], (N, 1, 1)),
+        jnp.full((N, 1), draft, jnp.int32),
+        jnp.ones((N,), jnp.int32),
+        *_spec_args(N, temp=temp, seed0=40_000))
+    first = np.asarray(out)[:, 0]
+    assert (np.asarray(n_emit) >= 1).all()
+    counts = np.bincount(first, minlength=V)
+    ref = _ref_filtered_probs(logits[0], temp, 0, 1.0)
+    stat, df = _chi2_vs_ref(counts, ref)
+    assert stat < _chi2_crit(df), (stat, df, counts, ref)
+    # acceptance actually exercised: the draft token is emitted at
+    # least as often as its probability implies
+    assert counts[draft] > 0
+
+
+# ---------------------------------------------------------------------------
+# Prompt-lookup drafter
+# ---------------------------------------------------------------------------
+
+def test_ngram_proposes_periodic_continuation():
+    ctx = [1, 2, 3, 1, 2, 3, 1, 2]
+    np.testing.assert_array_equal(propose_ngram(ctx, 5),
+                                  [3, 1, 2, 3, 1])
+
+
+def test_ngram_wraps_constant_run():
+    # a run of identical tokens is period 1: the drafter proposes k
+    # copies, not just the leftover tail of the current cycle
+    np.testing.assert_array_equal(propose_ngram([5, 5, 5, 5], 4),
+                                  [5, 5, 5, 5])
+
+
+def test_ngram_no_match_returns_empty():
+    assert propose_ngram([1, 2, 3, 4], 4).size == 0
+    assert propose_ngram([7], 4).size == 0
+    assert propose_ngram([], 4).size == 0
+
+
+def test_ngram_prefers_longest_then_most_recent_match():
+    # suffix [9, 1] occurs twice; the most recent occurrence (followed
+    # by 4) supplies the draft, not the earlier one (followed by 2)
+    ctx = [9, 1, 2, 9, 1, 4, 9, 1]
+    got = propose_ngram(ctx, 1, ngram_max=2)
+    np.testing.assert_array_equal(got, [4])
+
+
+# ---------------------------------------------------------------------------
+# Engine integration: bit-exactness, distribution, rollback, resume
+# ---------------------------------------------------------------------------
+
+def _cfg(**kw):
+    base = dict(name="tiny", family="dense", n_layers=2, d_model=64,
+                n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=128,
+                attn_chunk=16)
+    base.update(kw)
+    return ArchConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = _cfg()
+    return api.init(jax.random.PRNGKey(0), cfg), cfg
+
+
+def _eng_kw(layout):
+    kw = dict(batch_size=2, max_len=64, kv_layout=layout)
+    if layout == "paged":
+        kw.update(page_size=32, n_pages=8)
+    return kw
+
+
+def _reqs(cfg, lens, news, seed=0, sampling=None):
+    rng = np.random.default_rng(seed)
+    return [Request(prompt=rng.integers(0, cfg.vocab_size, s)
+                    .astype(np.int32), max_new=n,
+                    sampling=(dataclasses.replace(sampling, seed=i)
+                              if sampling is not None else None))
+            for i, (s, n) in enumerate(zip(lens, news))]
+
+
+def _rep_reqs(cfg, n, seed=0, period=3, prompt_len=12, max_new=24,
+              sampling=None):
+    """Repetition-friendly prompts (tiled random motifs) so the
+    prompt-lookup drafter has something to accept."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        motif = rng.integers(0, cfg.vocab_size, period)
+        prompt = np.tile(motif, prompt_len // period + 1)[:prompt_len]
+        reqs.append(Request(
+            prompt=prompt.astype(np.int32), max_new=max_new,
+            sampling=(dataclasses.replace(sampling, seed=i)
+                      if sampling is not None else None)))
+    return reqs
+
+
+COMBOS = [("wave", "contiguous"), ("continuous", "contiguous"),
+          ("continuous", "paged")]
+
+
+@pytest.mark.parametrize("scheduler,layout", COMBOS)
+def test_temperature_zero_bit_identical_to_greedy(tiny, scheduler,
+                                                  layout):
+    """A SamplingParams with temperature 0 (whatever the other knobs
+    say) decodes bit-identically to a request with no sampling at all,
+    on every scheduler x layout combination."""
+    params, cfg = tiny
+    lens, news = [9, 21, 14, 6], [6, 5, 8, 4]
+    sp = SamplingParams(temperature=0.0, top_k=5, top_p=0.5, seed=9)
+    outs = {}
+    for tag, sampling in (("greedy", None), ("temp0", sp)):
+        eng = Engine(params, cfg, QuantMode.off(), scheduler=scheduler,
+                     **_eng_kw(layout))
+        outs[tag] = eng.generate(_reqs(cfg, lens, news, seed=11,
+                                       sampling=sampling))
+    for g, t in zip(outs["greedy"], outs["temp0"]):
+        np.testing.assert_array_equal(g.out, t.out)
+
+
+@pytest.mark.parametrize("scheduler,layout", COMBOS)
+def test_mixed_batch_keeps_greedy_lanes_bitwise(tiny, scheduler, layout):
+    """Sampled and greedy requests sharing decode dispatches: the
+    greedy members' outputs are bitwise what an all-greedy engine
+    produces (per-lane temperature 0 takes the raw-dtype argmax branch
+    inside the sampled closure)."""
+    params, cfg = tiny
+    lens, news = [9, 21, 14, 6], [6, 5, 8, 4]
+    ref = Engine(params, cfg, QuantMode.off(), scheduler=scheduler,
+                 **_eng_kw(layout))
+    ref_out = ref.generate(_reqs(cfg, lens, news, seed=13))
+
+    eng = Engine(params, cfg, QuantMode.off(), scheduler=scheduler,
+                 **_eng_kw(layout))
+    reqs = _reqs(cfg, lens, news, seed=13)
+    sp = SamplingParams(temperature=1.0, top_k=8)
+    for i in (1, 3):                       # lanes 1/3 sample
+        reqs[i].sampling = dataclasses.replace(sp, seed=i)
+    eng.generate(reqs)
+    for i in (0, 2):                       # greedy lanes are untouched
+        np.testing.assert_array_equal(reqs[i].out, ref_out[i].out)
+
+
+def test_sampled_run_is_replayable(tiny):
+    """(prompt, params, seed) fully determines a sampled run: two fresh
+    engines produce identical tokens, and a third with different seeds
+    diverges somewhere."""
+    params, cfg = tiny
+    sp = SamplingParams(temperature=1.0, top_k=16)
+
+    def run(seed_base):
+        eng = Engine(params, cfg, QuantMode.off(),
+                     scheduler="continuous", **_eng_kw("paged"))
+        reqs = _reqs(cfg, [12, 18, 9], [8, 6, 7], seed=17, sampling=sp)
+        for i, r in enumerate(reqs):
+            r.sampling = dataclasses.replace(sp, seed=seed_base + i)
+        eng.generate(reqs)
+        return [list(r.out) for r in reqs]
+
+    assert run(0) == run(0)
+    assert run(0) != run(100)
+
+
+@slow
+def test_engine_sampled_first_token_frequency(tiny):
+    """End-to-end distribution check: the admission-token draws of many
+    same-prompt requests (distinct seeds) are chi-squared-consistent
+    with the numpy-filtered softmax of the model's own prefill logits."""
+    params, cfg = tiny
+    rng = np.random.default_rng(21)
+    prompt = rng.integers(0, cfg.vocab_size, 16).astype(np.int32)
+    temp, top_k, N = 1.0, 8, 320
+    logits = np.asarray(api.prefill(params, cfg, jnp.asarray(prompt)[None],
+                                    QuantMode.off())[0])[0]
+    ref = _ref_filtered_probs(logits, temp, top_k, 1.0)
+
+    eng = Engine(params, cfg, QuantMode.off(), scheduler="continuous",
+                 batch_size=4, max_len=32)
+    reqs = [Request(prompt=prompt, max_new=1,
+                    sampling=SamplingParams(temperature=temp,
+                                            top_k=top_k, seed=i))
+            for i in range(N)]
+    eng.generate(reqs)
+    counts = np.bincount([int(r.out[0]) for r in reqs],
+                         minlength=cfg.vocab_size)
+    stat, df = _chi2_vs_ref(counts, ref)
+    assert stat < _chi2_crit(df), (stat, df)
+
+
+@pytest.mark.parametrize("layout", ["contiguous", "paged"])
+def test_spec_greedy_bit_identical_to_nonspec(tiny, layout):
+    """Distribution preservation, greedy arm: speculative decoding
+    changes how many forwards produce the tokens, never the tokens."""
+    params, cfg = tiny
+    reqs_a = (_rep_reqs(cfg, 3, seed=23)
+              + _reqs(cfg, [11, 17], [10, 12], seed=24))
+    reqs_b = (_rep_reqs(cfg, 3, seed=23)
+              + _reqs(cfg, [11, 17], [10, 12], seed=24))
+    ref = Engine(params, cfg, QuantMode.off(), scheduler="continuous",
+                 **_eng_kw(layout))
+    ref.generate(reqs_a)
+    eng = Engine(params, cfg, QuantMode.off(), scheduler="continuous",
+                 spec=SpecConfig(k=3), **_eng_kw(layout))
+    eng.generate(reqs_b)
+    for a, b in zip(reqs_a, reqs_b):
+        np.testing.assert_array_equal(a.out, b.out)
+    st = eng.stats()
+    assert st["spec_proposed_tokens"] > 0
+    assert 0.0 <= st["spec_acceptance"] <= 1.0
+
+
+@slow
+def test_spec_sampled_frequency_matches_nonspec(tiny):
+    """Distribution preservation, sampled arm: pooled token histograms
+    of spec vs non-spec runs at the same SamplingParams pass a
+    two-sample chi-squared (the *tokens* differ — acceptance consumes
+    different uniforms — but the distribution must not)."""
+    params, cfg = tiny
+    sp = SamplingParams(temperature=1.0, top_k=8)
+    counts = {}
+    for tag, spec in (("off", None), ("on", SpecConfig(k=3))):
+        eng = Engine(params, cfg, QuantMode.off(),
+                     scheduler="continuous", spec=spec,
+                     **_eng_kw("paged"))
+        reqs = _rep_reqs(cfg, 40, seed=29, max_new=16, sampling=sp)
+        eng.generate(reqs)
+        toks = np.concatenate([np.asarray(r.out) for r in reqs])
+        counts[tag] = np.bincount(toks, minlength=cfg.vocab_size)
+        if spec is not None:
+            st = eng.stats()
+            assert st["spec_accepted_tokens"] > 0   # rule exercised
+    stat, df = _two_sample_chi2(counts["off"], counts["on"])
+    assert stat < _chi2_crit(df), (stat, df)
+
+
+def test_spec_rollback_allocator_invariants(tiny):
+    """Rollback property: a seeded multi-request spec run with mixed
+    accept/reject traffic (repetitive + incompressible prompts, greedy
+    + sampled lanes) keeps the page accounting partitioned —
+    ``BlockAllocator.check()`` passes and in_use + free + cached ==
+    capacity after *every* engine step — and drains with zero leaked
+    pages."""
+    params, cfg = tiny
+    eng = Engine(params, cfg, QuantMode.off(), scheduler="continuous",
+                 batch_size=2, max_len=64, kv_layout="paged",
+                 page_size=32, n_pages=8, spec=SpecConfig(k=4))
+    sp = SamplingParams(temperature=0.8, top_k=12)
+    reqs = (_rep_reqs(cfg, 3, seed=31, max_new=20)
+            + _reqs(cfg, [13, 26, 9], [12, 8, 15], seed=32, sampling=sp)
+            + _rep_reqs(cfg, 2, seed=33, max_new=10, sampling=sp))
+    for r in reqs:
+        eng.submit(r)
+    steps = 0
+    while eng.busy:
+        eng.step()
+        steps += 1
+        assert steps < 400, "spec run failed to drain"
+        acct = eng._alloc.check()    # raises on any partition violation
+        assert (acct["in_use"] + acct["free"] + acct["cached"]
+                == eng._alloc.capacity)
+    assert all(r.state is RequestState.FINISHED for r in reqs)
+    assert eng._alloc.in_use == 0                  # zero leaked pages
+    assert eng.stats()["spec_proposed_tokens"] > 0
+
+
+def test_spec_respects_eos_and_budget(tiny):
+    """Accepted drafts past the first EOS are discarded; a lane never
+    emits more than its max_new budget even when every draft lands."""
+    params, cfg = tiny
+    eng = Engine(params, cfg, QuantMode.off(), scheduler="continuous",
+                 eos_id=0, spec=SpecConfig(k=4), **_eng_kw("paged"))
+    reqs = _rep_reqs(cfg, 4, seed=37, max_new=11)
+    done = eng.generate(reqs)
+    for r in done:
+        assert len(r.out) <= 11
+        hits = np.flatnonzero(np.asarray(r.out) == 0)
+        if hits.size:                    # EOS kept, nothing after it
+            assert hits[0] == len(r.out) - 1
+
+
+def test_preemption_resume_replays_sampled_tail(tiny):
+    """Preemption-resume under sampling: the resumed request re-seeds
+    from its emitted-token count, so its output is bit-identical to an
+    uninterrupted run — the sampled analogue of the greedy resume
+    guarantee in test_faults.py."""
+    params, cfg = tiny
+    sp_lo = SamplingParams(temperature=0.9, top_k=12, seed=3)
+    sp_hi = SamplingParams(temperature=0.7, top_k=6, seed=4)
+
+    def mk():
+        rng = np.random.default_rng(41)
+        lo = Request(prompt=rng.integers(0, cfg.vocab_size, 40)
+                     .astype(np.int32), max_new=10, priority=0,
+                     deadline_ms=1e7, sampling=sp_lo)
+        hi = Request(prompt=rng.integers(0, cfg.vocab_size, 38)
+                     .astype(np.int32), max_new=8, priority=5,
+                     sampling=sp_hi)
+        return lo, hi
+
+    solo = Engine(params, cfg, QuantMode.off(), scheduler="continuous",
+                  batch_size=2, max_len=64, kv_layout="paged",
+                  page_size=32, n_pages=3)
+    lo_ref, hi_ref = mk()
+    solo.generate([lo_ref])
+    solo.generate([hi_ref])
+
+    eng = Engine(params, cfg, QuantMode.off(), scheduler="continuous",
+                 batch_size=2, max_len=64, kv_layout="paged",
+                 page_size=32, n_pages=3,
+                 policy=SchedulingPolicy(backoff_base_s=0.001))
+    lo, hi = mk()
+    eng.submit(lo)
+    eng.step()
+    assert lo.state is RequestState.RUNNING
+    eng.submit(hi)
+    eng.drain()
+    assert lo.preemptions >= 1
+    np.testing.assert_array_equal(lo.out, lo_ref.out)
+    np.testing.assert_array_equal(hi.out, hi_ref.out)
+    assert eng._alloc.in_use == 0
+
+
+def test_spec_requires_continuous_scheduler(tiny):
+    params, cfg = tiny
+    with pytest.raises(ValueError, match="continuous"):
+        Engine(params, cfg, QuantMode.off(), scheduler="wave",
+               spec=SpecConfig(k=2), batch_size=2, max_len=64)
+
+
+def test_spec_config_validation():
+    with pytest.raises(ValueError):
+        SpecConfig(k=0)
+    with pytest.raises(ValueError):
+        SpecConfig(ngram_min=3, ngram_max=2)
+    with pytest.raises(ValueError):
+        SpecConfig(ngram_min=0)
