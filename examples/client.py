@@ -1,0 +1,153 @@
+"""Minimal streaming client for the HTTP/SSE serving front end.
+
+    # terminal 1: a demo server on a tiny random-init model
+    PYTHONPATH=src python -m repro.serving.server --port 8100
+
+    # terminal 2: stream a generation
+    PYTHONPATH=src python examples/client.py --port 8100 \
+        --prompt 1,2,3,4 --max-new 32
+
+Stdlib only (one socket, HTTP/1.1, ``Connection: close``). Demonstrates
+the three client-side contracts of docs/server.md:
+
+* **SSE consumption** — ``event: token`` frames stream as the engine
+  emits them (a frame carrying several tokens is a coalesced flush from
+  the server's bounded buffer); ``event: done`` carries the terminal
+  lifecycle state.
+* **Retry-After honoring** — a 429 (admission shed) or 503 (draining)
+  response names its backoff; the client sleeps exactly that long
+  before retrying (``X-Retry-After-S`` when present — exact float —
+  else the integer ``Retry-After``), up to ``--retries`` attempts.
+  Retrying *sooner* than the server asked defeats overload shedding.
+* **Clean Ctrl-C disconnect** — closing the socket mid-stream is the
+  whole protocol: the server cancels the request within one engine
+  step and frees its KV pages. No goodbye frame needed.
+
+Payloads speak token ids (ints), not text — tokenization is out of
+scope for the reproduction.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import socket
+import sys
+import time
+
+
+def _read_headers(sock_file):
+    status = sock_file.readline().decode("latin1")
+    if not status:
+        raise ConnectionError("server closed the connection")
+    code = int(status.split()[1])
+    headers = {}
+    while True:
+        line = sock_file.readline().decode("latin1")
+        if line in ("\r\n", "\n", ""):
+            break
+        if ":" in line:
+            k, v = line.split(":", 1)
+            headers[k.strip().lower()] = v.strip()
+    return code, headers
+
+
+def _sse_events(sock_file):
+    """Yield (event, data_dict) frames until the connection closes."""
+    event, data = None, None
+    for raw in sock_file:
+        line = raw.decode().rstrip("\n").rstrip("\r")
+        if line.startswith("event:"):
+            event = line[6:].strip()
+        elif line.startswith("data:"):
+            data = json.loads(line[5:].strip())
+        elif not line and event is not None:
+            yield event, data
+            event, data = None, None
+
+
+def request_once(host: str, port: int, body: dict, timeout_s: float):
+    """One POST /v1/generate. Returns ('ok', result) after a completed
+    stream, or ('retry', seconds) when the server shed/drained us."""
+    sock = socket.create_connection((host, port), timeout=timeout_s)
+    try:
+        payload = json.dumps(body).encode()
+        sock.sendall((f"POST /v1/generate HTTP/1.1\r\nHost: {host}\r\n"
+                      f"Content-Type: application/json\r\n"
+                      f"Content-Length: {len(payload)}\r\n"
+                      f"Connection: close\r\n\r\n").encode() + payload)
+        f = sock.makefile("rb")
+        code, headers = _read_headers(f)
+        if code in (429, 503):
+            # honor the server's backoff — exact float when offered
+            wait = float(headers.get("x-retry-after-s",
+                                     headers.get("retry-after", "1")))
+            return "retry", wait
+        if code != 200:
+            raise RuntimeError(f"HTTP {code}: {f.read().decode()!r}")
+        tokens, result = [], None
+        t0 = time.perf_counter()
+        for event, data in _sse_events(f):
+            if event == "token":
+                if not tokens:
+                    print(f"# first token after "
+                          f"{(time.perf_counter()-t0)*1e3:.0f}ms",
+                          file=sys.stderr)
+                tokens.extend(data["tokens"])
+                mark = "+" if data.get("coalesced") else ""
+                print(f"token[{data['i']}]{mark}: {data['tokens']}")
+            elif event == "done":
+                result = data
+                break
+        if result is None:
+            raise ConnectionError("stream ended without a done event")
+        return "ok", result
+    finally:
+        sock.close()   # Ctrl-C lands here too: close IS the cancel
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8100)
+    ap.add_argument("--prompt", default="1,2,3,4",
+                    help="comma-separated token ids")
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--priority", type=int, default=0)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--retries", type=int, default=5,
+                    help="attempts when shed (429) or draining (503)")
+    ap.add_argument("--timeout-s", type=float, default=60.0)
+    args = ap.parse_args(argv)
+
+    body = {"prompt": [int(t) for t in args.prompt.split(",")],
+            "max_new": args.max_new, "priority": args.priority,
+            "stream": True}
+    if args.temperature > 0:
+        body.update(temperature=args.temperature, seed=args.seed)
+
+    try:
+        for attempt in range(args.retries + 1):
+            kind, value = request_once(args.host, args.port, body,
+                                       args.timeout_s)
+            if kind == "ok":
+                print(f"done: state={value['state']} "
+                      f"n_tokens={value['n_tokens']}"
+                      + (f" error={value['error']}" if value["error"]
+                         else ""))
+                return 0 if value["state"] == "finished" else 2
+            print(f"# shed/draining — retrying in {value:g}s "
+                  f"(attempt {attempt + 1}/{args.retries})",
+                  file=sys.stderr)
+            time.sleep(value)
+        print("# out of retries", file=sys.stderr)
+        return 3
+    except KeyboardInterrupt:
+        # socket already closed by the finally in request_once; the
+        # server cancels our request within one engine step
+        print("\n# interrupted — disconnect sent", file=sys.stderr)
+        return 130
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -19,6 +19,11 @@ requests are submitted one by one and tokens stream back per step via
 --temperature/--top-k/--top-p sample instead of greedy argmax (seeded,
 replayable); --spec-k K adds self-drafting speculative decoding on the
 continuous scheduler — same tokens, fewer forwards (docs/sampling.md).
+
+--http HOST:PORT serves the engine over the asyncio HTTP/SSE front end
+instead of the scripted demo (admission shedding via --max-queue-depth,
+SIGTERM drains gracefully — docs/server.md); stream tokens back with
+examples/client.py.
 """
 import argparse
 
@@ -91,13 +96,23 @@ def main():
     ap.add_argument("--metrics", action="store_true",
                     help="instrument kernel dispatches and print the "
                          "Prometheus metrics snapshot at exit")
+    ap.add_argument("--http", default="", metavar="HOST:PORT",
+                    help="serve over HTTP/SSE instead of the scripted "
+                         "demo (SIGTERM drains — docs/server.md; "
+                         "examples/client.py streams tokens back)")
+    ap.add_argument("--max-queue-depth", type=int, default=None,
+                    help="with --http: shed (429 + Retry-After) past "
+                         "this queue depth (docs/server.md)")
     args = ap.parse_args()
     if args.kv_layout == "paged" or args.spec_k > 0:
         args.scheduler = "continuous"  # paged / spec are continuous-only
+    if args.http:
+        args.scheduler = "continuous"  # token streaming is per-slot
     args.policy = SchedulingPolicy(deadline_ms=args.deadline_ms,
                                    ttft_deadline_ms=args.ttft_deadline_ms,
                                    preemption=args.preemption,
-                                   max_retries=args.max_retries)
+                                   max_retries=args.max_retries,
+                                   max_queue_depth=args.max_queue_depth)
     args.spec = SpecConfig(k=args.spec_k) if args.spec_k > 0 else None
     args.sampling = (SamplingParams(temperature=args.temperature,
                                     top_k=args.top_k, top_p=args.top_p,
@@ -154,6 +169,14 @@ def main():
 
 
 def _run(eng, cfg, args):
+    if args.http:
+        import json
+        from repro.serving.server import ServerConfig, serve
+        host, _, port = args.http.rpartition(":")
+        report = serve(eng, ServerConfig(host=host or "127.0.0.1",
+                                         port=int(port or 8100)))
+        print("drain report: " + json.dumps(report), flush=True)
+        raise SystemExit(0 if report["clean"] else 1)
     rng = np.random.default_rng(0)
     # mixed-length traffic: the regime where continuous batching wins.
     # Under --kv-layout paged every request shares a system prompt, so

@@ -6,7 +6,7 @@ leave zero leaked pages (docs/robustness.md).
 
     PYTHONPATH=src python scripts/chaos_smoke.py
 
-Three scenarios, all deterministic (seeded injector + greedy decode):
+Four scenarios, all deterministic (seeded injector + greedy decode):
 
 1. lifecycle — a tight paged pool where a high-priority arrival
    preempts the running request, a zero-deadline request times out,
@@ -14,12 +14,17 @@ Three scenarios, all deterministic (seeded injector + greedy decode):
 2. nan-isolation — a poisoned decode lane fails only its own request.
 3. corruption — a truncated artifact tensor file is rejected with a
    descriptive IntegrityError, not a zip traceback.
+4. server-supervisor — the HTTP front end's EngineSupervisor survives
+   an injected step failure: the poisoned lane fails terminally, the
+   bystander requeues and resumes bit-identically, an over-depth
+   submit sheds loudly, and quiescence leaves zero leaked pages.
 
 Exit 0 on success, 1 with a message on the first violated invariant.
 """
 import pathlib
 import sys
 import tempfile
+import time
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
                        / "src"))
@@ -36,7 +41,8 @@ from repro.models import api
 from repro.obs import MetricsRegistry, Tracer, validate_trace
 from repro.serving.engine import Engine, Request
 from repro.serving.faults import FaultInjector, corrupt_file
-from repro.serving.policy import RequestState, SchedulingPolicy
+from repro.serving.policy import RequestState, SchedulingPolicy, ShedError
+from repro.serving.server import EngineSupervisor
 
 CFG = ArchConfig(name="chaos", family="dense", n_layers=2, d_model=64,
                  n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=128,
@@ -142,11 +148,65 @@ def scenario_corruption(params):
             raise AssertionError("truncated artifact loaded silently")
 
 
+def scenario_server_supervisor(params):
+    metrics = MetricsRegistry()
+    fi = FaultInjector(seed=0).inject("failed_step", at=2, lane=0)
+    eng = Engine(params, CFG, QuantMode.off(), batch_size=2, max_len=64,
+                 scheduler="continuous", kv_layout="paged", page_size=32,
+                 n_pages=6,
+                 policy=SchedulingPolicy(deadline_ms=1e9,  # burst cap on
+                                         max_queue_depth=2),
+                 metrics=metrics)
+    # fault-free twin for the bit-identical-resume assertion
+    ref = Engine(params, CFG, QuantMode.off(), batch_size=2, max_len=64,
+                 scheduler="continuous", kv_layout="paged", page_size=32,
+                 n_pages=6)
+    victim = _req(16, 12, seed=30)
+    bystander = _req(24, 12, seed=31)
+    ref_out = ref.generate([_req(24, 12, seed=31)])[0].out
+
+    sup = EngineSupervisor(eng, faults=fi, worker_poll_s=0.005)
+    sup.start()
+    try:
+        sup.submit(victim)           # -> lane 0: blamed on the 3rd step
+        sup.submit(bystander)        # -> lane 1: requeued, then resumed
+        try:
+            sup.submit(_req(8, 4, seed=32))
+        except ShedError as e:
+            shed = e.request
+        else:
+            raise AssertionError("over-depth submit was not shed")
+        deadline = time.monotonic() + 30
+        while not sup.idle():
+            assert time.monotonic() < deadline, "supervisor never quiesced"
+            time.sleep(0.01)
+    finally:
+        sup.stop()
+
+    assert victim.state is RequestState.FAILED, victim.state
+    assert "supervisor" in victim.error, victim.error
+    assert bystander.state is RequestState.FINISHED, bystander.state
+    np.testing.assert_array_equal(bystander.out, ref_out)
+    assert shed.state is RequestState.SHED, shed.state
+    assert sup.restarts == 1, sup.restarts
+    st = sup.stats()
+    assert sum(st["terminal"].values()) == st["submitted"] == 3, st
+    assert st["blocks_in_use"] == 0, "leaked pages"
+    eng._alloc.check()
+    snap = metrics.snapshot()
+    assert snap["serving_requests_shed_total"][0]["value"] == 1
+    assert snap["serving_supervisor_restarts_total"][0]["value"] == 1
+    print(f"server-supervisor OK: victim failed ({victim.error!r}), "
+          f"bystander resumed bit-identically after restart, 1 shed, "
+          f"0 leaked pages")
+
+
 def main():
     params = api.init(jax.random.PRNGKey(0), CFG)
     scenario_lifecycle(params)
     scenario_nan_isolation(params)
     scenario_corruption(params)
+    scenario_server_supervisor(params)
     print("chaos smoke: all scenarios green")
     return 0
 

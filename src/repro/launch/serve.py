@@ -23,6 +23,12 @@ Observability: --trace OUT.json exports a Chrome trace of the run
 (request lifecycles + engine steps, open in Perfetto); --metrics
 instruments kernel dispatches and prints the Prometheus metrics
 snapshot at exit (docs/observability.md).
+
+HTTP serving: --http HOST:PORT skips the synthetic throughput run and
+starts the asyncio HTTP/SSE front end over the built engine instead
+(POST /v1/generate, /healthz, /readyz, /metrics; admission shedding via
+--max-queue-depth / --admit-token-budget; SIGTERM drains gracefully —
+docs/server.md). ``examples/client.py`` is the matching client.
 """
 from __future__ import annotations
 
@@ -114,6 +120,19 @@ def main():
     ap.add_argument("--spec-ngram", type=int, default=3,
                     help="longest context n-gram the prompt-lookup "
                          "drafter matches (with --spec-k)")
+    ap.add_argument("--http", default="", metavar="HOST:PORT",
+                    help="serve over HTTP/SSE instead of the synthetic "
+                         "throughput run (PORT 0 = ephemeral; SIGTERM "
+                         "drains gracefully — docs/server.md)")
+    ap.add_argument("--max-queue-depth", type=int, default=None,
+                    help="admission cap: shed (429 + Retry-After) past "
+                         "this queue depth instead of queueing unboundedly")
+    ap.add_argument("--admit-token-budget", type=int, default=None,
+                    help="admission cap: shed when queued prompt+max_new "
+                         "tokens would exceed this budget")
+    ap.add_argument("--drain-timeout-s", type=float, default=30.0,
+                    help="with --http: how long SIGTERM waits for "
+                         "in-flight requests before cancelling stragglers")
     ap.add_argument("--trace", default="", metavar="OUT.json",
                     help="export a Chrome trace of the run — open in "
                          "https://ui.perfetto.dev "
@@ -142,7 +161,9 @@ def main():
     policy = SchedulingPolicy(deadline_ms=args.deadline_ms,
                               ttft_deadline_ms=args.ttft_deadline_ms,
                               preemption=args.preemption,
-                              max_retries=args.max_retries)
+                              max_retries=args.max_retries,
+                              max_queue_depth=args.max_queue_depth,
+                              admit_token_budget=args.admit_token_budget)
     sampling = (SamplingParams(temperature=args.temperature,
                                top_k=args.top_k, top_p=args.top_p,
                                seed=args.sample_seed)
@@ -170,6 +191,8 @@ def main():
               f"backend={args.backend}, scheduler={args.scheduler}, "
               f"kv_cache={args.kv_cache}, kv_layout={args.kv_layout}, "
               f"no re-quantization)")
+        if args.http:
+            return _serve_http(eng, args)
         stats = eng.throughput(n_requests=args.requests,
                                prompt_len=args.prompt_len,
                                max_new=args.max_new, sampling=sampling)
@@ -217,6 +240,8 @@ def main():
                  kv_layout=args.kv_layout, page_size=args.page_size,
                  n_pages=args.n_pages, metrics=metrics, tracer=tracer,
                  policy=policy, spec=spec)
+    if args.http:
+        return _serve_http(eng, args)
     stats = eng.throughput(n_requests=args.requests,
                            prompt_len=args.prompt_len,
                            max_new=args.max_new, sampling=sampling)
@@ -230,6 +255,24 @@ def main():
               f"{stats['blocks_evicted']} evicted, "
               f"{eng.kv_bytes_resident()} KV bytes resident")
     _obs_finish(eng, args)
+
+
+def _serve_http(eng, args) -> None:
+    """--http epilogue: run the asyncio front end until SIGTERM/SIGINT,
+    then print the drain report and exit by its verdict."""
+    import json as _json
+    import sys as _sys
+
+    from repro.serving.server import ServerConfig, serve
+
+    host, _, port = args.http.rpartition(":")
+    report = serve(eng, ServerConfig(
+        host=host or "127.0.0.1", port=int(port or 8100),
+        drain_timeout_s=args.drain_timeout_s))
+    print("drain report: " + _json.dumps(report), flush=True)
+    _obs_finish(eng, args)
+    if not report["clean"]:
+        _sys.exit(1)
 
 
 def _obs_finish(eng, args) -> None:

@@ -87,7 +87,7 @@ from repro.models import api
 from repro.obs import MetricsRegistry, Tracer
 from repro.serving.faults import FaultInjector
 from repro.serving.policy import (RequestQueue, RequestState,
-                                  SchedulingPolicy, SpecConfig,
+                                  SchedulingPolicy, ShedError, SpecConfig,
                                   TERMINAL_STATES, pick_victim)
 from repro.serving.sampling import GREEDY, SamplingParams, propose_ngram
 from repro.serving import sampling
@@ -620,7 +620,7 @@ class Engine:
                                 "requests at quiescence")
             for s in (RequestState.FINISHED, RequestState.CANCELLED,
                       RequestState.TIMED_OUT, RequestState.FAILED,
-                      RequestState.PREEMPTED)}
+                      RequestState.PREEMPTED, RequestState.SHED)}
         self._c_preempt = reg.counter(
             "serving_preemptions_total",
             help="running requests evicted from a lane (priority "
@@ -634,6 +634,11 @@ class Engine:
             "serving_rejected_never_fit_total",
             help="requests rejected at admission because prompt+budget "
                  "can never fit the pool (terminal FAILED, not requeued)")
+        self._c_shed = reg.counter(
+            "serving_requests_shed_total",
+            help="requests rejected by admission control at submit() "
+                 "(queue depth / per-priority / token-budget caps — "
+                 "docs/server.md); terminal SHED, never requeued")
         self._c_spec_proposed = reg.counter(
             "serving_spec_proposed_total", unit="tokens",
             help="draft tokens proposed by the prompt-lookup drafter "
@@ -800,7 +805,9 @@ class Engine:
         self._sample_tokens = jax.jit(sampling.sample_tokens)
 
         # streaming state
-        self._queue = RequestQueue()      # priority + backoff admission
+        self._queue = RequestQueue(       # priority + backoff admission
+            max_depth=self.policy.max_queue_depth)
+        self._shed_streak = 0             # consecutive sheds -> Retry-After
         self._by_id: dict = {}            # request_id -> live Request
         self._next_id = 0                 # request_id autonumber
         self._slots: List[Optional[_Slot]] = [None] * self.B
@@ -952,7 +959,18 @@ class Engine:
         Assigns a ``request_id`` (for :meth:`cancel`) when the request
         has none, applies the engine policy's default deadlines to
         requests that don't carry their own, and moves the request into
-        the QUEUED lifecycle state."""
+        the QUEUED lifecycle state.
+
+        **Admission control** (``policy.max_queue_depth`` /
+        ``max_queue_depth_per_priority`` / ``admit_token_budget``): an
+        over-limit request is *shed*, not silently requeued — it lands
+        in the terminal SHED state (still counted toward submitted, so
+        ``sum(terminal) == submitted`` holds) and :class:`ShedError` is
+        raised with a ``retry_after_s`` that grows along the policy's
+        backoff schedule for each *consecutive* shed (reset on the next
+        successful admission, capped at ``backoff_s(6)``) — sustained
+        overload pushes clients further out instead of inviting an
+        immediate retry storm."""
         req.t_submit = time.time()             # absolute (logs)
         req.m_submit = time.perf_counter()     # durations
         if req.request_id is None:
@@ -962,9 +980,21 @@ class Engine:
             req.deadline_ms = self.policy.deadline_ms
         if req.ttft_deadline_ms is None:
             req.ttft_deadline_ms = self.policy.ttft_deadline_ms
+        self._c_submitted.inc()
+        reason = self.policy.shed_reason(self._queue, req)
+        if reason is not None:
+            self._shed_streak += 1
+            retry_after = self.policy.backoff_s(min(self._shed_streak, 6))
+            self._c_shed.inc()
+            if self.tracer is not None:
+                self.tracer.instant("shed", track="engine", cat="request",
+                                    request=req.request_id, reason=reason)
+            self._finish(req, req._gen, state=RequestState.SHED,
+                         error=f"shed by admission control: {reason}")
+            raise ShedError(req, reason, retry_after)
+        self._shed_streak = 0
         req.state = RequestState.QUEUED
         self._by_id[req.request_id] = req
-        self._c_submitted.inc()
         if self.tracer is not None and req.trace_track is None:
             # Index comes from the tracer, not the engine, so request
             # tracks stay unique when several engines share one tracer.
@@ -999,6 +1029,50 @@ class Engine:
                      error="cancelled by client")
         self._g_queue_depth.set(len(self._queue))
         return True
+
+    def fail_lane(self, lane: int, error: str):
+        """Supervisor hook: terminal-FAIL the request on ``lane`` and
+        free the lane + its pages. Used after a stuck/failed engine step
+        to remove the poisoned request — re-running it would poison the
+        restarted loop the same way. Returns the failed request, or
+        None for an empty lane."""
+        sl = self._slots[lane]
+        if sl is None:
+            return None
+        req = sl.req
+        self._slots[lane] = None
+        if self.kv_layout == "paged":
+            self._release_paged(lane)
+            self._sync_alloc_metrics()
+        if self.tracer is not None and req.trace_track is not None:
+            self.tracer.instant("fail_lane", track=req.trace_track,
+                                cat="request", lane=lane, reason=error)
+        self._finish(req, req._gen, state=RequestState.FAILED, error=error)
+        return req
+
+    def requeue_lane(self, lane: int, reason: str):
+        """Supervisor hook: return ``lane``'s request to the queue
+        *without* charging its preemption retry budget — bystander lanes
+        of a failed step did nothing wrong. The lane and its pages are
+        freed; tokens emitted so far stay in ``_gen``, so re-admission
+        re-prefills prompt+gen and resumes bit-identically under greedy
+        decoding (the recompute-resume path preemption uses). Returns
+        the requeued request, or None for an empty lane."""
+        sl = self._slots[lane]
+        if sl is None:
+            return None
+        req = sl.req
+        self._slots[lane] = None
+        if self.kv_layout == "paged":
+            self._release_paged(lane)
+            self._sync_alloc_metrics()
+        if self.tracer is not None and req.trace_track is not None:
+            self.tracer.instant("requeue", track=req.trace_track,
+                                cat="request", lane=lane, reason=reason)
+        req.state = RequestState.QUEUED
+        self._queue.push_front(req)
+        self._g_queue_depth.set(len(self._queue))
+        return req
 
     def step(self) -> List[Request]:
         """Run one scheduler step; return the requests it completed.
@@ -1101,7 +1175,9 @@ class Engine:
             req.t_first = req.t_done         # tokens delivered at once
         self._c_terminal[state].inc()
         self._c_useful.inc(max(len(req.out) - 1, 0))
-        if req.m_submit:
+        if req.m_submit and state is not RequestState.SHED:
+            # shed requests never ran — a ~0 latency sample would fake
+            # great percentiles exactly when the server is overloaded
             self._h_latency.observe(req.m_done - req.m_submit)
             if req.m_first:
                 # no first token (expired in queue, failed prefill):

@@ -35,6 +35,28 @@ point                effect when fired
                      and apply :func:`corrupt_file` to an artifact copy
 ===================  ======================================================
 
+Points registered in the HTTP server (``repro.serving.server``, checked
+by the supervisor worker and the SSE writer — docs/server.md):
+
+===================  ======================================================
+point                effect when fired
+===================  ======================================================
+``stuck_step``       the supervisor worker hangs *before* the next engine
+                     step for up to ``payload["hang_s"]`` seconds (it
+                     wakes early on the watchdog's abort signal), then
+                     raises ``StuckStepError`` — exercises watchdog
+                     detection + loop restart
+``failed_step``      the supervisor worker raises ``RuntimeError`` in
+                     place of the next engine step — exercises the
+                     fail-poisoned-lane + requeue-bystanders recovery
+``disconnect``       the SSE connection is force-closed before writing
+                     the next event (``at=N`` = drop after N events) —
+                     exercises mid-stream cancel
+``slow_consumer``    the SSE writer sleeps ``payload["delay_s"]`` before
+                     each flush — drives the bounded buffer into
+                     coalesced-flush degradation
+===================  ======================================================
+
 Rules are matched against the point's own invocation counter (the
 ``at``-th call, every ``every``-th call, or an independent seeded
 coin-flip with probability ``prob``), fire at most ``times`` times

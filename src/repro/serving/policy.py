@@ -9,17 +9,21 @@ decides *which* request runs and *when one must stop*:
 
   .. code-block:: text
 
-      QUEUED ──admit──▶ RUNNING ──▶ FINISHED      (EOS / budget)
-        │  ▲               │ ├────▶ CANCELLED     (Engine.cancel)
-        │  └──requeue──────┤ ├────▶ TIMED_OUT     (deadline)
-        │   (retry+backoff)│ └────▶ FAILED        (NaN guard / never fits)
-        ├──▶ CANCELLED     └────▶ PREEMPTED       (retry budget exhausted)
-        └──▶ TIMED_OUT
+      submit ─▶ QUEUED ──admit──▶ RUNNING ──▶ FINISHED  (EOS / budget)
+        │         │  ▲               │ ├────▶ CANCELLED (Engine.cancel)
+        │         │  └──requeue──────┤ ├────▶ TIMED_OUT (deadline)
+        │         │  (retry+backoff) │ └────▶ FAILED    (NaN / never fits)
+        │         ├──▶ CANCELLED     └─────▶ PREEMPTED  (retries spent)
+        │         └──▶ TIMED_OUT
+        └──▶ SHED   (admission control: queue/token caps — docs/server.md)
 
 * :class:`SchedulingPolicy` — the knobs: default TTFT / end-to-end
   deadlines, the preemption switch, the retry budget and backoff for
-  preempted requests, and how often a decode burst is interrupted to
-  check running deadlines.
+  preempted requests, how often a decode burst is interrupted to check
+  running deadlines, and the **admission-control caps**
+  (``max_queue_depth`` / ``max_queue_depth_per_priority`` /
+  ``admit_token_budget``) that turn overload into descriptive
+  :class:`ShedError` rejections instead of unbounded queue growth.
 
 * :class:`RequestQueue` — the admission queue: strict priority order
   (higher ``Request.priority`` first), FIFO within a priority level,
@@ -28,7 +32,16 @@ decides *which* request runs and *when one must stop*:
   until its ``not_before`` stamp passes, so a preemption storm cannot
   thrash the same pages every step. Cancelled / expired entries are
   dropped lazily (the engine flips ``Request.state``; the queue skips
-  anything no longer ``QUEUED``).
+  anything no longer ``QUEUED``). ``max_depth`` bounds how many live
+  entries :meth:`push` accepts (``push_front`` — the preemption
+  requeue — is exempt: work already admitted once must be able to
+  return).
+
+* :class:`ShedError` — raised by ``Engine.submit`` when admission
+  control rejects a request. Carries the (now terminal-``SHED``)
+  request, the human-readable reason, and ``retry_after_s`` derived
+  from the backoff schedule — the HTTP front end maps it to a 429
+  with a ``Retry-After`` header (``docs/server.md``).
 
 * :func:`pick_victim` — the preemption choice: among running requests
   below the admission's priority, evict the one with the least progress
@@ -48,7 +61,7 @@ import math
 from typing import Iterable, List, Optional, Tuple
 
 __all__ = ["RequestState", "TERMINAL_STATES", "SchedulingPolicy",
-           "RequestQueue", "pick_victim"]
+           "RequestQueue", "ShedError", "pick_victim"]
 
 
 class RequestState(enum.Enum):
@@ -61,6 +74,7 @@ class RequestState(enum.Enum):
     TIMED_OUT = "timed_out"      # TTFT or end-to-end deadline exceeded
     FAILED = "failed"            # non-finite logits / can never fit
     PREEMPTED = "preempted"      # evicted and out of retry budget
+    SHED = "shed"                # rejected at submit by admission control
 
     @property
     def terminal(self) -> bool:
@@ -69,7 +83,22 @@ class RequestState(enum.Enum):
 
 TERMINAL_STATES = frozenset({
     RequestState.FINISHED, RequestState.CANCELLED, RequestState.TIMED_OUT,
-    RequestState.FAILED, RequestState.PREEMPTED})
+    RequestState.FAILED, RequestState.PREEMPTED, RequestState.SHED})
+
+
+class ShedError(RuntimeError):
+    """``Engine.submit`` rejected the request (admission control).
+
+    The request is already terminal (``SHED``, counted in
+    ``stats()["terminal"]`` so ``sum(terminal) == submitted`` holds);
+    the caller must not retry before ``retry_after_s`` — the HTTP front
+    end surfaces it as ``Retry-After`` on a 429 response."""
+
+    def __init__(self, request, reason: str, retry_after_s: float):
+        super().__init__(reason)
+        self.request = request
+        self.reason = reason
+        self.retry_after_s = retry_after_s
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,7 +123,19 @@ class SchedulingPolicy:
     scheduler dispatches back-to-back while any running request carries
     a deadline — deadlines are only observable between bursts, so the
     cap is the enforcement granularity (in steps). Deadline-free traffic
-    keeps the unbounded burst (one host sync per lane completion)."""
+    keeps the unbounded burst (one host sync per lane completion).
+
+    ``max_queue_depth`` / ``max_queue_depth_per_priority`` /
+    ``admit_token_budget`` are the **admission-control caps** checked by
+    ``Engine.submit`` *before* a request enters the queue; an over-limit
+    request is shed (terminal ``SHED`` state + :class:`ShedError`) with
+    a ``Retry-After`` from the same backoff schedule that paces
+    preemption re-admissions. All three default to None — never shed —
+    so library users are unaffected unless they opt in. The token budget
+    counts ``len(prompt) + max_new`` over queued requests: the worst
+    case KV/compute debt admission would take on. Preemption requeues
+    (``RequestQueue.push_front``) bypass submit and are exempt — work
+    admitted once must always be able to return."""
 
     deadline_ms: Optional[float] = None
     ttft_deadline_ms: Optional[float] = None
@@ -102,10 +143,36 @@ class SchedulingPolicy:
     max_retries: int = 3
     backoff_base_s: float = 0.02
     deadline_burst_cap: int = 4
+    max_queue_depth: Optional[int] = None
+    max_queue_depth_per_priority: Optional[int] = None
+    admit_token_budget: Optional[int] = None
 
     def backoff_s(self, retries: int) -> float:
         """Hold time before a request's ``retries``-th re-admission."""
         return self.backoff_base_s * (2.0 ** max(retries - 1, 0))
+
+    def shed_reason(self, queue: "RequestQueue", req) -> Optional[str]:
+        """Why ``req`` must be shed given the queue's current load, or
+        None to admit. Checked at submit time only — never re-applied to
+        requeued (already-admitted) work."""
+        depth = len(queue)
+        if self.max_queue_depth is not None and depth >= self.max_queue_depth:
+            return (f"queue full: depth {depth} >= "
+                    f"max_queue_depth {self.max_queue_depth}")
+        if self.max_queue_depth_per_priority is not None:
+            pdepth = queue.depth(priority=req.priority)
+            if pdepth >= self.max_queue_depth_per_priority:
+                return (f"priority {req.priority} lane full: depth {pdepth}"
+                        f" >= max_queue_depth_per_priority "
+                        f"{self.max_queue_depth_per_priority}")
+        if self.admit_token_budget is not None:
+            load = queue.token_load()
+            cost = len(req.prompt) + req.max_new
+            if load + cost > self.admit_token_budget:
+                return (f"token budget exhausted: queued load {load} + "
+                        f"request cost {cost} > admit_token_budget "
+                        f"{self.admit_token_budget}")
+        return None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -150,12 +217,21 @@ class RequestQueue:
     whose ``not_before`` is in the future — those stay queued and
     :meth:`next_eligible_delay` says how long until one frees up."""
 
-    def __init__(self):
+    def __init__(self, max_depth: Optional[int] = None):
         self._heap: List[Tuple[float, int, object]] = []
         self._seq = itertools.count()
         self._front_seq = itertools.count(-1, -1)
+        self.max_depth = max_depth
+
+    def full(self) -> bool:
+        """True when a plain :meth:`push` would exceed ``max_depth``."""
+        return self.max_depth is not None and len(self) >= self.max_depth
 
     def push(self, req, front: bool = False) -> None:
+        if not front and self.full():
+            raise OverflowError(
+                f"RequestQueue full: depth {len(self)} >= "
+                f"max_depth {self.max_depth}")
         seq = next(self._front_seq if front else self._seq)
         heapq.heappush(self._heap, (-float(req.priority), seq, req))
 
@@ -201,6 +277,18 @@ class RequestQueue:
             d = max(getattr(req, "not_before", 0.0) - now, 0.0)
             best = d if best is None else min(best, d)
         return best
+
+    def depth(self, priority: Optional[float] = None) -> int:
+        """Live entry count, optionally restricted to one priority."""
+        return sum(1 for _, _, r in self._heap if self._live(r)
+                   and (priority is None or r.priority == priority))
+
+    def token_load(self) -> int:
+        """Worst-case token debt of queued work: sum of
+        ``len(prompt) + max_new`` over live entries. O(n), fine at
+        admission-queue scale."""
+        return sum(len(r.prompt) + r.max_new
+                   for _, _, r in self._heap if self._live(r))
 
     def __len__(self) -> int:
         return sum(1 for _, _, r in self._heap if self._live(r))

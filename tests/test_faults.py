@@ -216,7 +216,8 @@ def test_policy_backoff_schedule():
     assert p.backoff_s(3) == pytest.approx(0.04)
     assert RequestState.FINISHED.terminal
     assert not RequestState.RUNNING.terminal
-    assert len(TERMINAL_STATES) == 5
+    assert len(TERMINAL_STATES) == 6
+    assert RequestState.SHED in TERMINAL_STATES
 
 
 # ---------------------------------------------------------------------------
