@@ -11,6 +11,10 @@ Times (jit, CPU):
     packed-KV Pallas flash-decode kernel at 1k/4k/16k context, with the
     per-step KV bytes each cache format streams (the ~2x mxfp8 / ~4x
     mxfp4 traffic cut) and a bandwidth-bound TPU projection,
+  * chunked prefill over the *paged* packed pool: the dense jnp path vs
+    the fused flash-prefill kernel (both include quantize-on-append of
+    the chunk), with packed-prefix-read + packed-chunk-write byte
+    accounting and a prefill TPU projection,
   * the jnp fake-quant primitives (historical trajectory rows),
 
 plus packed-vs-dense weight byte accounting and analytic TPU-roofline
@@ -140,6 +144,110 @@ def _attention_rows(rows, log, smoke: bool):
                         f"{(2 * S * D * 2.0 + qb) / (kv_bytes + qb):.2f}x")})
 
 
+def _prefill_rows(rows, log, smoke: bool):
+    """Chunked prefill over the paged packed pool: the dense jnp path vs
+    the fused flash-prefill kernel (quantize-on-append included in both),
+    with the bytes each path moves — the packed read of the prefix pages
+    plus the packed chunk written back, vs decoding the whole logical
+    cache to f32."""
+    B, H, kvh, Dh = 1, 8, 2, 64
+    D = kvh * Dh
+    C = 64 if smoke else 128           # prompt chunk per call
+    P = 64 if smoke else 256           # page size
+    contexts = (256,) if smoke else (1024, 4096, 16384)
+    key = jax.random.PRNGKey(23)
+    for S in contexts:
+        start = S - C                  # chunk is the prompt's tail
+        maxp = -(-S // P)
+        ks_ = jax.random.split(jax.random.fold_in(key, S), 6)
+        q = jax.random.normal(ks_[0], (B, C, H, Dh), jnp.float32)
+        pool_k = jax.random.normal(ks_[1], (maxp, P, D), jnp.float32)
+        pool_v = jax.random.normal(ks_[2], (maxp, P, D), jnp.float32)
+        kch = jax.random.normal(ks_[3], (B, C, D), jnp.float32)
+        vch = jax.random.normal(ks_[4], (B, C, D), jnp.float32)
+        bt = jax.random.permutation(ks_[5], maxp).astype(jnp.int32)[None]
+        st = jnp.full((B,), start, jnp.int32)
+        kl = jnp.full((B,), S, jnp.int32)
+        q_pos = start + jnp.arange(C, dtype=jnp.int32)[None, :]
+
+        # dense baseline: the whole logical KV materialized contiguous,
+        # chunk queries through the dense jnp attention
+        def dense_prefill(qq, kk, vv):
+            return layers.attention(
+                qq, kk.reshape(B, S, kvh, Dh), vv.reshape(B, S, kvh, Dh),
+                causal=True, q_pos=q_pos, kv_len=kl, chunk=512)
+
+        kd = jax.random.normal(ks_[1], (B, S, D), jnp.float32)
+        vd = jax.random.normal(ks_[2], (B, S, D), jnp.float32)
+        f_j = jax.jit(dense_prefill)
+        for dt, name in ((jnp.float32, "f32"), (jnp.bfloat16, "bf16")):
+            us = common.timed(f_j, q, kd.astype(dt), vd.astype(dt)) * 1e6
+            kv_bytes = 2 * S * D * jnp.dtype(dt).itemsize
+            rows.append({"name": f"attn_prefill_jnp_{name}_S{S}",
+                         "us_per_call": us,
+                         "derived": f"kv_bytes={kv_bytes};chunk={C}"})
+        bytes_bf16 = 2 * S * D * 2
+        bytes_f32 = 2 * S * D * 4
+        for fmt in ("mxfp8", "mxfp4"):
+            kc, ksc = packing.kv_encode(pool_k, fmt)
+            vc, vsc = packing.kv_encode(pool_v, fmt)
+
+            # the two engine reads of a packed paged pool during chunked
+            # prefill (attn_decode_packed_{ref,} pairing, prefill
+            # edition) — both include the chunk's quantize-on-append
+            def packed_ref(qq, kk, vv, a, b, c, d):
+                return ops.mx_prefill_ref(qq, kk, vv, a, b, c, d,
+                                          bt, st, kl, fmt)
+
+            def packed_attn(qq, kk, vv, a, b, c, d):
+                return ops.mx_flash_prefill(qq, kk, vv, a, b, c, d,
+                                            bt, st, kl, fmt,
+                                            interpret=True)
+
+            args = (q, kch, vch, kc, ksc, vc, vsc)
+            us_ref = common.timed(jax.jit(packed_ref), *args) * 1e6
+            us = common.timed(jax.jit(packed_attn), *args) * 1e6
+            # bytes a fused prefill call moves: packed prefix pages read
+            # + dense chunk in + packed chunk bytes out (never a dense
+            # round-trip of the pool)
+            out = packed_attn(*args)
+            chunk_out = sum(int(o.size) for o in out[1:])
+            kv_bytes = (2 * (int(kc.size) + int(ksc.size))
+                        + 2 * C * D * 4 + chunk_out)
+            rows.append({
+                "name": f"attn_prefill_packed_ref_{fmt}_S{S}",
+                "us_per_call": us_ref,
+                "derived": (f"kv_bytes={kv_bytes};chunk={C};"
+                            "gather + decode-in-place + jnp attention "
+                            "(the fallback read of the paged pool)")})
+            rows.append({
+                "name": f"attn_prefill_packed_{fmt}_S{S}",
+                "us_per_call": us,
+                "derived": (
+                    f"kv_bytes={kv_bytes};chunk={C};pages={maxp};"
+                    f"bytes_reduction_vs_bf16={bytes_bf16/kv_bytes:.2f}x;"
+                    f"bytes_reduction_vs_f32={bytes_f32/kv_bytes:.2f}x;"
+                    f"us_vs_packed_ref={us_ref/us:.2f}x;"
+                    "cpu_interpret=TRUE (correctness-path timing; "
+                    "compiled Mosaic on TPU)")})
+    # TPU roofline: prefill streams the packed prefix once per chunk
+    S = contexts[-1]
+    qb = C * H * Dh * 2
+    for fmt, per_elem in (("bf16", 2.0), ("mxfp8", 1 + 1 / 32),
+                          ("mxfp4", 0.5 + 1 / 32)):
+        kv_bytes = 2 * S * D * per_elem
+        flops = 4 * C * S * H * Dh
+        t_mem = (kv_bytes + qb) / HBM_BW
+        t_cmp = flops / PEAK
+        rows.append({
+            "name": f"attn_prefill_tpu_projection_{fmt}_S{S}",
+            "us_per_call": max(t_mem, t_cmp) * 1e6,
+            "derived": (f"kv_bytes={int(kv_bytes)};"
+                        f"bound={'memory' if t_mem > t_cmp else 'compute'};"
+                        f"mem_us={t_mem*1e6:.1f};"
+                        f"compute_us={t_cmp*1e6:.1f}")})
+
+
 def run(log=print, smoke: bool = False):
     rows = []
     if smoke:
@@ -208,6 +316,9 @@ def run(log=print, smoke: bool = False):
 
     # --- decode attention: jnp dense-KV vs packed-KV flash decode ---
     _attention_rows(rows, log, smoke)
+
+    # --- chunked prefill: jnp dense vs paged flash-prefill kernel ---
+    _prefill_rows(rows, log, smoke)
 
     # --- packed vs dense weight bytes (the HBM-traffic win) ---
     rows.append({

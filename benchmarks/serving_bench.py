@@ -17,6 +17,15 @@ interval) under open-loop Poisson arrivals, swept across offered load
 flat while p99 degrades as offered load crosses capacity — the
 latency-under-load curve (``docs/observability.md``).
 
+The **batched-prefill rows** (``serving_prefill_batched_{off,on}``)
+serve identical long-prompt paged traffic with admission batching off
+(``max_prefill_lanes_per_step=1`` — one lane chunk-prefills per engine
+step, the pre-batching behavior) vs on: co-admitted lanes share one
+chunked-prefill dispatch per chunk index, so ``prefill_chunk_steps``
+collapses from sum(chunks) toward max(chunks) per wave and TTFT p99
+drops, with outputs asserted token-identical
+(``docs/serving.md#batched-prefill-admission``).
+
 The **HTTP overload rows** (``serving_http_overload_{shed,noshed}``)
 push the same 2x-capacity Poisson traffic through the real HTTP/SSE
 front end (``repro.serving.server``, one socket per request) with
@@ -471,11 +480,16 @@ def bench_http_overload(params, cfg, qm, n_req: int, *, batch: int,
 def bench_scheduler(params, cfg, qm, scheduler: str, reqs, *,
                     batch: int, max_len: int, kv_cache=None,
                     kv_layout: str = "contiguous",
-                    page_size=None, tracer=None) -> dict:
+                    page_size=None, policy=None, warm=None,
+                    tracer=None) -> dict:
     eng = Engine(params, cfg, qm, batch_size=batch, max_len=max_len,
                  scheduler=scheduler, kv_cache=kv_cache,
                  kv_layout=kv_layout, page_size=page_size,
-                 bucket_prompts=(kv_layout != "paged"), tracer=tracer)
+                 bucket_prompts=(kv_layout != "paged"), policy=policy,
+                 tracer=tracer)
+    if warm:                     # jit compiles out of the timed window
+        eng.generate(warm)
+        eng.reset_stats()
     t0 = time.perf_counter()
     done = eng.generate(reqs)
     dt = time.perf_counter() - t0
@@ -764,6 +778,78 @@ def run(log=print, smoke: bool = False, trace=None, load: bool = True):
         f"({pp['tok_per_s']/max(pc['tok_per_s'],1e-9):.2f}x), "
         f"chunk prefills {pc['prefill_chunk_steps']} -> "
         f"{pp['prefill_chunk_steps']}")
+
+    # batched prefill admission (docs/serving.md#batched-prefill-
+    # admission): long-prompt traffic — every admission multi-chunk —
+    # served paged with the admission batcher off (one lane per engine
+    # step, the pre-batching behavior, max_prefill_lanes_per_step=1) vs
+    # on. Lanes admitted together share one chunked-prefill dispatch
+    # per chunk index, so a wave costs max(chunks) steps instead of
+    # sum(chunks): prefill_chunk_steps collapses and queued requests
+    # reach their first token sooner — TTFT p99 is the headline column.
+    # Outputs are asserted token-identical (the batcher changes
+    # dispatch count, never results).
+    if smoke:
+        blen, bnew, bml, bps = (48, 80), (2, 6), 128, 32
+    else:
+        blen, bnew, bml, bps = (160, 288), (4, 8), 384, 64
+    bknob = max(2, min(4, batch))
+    bres, bouts = {}, {}
+    for tag, knob in (("off", 1), ("on", bknob)):
+        reqs = mixed_requests(cfg, n_req, seed=5, len_range=blen,
+                              new_range=bnew)
+        # batch+1 warm requests compile both admission signatures (the
+        # batched wave at t=0 and the straggler's serial admit)
+        warm = mixed_requests(cfg, batch + 1, seed=98, len_range=blen,
+                              new_range=(2, 4))
+        r = bench_scheduler(
+            params, cfg, qm, "continuous", reqs, batch=batch,
+            max_len=bml, kv_layout="paged", page_size=bps,
+            policy=SchedulingPolicy(max_prefill_lanes_per_step=knob),
+            warm=warm)
+        ttft = [q.m_first - q.m_submit for q in reqs]
+        r["ttft_p50_ms"] = _pct(ttft, 50) * 1e3
+        r["ttft_p99_ms"] = _pct(ttft, 99) * 1e3
+        bres[tag] = r
+        bouts[tag] = [list(q.out) for q in reqs]
+        log(f"[serving] prefill batch={tag:3s} "
+            f"{r['tok_per_s']:9.1f} tok/s  "
+            f"chunk_steps={r['prefill_chunk_steps']}  "
+            f"lanes/step={r['prefill_lanes_per_step']:.2f}  "
+            f"ttft p99={r['ttft_p99_ms']:.1f}ms")
+        rows.append({
+            "name": f"serving_prefill_batched_{tag}",
+            "us_per_call": r["ttft_p99_ms"] * 1e3,
+            "derived": (f"max_prefill_lanes_per_step={knob};"
+                        f"tok_per_s={r['tok_per_s']:.1f};"
+                        f"prefill_chunk_steps={r['prefill_chunk_steps']};"
+                        f"prefill_lane_steps={r['prefill_lane_steps']};"
+                        f"prefill_batched_steps="
+                        f"{r['prefill_batched_steps']};"
+                        f"prefill_lanes_per_step="
+                        f"{r['prefill_lanes_per_step']:.2f};"
+                        f"ttft_p50_ms={r['ttft_p50_ms']:.1f};"
+                        f"ttft_p99_ms={r['ttft_p99_ms']:.1f}"),
+            **r})
+    assert bouts["on"] == bouts["off"], \
+        "batched prefill admission changed the emitted tokens"
+    boff, bon = bres["off"], bres["on"]
+    rows.append({
+        "name": "serving_prefill_batching", "us_per_call": 0.0,
+        "derived": (
+            f"prefill_chunk_steps={boff['prefill_chunk_steps']}->"
+            f"{bon['prefill_chunk_steps']};"
+            f"lane_steps={boff['prefill_lane_steps']}->"
+            f"{bon['prefill_lane_steps']};"
+            f"ttft_p99_ms={boff['ttft_p99_ms']:.1f}->"
+            f"{bon['ttft_p99_ms']:.1f};"
+            f"outputs_identical=True;"
+            f"batched_reduces_chunk_steps="
+            f"{bon['prefill_chunk_steps'] < boff['prefill_chunk_steps']}")})
+    log(f"[serving] prefill batching: chunk steps "
+        f"{boff['prefill_chunk_steps']} -> {bon['prefill_chunk_steps']}, "
+        f"ttft p99 {boff['ttft_p99_ms']:.1f} -> "
+        f"{bon['ttft_p99_ms']:.1f}ms")
 
     # speculative decoding over the paged MX cache (docs/sampling.md):
     # single-stream repetition-friendly greedy traffic, identical

@@ -47,10 +47,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .mx_quant import MXBLOCK, _decode_tile, _format_consts
+from .mx_quant import MXBLOCK, _decode_tile, _format_consts, _quant_tile
 from . import packing
 
 NEG_INF = -1e30
+E8M0_BIAS = 127
 
 
 def _pick_chunk(S: int, bs: int, explicit: bool = False) -> int:
@@ -331,3 +332,266 @@ def mx_flash_decode_paged(q: jnp.ndarray, k_codes: jnp.ndarray,
     )(jnp.asarray(block_tables, jnp.int32), q, k_codes, k_scales,
       v_codes, v_scales, pos2, len2)
     return out
+
+
+# ---------------------------------------------------------------------------
+# Paged flash prefill: (q_block x kv_block) grid + fused quantize-on-append
+# ---------------------------------------------------------------------------
+#
+# Chunked prefill attends a (B, C) token chunk against (a) the lane's
+# committed prefix, which lives as packed MX pages in the pool, and (b) the
+# chunk itself (causal self-attention). The jnp path pays for that twice:
+# it quantizes the chunk, scatters it into the pool, then gathers + decodes
+# the WHOLE logical cache densely. This kernel reads the prefix pages
+# through the same scalar-prefetch block-table ABI as
+# ``mx_flash_decode_paged`` (decoded in-tile by ``_decode_kv_tile``) and
+# handles the chunk itself by quantizing the dense K/V tile *inside the
+# kernel* (``_quant_kv_tile`` — the ``mx_quant`` tile body followed by the
+# packed-byte layout of ``packing.kv_encode``): the packed bytes stream out
+# as extra kernel outputs for the caller to scatter into the pool, and the
+# decode of those same bytes feeds the attention tile. Dense chunk K/V
+# never round-trips HBM, and attending the roundtripped values keeps the
+# kernel bit-identical to write-then-read of the fallback path.
+#
+# Grid (B, C/qb, maxp + C/kvb), KV axis innermost so the per-(lane, q-block)
+# f32 accumulator + running max / normalizer stay VMEM-resident across the
+# sweep. KV steps c < maxp read page ``block_tables[b, c]`` (positions
+# [c*P, (c+1)*P), valid iff ``kp < start`` — the committed prefix — so a
+# mid-page prefix-cache resume never double-counts rows the chunk re-fills);
+# steps c >= maxp read kv-block c - maxp of the dense chunk at positions
+# ``start + (c - maxp)*kvb + iota``. Causal / fill / window masks apply to
+# both sources exactly as in ``models.layers.attention``.
+
+
+def _quant_kv_tile(x, fmt, grid, mids, r_max, center, bits):
+    """In-kernel MX encode of a dense (bs, D) f32 tile.
+
+    Returns (code bytes (bs, D*bits/8) u8, E8M0 scale bytes (bs, D//32)
+    u8, roundtrip values (bs, D) f32). The bytes are bit-identical to
+    ``packing.kv_encode`` (same ``_quant_tile`` snap, same nibble order,
+    same E8M0 bias) and the roundtrip is computed by decoding those very
+    bytes, so attending the roundtrip == writing the bytes to the pool
+    and reading them back."""
+    bs, d = x.shape
+    xb = x.reshape(bs, d // MXBLOCK, MXBLOCK)
+    codes, scale = _quant_tile(xb, grid, mids, r_max, center)
+    sbyte = (jnp.round(jnp.log2(scale)).astype(jnp.int32)
+             + E8M0_BIAS)                          # == pack_scales_e8m0
+    codes = codes.reshape(bs, d)
+    vals = _decode_codes(codes, fmt, grid, center)
+    s = jnp.exp2(sbyte.astype(jnp.float32) - E8M0_BIAS)
+    rt = (vals.reshape(bs, d // MXBLOCK, MXBLOCK) * s[..., None]
+          ).reshape(bs, d)
+    if bits == 4:
+        cb = codes.reshape(bs, d // 2, 2)          # pack_codes nibble order
+        cbytes = (cb[..., 0] | (cb[..., 1] << 4)).astype(jnp.uint8)
+    else:
+        cbytes = codes.astype(jnp.uint8)
+    return cbytes, sbyte.astype(jnp.uint8), rt
+
+
+def _flash_prefill_kernel(bt_ref, q_ref, kcp_ref, ksp_ref, vcp_ref,
+                          vsp_ref, kd_ref, vd_ref, start_ref, len_ref,
+                          o_ref, m_ref, l_ref, kc_ref, ks_ref, vc_ref,
+                          vs_ref, *, fmt, bits, window, kvh, dh, maxp,
+                          n_cb, qb, kvb, page):
+    del bt_ref          # consumed by the index maps (scalar prefetch)
+    grid, mids, r_max, center = _format_consts(fmt)
+    j = pl.program_id(1)
+    c = pl.program_id(2)
+    n_kv = maxp + n_cb
+
+    @pl.when(c == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)               # (qb, H, Dh)
+    H = q.shape[1]
+    G = H // kvh
+    qg = q.reshape(qb, kvh, G, dh)
+    sm = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    start = start_ref[0, 0]
+    kl = len_ref[0, 0]
+    qp = (start + j * qb
+          + jax.lax.broadcasted_iota(jnp.int32, (1, qb), 1)[0])   # (qb,)
+
+    def _update(k, v, kp, src_ok):
+        # One online-softmax step over an (s, kvh, dh) KV tile at logical
+        # positions kp, with src_ok masking rows the source doesn't own.
+        s = jnp.einsum("qkgd,skd->qkgs", qg, k,
+                       preferred_element_type=jnp.float32) * sm
+        ok = src_ok & (kp < kl)
+        okb = ok[None, :] & (kp[None, :] <= qp[:, None])
+        if window:
+            okb = okb & (kp[None, :] > qp[:, None] - window)
+        okb = okb[:, None, None, :]                # (qb, 1, 1, s)
+        s = jnp.where(okb, s, NEG_INF)
+        m_prev = m_ref[0].reshape(qb, kvh, G)
+        l_prev = l_ref[0].reshape(qb, kvh, G)
+        acc_prev = o_ref[0].reshape(qb, kvh, G, dh)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.where(okb, jnp.exp(s - m_new[..., None]), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        acc = acc_prev * corr[..., None] + jnp.einsum(
+            "qkgs,skd->qkgd", p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new.reshape(1, qb, H)
+        l_ref[...] = l_new.reshape(1, qb, H)
+        o_ref[...] = acc.reshape(1, qb, H, dh)
+
+    @pl.when(c < maxp)
+    def _prefix_page():
+        k = _decode_kv_tile(kcp_ref[0], ksp_ref[0], fmt, grid, center,
+                            bits, kvh, dh)
+        v = _decode_kv_tile(vcp_ref[0], vsp_ref[0], fmt, grid, center,
+                            bits, kvh, dh)
+        kp = (c * page
+              + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)[0])
+        _update(k, v, kp, kp < start)
+
+    @pl.when(c >= maxp)
+    def _chunk_block():
+        cc = c - maxp
+        kb, ksb, krt = _quant_kv_tile(kd_ref[0].astype(jnp.float32), fmt,
+                                      grid, mids, r_max, center, bits)
+        vb, vsb, vrt = _quant_kv_tile(vd_ref[0].astype(jnp.float32), fmt,
+                                      grid, mids, r_max, center, bits)
+        kc_ref[...] = kb[None]
+        ks_ref[...] = ksb[None]
+        vc_ref[...] = vb[None]
+        vs_ref[...] = vsb[None]
+        kp = (start + cc * kvb
+              + jax.lax.broadcasted_iota(jnp.int32, (1, kvb), 1)[0])
+        _update(krt.reshape(kvb, kvh, dh), vrt.reshape(kvb, kvh, dh), kp,
+                jnp.full((kvb,), True))
+
+    @pl.when(c == n_kv - 1)
+    def _finalize():
+        l = l_ref[0].reshape(qb, kvh, G)
+        acc = o_ref[0].reshape(qb, kvh, G, dh)
+        o_ref[...] = (acc / jnp.maximum(l, 1e-30)[..., None]
+                      ).reshape(1, qb, H, dh)
+
+
+def mx_flash_prefill(q: jnp.ndarray, k_chunk: jnp.ndarray,
+                     v_chunk: jnp.ndarray, k_codes: jnp.ndarray,
+                     k_scales: jnp.ndarray, v_codes: jnp.ndarray,
+                     v_scales: jnp.ndarray, block_tables: jnp.ndarray,
+                     q_start: jnp.ndarray, kv_len: jnp.ndarray,
+                     fmt: str = "mxfp8", *, window: int = 0,
+                     qb: int | None = None, kvb: int | None = None,
+                     explicit_qb: bool = False, explicit_kvb: bool = False,
+                     interpret: bool = True):
+    """Flash-prefill attention over a paged packed MX KV pool, fused with
+    the quantize-on-append of the current chunk.
+
+    q          (B, C, H, Dh) float  — chunk queries (C tokens per lane)
+    k/v chunk  (B, C, D) float      — dense chunk K/V (D = kvh*Dh)
+    k/v codes  (N, P, D*bits/8) u8  — page pool shared by all lanes
+    k/v scales (N, P, D//32)    u8  — E8M0 bytes
+    block_tables (B, maxp) i32      — page id of lane b's page c
+    q_start    (B,) i32             — chunk start position per lane (pool
+                                      rows ``kp < q_start`` are the
+                                      committed prefix; rows the chunk
+                                      covers come from the in-tile encode)
+    kv_len     (B,) i32             — valid-key bound per lane (typically
+                                      q_start + C)
+
+    Returns ``(out (B, C, H, Dh) f32, k_code_bytes (B, C, D*bits/8) u8,
+    k_scale_bytes (B, C, D//32) u8, v_code_bytes, v_scale_bytes)`` — the
+    byte outputs are exactly ``packing.kv_encode`` of the chunk, for the
+    caller to scatter into the pool. ``qb``/``kvb`` tile the chunk's query
+    and self-KV axes (``explicit_*=True`` honors them exactly and raises
+    on non-divisors — the override that drives the multi-block grid in
+    CPU interpret mode)."""
+    B, C, H, Dh = q.shape
+    bits = packing.kv_fmt_bits(fmt)
+    N, P, db = k_codes.shape
+    D = db * 8 // bits
+    kvh = D // Dh
+    maxp = block_tables.shape[1]
+    assert H % kvh == 0 and kvh * Dh == D, (q.shape, k_codes.shape)
+    assert D % MXBLOCK == 0, (D,)
+    ns = D // MXBLOCK
+    assert k_scales.shape == (N, P, ns), k_scales.shape
+    assert k_chunk.shape == (B, C, D), (k_chunk.shape, (B, C, D))
+    assert maxp >= 1, "prefill needs at least one table slot per lane"
+    qb = _pick_chunk(C, C if qb is None else qb, explicit=explicit_qb)
+    kvb = _pick_chunk(C, C if kvb is None else kvb, explicit=explicit_kvb)
+    n_qb = C // qb
+    n_cb = C // kvb
+    start2 = jnp.broadcast_to(jnp.asarray(q_start, jnp.int32).reshape(-1),
+                              (B,)).reshape(B, 1)
+    len2 = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32).reshape(-1),
+                            (B,)).reshape(B, 1)
+    kern = functools.partial(_flash_prefill_kernel, fmt=fmt, bits=bits,
+                             window=window, kvh=kvh, dh=Dh, maxp=maxp,
+                             n_cb=n_cb, qb=qb, kvb=kvb, page=P)
+    # Index-map clamps: pool specs only matter on steps c < maxp (chunk
+    # steps clamp to the last table slot — any valid page id, rows unused);
+    # chunk specs only matter on steps c >= maxp (pool steps clamp to
+    # chunk block 0, unread). The chunk-byte output blocks are fully
+    # written on every chunk step, and the last grid step visiting each
+    # block is a chunk step, so revisiting is flush-safe.
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, n_qb, maxp + n_cb),
+        in_specs=[
+            pl.BlockSpec((1, qb, H, Dh), lambda i, j, c, bt: (i, j, 0, 0)),
+            pl.BlockSpec((1, P, db),
+                         lambda i, j, c, bt:
+                         (bt[i, jnp.minimum(c, maxp - 1)], 0, 0)),
+            pl.BlockSpec((1, P, ns),
+                         lambda i, j, c, bt:
+                         (bt[i, jnp.minimum(c, maxp - 1)], 0, 0)),
+            pl.BlockSpec((1, P, db),
+                         lambda i, j, c, bt:
+                         (bt[i, jnp.minimum(c, maxp - 1)], 0, 0)),
+            pl.BlockSpec((1, P, ns),
+                         lambda i, j, c, bt:
+                         (bt[i, jnp.minimum(c, maxp - 1)], 0, 0)),
+            pl.BlockSpec((1, kvb, D),
+                         lambda i, j, c, bt:
+                         (i, jnp.maximum(c - maxp, 0), 0)),
+            pl.BlockSpec((1, kvb, D),
+                         lambda i, j, c, bt:
+                         (i, jnp.maximum(c - maxp, 0), 0)),
+            pl.BlockSpec((1, 1), lambda i, j, c, bt: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, c, bt: (i, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, qb, H, Dh), lambda i, j, c, bt: (i, j, 0, 0)),
+            pl.BlockSpec((1, qb, H), lambda i, j, c, bt: (i, j, 0)),
+            pl.BlockSpec((1, qb, H), lambda i, j, c, bt: (i, j, 0)),
+            pl.BlockSpec((1, kvb, db),
+                         lambda i, j, c, bt:
+                         (i, jnp.maximum(c - maxp, 0), 0)),
+            pl.BlockSpec((1, kvb, ns),
+                         lambda i, j, c, bt:
+                         (i, jnp.maximum(c - maxp, 0), 0)),
+            pl.BlockSpec((1, kvb, db),
+                         lambda i, j, c, bt:
+                         (i, jnp.maximum(c - maxp, 0), 0)),
+            pl.BlockSpec((1, kvb, ns),
+                         lambda i, j, c, bt:
+                         (i, jnp.maximum(c - maxp, 0), 0)),
+        ),
+    )
+    out, _, _, kc, ks, vc, vs = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=(
+            jax.ShapeDtypeStruct((B, C, H, Dh), jnp.float32),
+            jax.ShapeDtypeStruct((B, C, H), jnp.float32),
+            jax.ShapeDtypeStruct((B, C, H), jnp.float32),
+            jax.ShapeDtypeStruct((B, C, db), jnp.uint8),
+            jax.ShapeDtypeStruct((B, C, ns), jnp.uint8),
+            jax.ShapeDtypeStruct((B, C, db), jnp.uint8),
+            jax.ShapeDtypeStruct((B, C, ns), jnp.uint8),
+        ),
+        interpret=interpret,
+    )(jnp.asarray(block_tables, jnp.int32), q, k_codes, k_scales,
+      v_codes, v_scales, k_chunk, v_chunk, start2, len2)
+    return out, kc, ks, vc, vs

@@ -351,11 +351,115 @@ def mx_flash_decode_paged(q, k_codes, k_scales, v_codes, v_scales,
 mx_flash_decode_paged.__doc__ = _mx_flash_decode_paged_jit.__doc__
 
 
+def _flash_prefill_contract(q, k_chunk, v_chunk, k_codes, k_scales,
+                            v_codes, v_scales, block_tables,
+                            fmt: str) -> bool:
+    """Does the input meet the paged flash-prefill kernel contract?"""
+    if fmt not in _pk.KV_FMTS:
+        return False
+    if (q.ndim != 4 or k_chunk.ndim != 3 or k_codes.ndim != 3
+            or k_scales.ndim != 3 or block_tables.ndim != 2):
+        return False
+    B, C, H, Dh = q.shape
+    bits = _pk.kv_fmt_bits(fmt)
+    N, P = k_codes.shape[0], k_codes.shape[1]
+    D = k_codes.shape[2] * 8 // bits
+    if D % 32 != 0 or Dh == 0 or D % Dh != 0 or H % (D // Dh) != 0:
+        return False
+    return (block_tables.shape[0] == B and block_tables.shape[1] >= 1
+            and k_chunk.shape == (B, C, D)
+            and v_chunk.shape == k_chunk.shape
+            and k_scales.shape == (N, P, D // 32)
+            and v_codes.shape == k_codes.shape
+            and v_scales.shape == k_scales.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "window", "qb", "kvb",
+                                             "interpret"))
+def _mx_flash_prefill_jit(q, k_chunk, v_chunk, k_codes, k_scales, v_codes,
+                          v_scales, block_tables, q_start, kv_len,
+                          fmt: str = "mxfp8", window: int = 0,
+                          qb: int | None = None, kvb: int | None = None,
+                          interpret: bool | None = None):
+    """Flash-prefill attention over a *paged* packed MX KV pool, fused
+    with the quantize-on-append of the current chunk.
+
+    Shapes/dtypes: q (B, C, H, Dh) float — a C-token prefill chunk per
+    lane; k/v_chunk (B, C, D) float — the chunk's dense K/V (D =
+    n_kv_heads * Dh); k/v_codes (N, P, D*bits/8) uint8 and k/v_scales
+    (N, P, D//32) uint8 E8M0 bytes — the shared page pool in the
+    ``packing.PagedKV`` layout; block_tables (B, maxp) int32 (same
+    scalar-prefetch ABI as :func:`mx_flash_decode_paged`); q_start /
+    kv_len (B,) int32 (scalars broadcast) — chunk start offset and
+    valid-key bound per lane.
+
+    Returns ``(out (B, C, H, Dh) f32, k_code_bytes (B, C, D*bits/8) u8,
+    k_scale_bytes (B, C, D//32) u8, v_code_bytes, v_scale_bytes)``. The
+    byte outputs are bit-identical to ``packing.kv_encode`` of the chunk
+    — the caller scatters them into the pool
+    (``models.layers.kv_scatter_chunk_paged``) so dense chunk K/V never
+    round-trips HBM; the kernel attends the decoded roundtrip of those
+    same bytes, keeping it bit-identical to write-then-read. Pool rows
+    ``kp < q_start`` are the committed prefix; causal / fill / window
+    masks are per query row, as in ``models.layers.attention``.
+
+    Off-contract inputs raise ValueError — every such input is equally
+    ill-formed for the jnp oracle (``mx_prefill_ref``); the model-level
+    fallback (quantize + scatter + gather + dense jnp attention) lives in
+    ``models.transformer.attn_sublayer_chunk_paged``. ``qb``/``kvb``
+    (query/self-KV tile widths over the chunk) default to the whole chunk
+    under interpret mode and to VMEM-sized tiles when compiled; explicit
+    values are honored exactly (must divide C, else ValueError) on every
+    backend, so the multi-block grid is exercisable in CPU interpret
+    mode."""
+    if not _flash_prefill_contract(q, k_chunk, v_chunk, k_codes, k_scales,
+                                   v_codes, v_scales, block_tables, fmt):
+        raise ValueError(
+            f"mx_flash_prefill contract violation: q {q.shape}, k_chunk "
+            f"{k_chunk.shape}, v_chunk {v_chunk.shape}, k_codes "
+            f"{k_codes.shape}, k_scales {k_scales.shape}, v_codes "
+            f"{v_codes.shape}, v_scales {v_scales.shape}, block_tables "
+            f"{block_tables.shape}, fmt={fmt!r}. Expected q (B, C, H, "
+            f"Dh); dense chunk K/V (B, C, D) with D % 32 == 0, "
+            f"D % Dh == 0 and H divisible by the kv-head count D/Dh; a "
+            f"(N, P, D*bits/8) page pool with scales (N, P, D//32); V "
+            f"shapes matching K; block_tables (B, maxp) int32 with "
+            f"maxp >= 1; fmt one of {_pk.KV_FMTS}.")
+    it = _default_interpret() if interpret is None else interpret
+    C = q.shape[1]
+    explicit_qb = qb is not None
+    explicit_kvb = kvb is not None
+    if qb is None:
+        qb = C if it else 128
+    if kvb is None:
+        kvb = C if it else 512
+    return _ma.mx_flash_prefill(q, k_chunk, v_chunk, k_codes, k_scales,
+                                v_codes, v_scales, block_tables, q_start,
+                                kv_len, fmt, window=window, qb=qb,
+                                kvb=kvb, explicit_qb=explicit_qb,
+                                explicit_kvb=explicit_kvb, interpret=it)
+
+
+def mx_flash_prefill(q, k_chunk, v_chunk, k_codes, k_scales, v_codes,
+                     v_scales, block_tables, q_start, kv_len,
+                     fmt: str = "mxfp8", window: int = 0,
+                     qb: int | None = None, kvb: int | None = None,
+                     interpret: bool | None = None):
+    return _dispatch("mx_flash_prefill", _mx_flash_prefill_jit, q,
+                     k_chunk, v_chunk, k_codes, k_scales, v_codes,
+                     v_scales, block_tables, q_start, kv_len, fmt=fmt,
+                     window=window, qb=qb, kvb=kvb, interpret=interpret)
+
+
+mx_flash_prefill.__doc__ = _mx_flash_prefill_jit.__doc__
+
+
 # re-exported oracles
 mx_quant_ref = ref.mx_quant_ref
 mx_matmul_ref = ref.mx_matmul_ref
 mx_matmul_packed_ref = ref.mx_matmul_packed_ref
 mx_attention_ref = ref.mx_attention_ref
 mx_attention_paged_ref = ref.mx_attention_paged_ref
+mx_prefill_ref = ref.mx_prefill_ref
 hadamard_quant_ref = ref.hadamard_quant_ref
 quantize_weight_for_kernel = ref.quantize_weight_for_kernel

@@ -132,6 +132,65 @@ def mx_attention_paged_ref(q: jnp.ndarray, k_codes: jnp.ndarray,
                             fmt, window)
 
 
+def mx_prefill_ref(q: jnp.ndarray, k_chunk: jnp.ndarray,
+                   v_chunk: jnp.ndarray, k_codes: jnp.ndarray,
+                   k_scales: jnp.ndarray, v_codes: jnp.ndarray,
+                   v_scales: jnp.ndarray, block_tables: jnp.ndarray,
+                   q_start: jnp.ndarray, kv_len: jnp.ndarray,
+                   fmt: str = "mxfp8", window: int = 0):
+    """Golden oracle for
+    :func:`repro.kernels.mx_attention.mx_flash_prefill`.
+
+    q: (B, C, H, Dh); k/v_chunk: (B, C, D) dense chunk K/V; k/v codes +
+    scales: the (N, P, ·) page pool; block_tables (B, maxp) int32;
+    q_start / kv_len: (B,) int32 (or scalars, broadcast). Encodes the
+    chunk with ``packing.kv_encode`` (the write-then-read semantics the
+    kernel fuses), scatters the bytes over the gathered logical cache at
+    rows [q_start, q_start + C), decodes the whole thing, and runs one
+    masked dense fp32 softmax per chunk query row. Returns
+    ``(out (B, C, H, Dh) f32, k_code_bytes, k_scale_bytes, v_code_bytes,
+    v_scale_bytes)`` — the byte outputs mirror the kernel's fused
+    quantize-on-append outputs."""
+    from repro.kernels import packing
+    B, C, H, Dh = q.shape
+    bt = jnp.asarray(block_tables, jnp.int32)
+    maxp = bt.shape[1]
+    P = k_codes.shape[1]
+    S = maxp * P
+    kc, ks = packing.kv_encode(k_chunk, fmt)
+    vc, vs = packing.kv_encode(v_chunk, fmt)
+    st = jnp.broadcast_to(jnp.asarray(q_start, jnp.int32).reshape(-1),
+                          (B,))
+    kl = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32).reshape(-1),
+                          (B,))
+    rows = st[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]  # (B, C)
+    bidx = jnp.arange(B, dtype=jnp.int32)[:, None]
+
+    def flat(pool, chunk):
+        g = jnp.take(pool, bt, axis=0).reshape(B, S, pool.shape[-1])
+        return g.at[bidx, rows].set(chunk)
+
+    k = packing.kv_decode(flat(k_codes, kc), flat(k_scales, ks), fmt)
+    v = packing.kv_decode(flat(v_codes, vc), flat(v_scales, vs), fmt)
+    D = k.shape[-1]
+    kvh = D // Dh
+    G = H // kvh
+    qg = q.astype(jnp.float32).reshape(B, C, kvh, G, Dh)
+    kh = k.reshape(B, S, kvh, Dh)
+    vh = v.reshape(B, S, kvh, Dh)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(Dh, jnp.float32))
+    s = jnp.einsum("bqkgd,bskd->bqkgs", qg, kh) * scale
+    kp = jnp.arange(S, dtype=jnp.int32)[None, None, :]     # (1, 1, S)
+    qp = rows[:, :, None]                                  # (B, C, 1)
+    ok = (kp <= qp) & (kp < kl[:, None, None])
+    if window:
+        ok = ok & (kp > qp - window)
+    s = jnp.where(ok[:, :, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqkgs,bskd->bqkgd", p, vh)
+    return out.reshape(B, C, H, Dh), kc, ks, vc, vs
+
+
 def quantize_weight_for_kernel(w: jnp.ndarray, fmt: str = "mxfp4",
                                block: int = 32):
     """Pre-quantize a (K, N) weight along K into kernel layout:

@@ -89,8 +89,11 @@ def prefill_chunk_paged(params, cfg: ArchConfig, cache, block_tables,
                         qm: QuantMode = QuantMode.off()):
     """Chunked prefill against a paged KV pool addressed through block
     tables (the paged engine's admission path; ``docs/paged-kv.md``).
-    KV-cache families (dense/moe) only — recurrent ring-buffer families
-    raise."""
+    ``start`` / ``last_idx`` may be traced i32 scalars (all lanes share
+    one chunk offset) or (B,) vectors — batched prefill admission, where
+    each lane runs a chunk of its own prompt at its own offset in one
+    forward. KV-cache families (dense/moe) only — recurrent ring-buffer
+    families raise."""
     mod = module_for(cfg)
     if not hasattr(mod, "prefill_chunk_paged"):
         raise ValueError(

@@ -77,21 +77,55 @@ def kv_write_chunk_paged(pool: PagedKV, new: jnp.ndarray,
     """Write a C-token chunk at absolute positions start..start+C-1
     through the block tables (the chunked-prefill append path).
     pool: PagedKV (N, P, ·); new: (B, C, D) dense; block_tables:
-    (B, maxp) i32; start: traced i32 scalar. Each token lands at its
-    page-relative row — chunks may straddle page boundaries."""
+    (B, maxp) i32; start: traced i32 scalar shared by all lanes, or a
+    (B,) vector of per-lane starts (batched prefill admission). Each
+    token lands at its page-relative row — chunks may straddle page
+    boundaries."""
     B, C = new.shape[0], new.shape[1]
-    P = pool.page_size
-    pos = start + jnp.arange(C, dtype=jnp.int32)            # (C,)
-    pages = jnp.take_along_axis(
-        block_tables, jnp.broadcast_to((pos // P)[None, :], (B, C)),
-        axis=1)                                             # (B, C)
-    offs = jnp.broadcast_to((pos % P)[None, :], (B, C))
+    pages, offs = _chunk_pages_offs(block_tables, B, C, pool.page_size,
+                                    start)
     if pool.fmt == "none":
         return PagedKV(pool.codes.at[pages, offs].set(
             new.astype(pool.codes.dtype)), None, "none", pool.dtype)
     c, s = kv_encode(new, pool.fmt)
     return PagedKV(pool.codes.at[pages, offs].set(c),
                    pool.scales.at[pages, offs].set(s),
+                   pool.fmt, pool.dtype)
+
+
+def _chunk_pages_offs(block_tables, B: int, C: int, P: int, start):
+    """(pages, offs) (B, C) i32 for a C-token chunk at ``start`` (traced
+    scalar, broadcast — or (B,) per-lane vector) through the tables."""
+    st = jnp.asarray(start, jnp.int32)
+    if st.ndim == 1:                         # per-lane starts
+        pos = st[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+        return jnp.take_along_axis(block_tables, pos // P, axis=1), pos % P
+    pos = st + jnp.arange(C, dtype=jnp.int32)               # (C,)
+    pages = jnp.take_along_axis(
+        block_tables, jnp.broadcast_to((pos // P)[None, :], (B, C)),
+        axis=1)                                             # (B, C)
+    return pages, jnp.broadcast_to((pos % P)[None, :], (B, C))
+
+
+def kv_scatter_chunk_paged(pool: PagedKV, codes: jnp.ndarray,
+                           scales: jnp.ndarray, block_tables: jnp.ndarray,
+                           start) -> PagedKV:
+    """Scatter *pre-encoded* chunk bytes into a packed page pool — the
+    commit half of the fused prefill kernel's quantize-on-append:
+    ``ops.mx_flash_prefill`` returns the chunk's MX code + E8M0 scale
+    bytes (bit-identical to ``packing.kv_encode``), and this placement is
+    byte-identical to :func:`kv_write_chunk_paged` of the dense chunk.
+    pool: PagedKV (N, P, ·), quantized fmt; codes: (B, C, D*bits/8) u8;
+    scales: (B, C, D//32) u8; start: scalar or (B,) per-lane i32."""
+    if pool.fmt == "none":
+        raise ValueError("kv_scatter_chunk_paged commits packed bytes; a "
+                         "dense (fmt='none') pool has none — use "
+                         "kv_write_chunk_paged")
+    B, C = codes.shape[0], codes.shape[1]
+    pages, offs = _chunk_pages_offs(block_tables, B, C, pool.page_size,
+                                    start)
+    return PagedKV(pool.codes.at[pages, offs].set(codes),
+                   pool.scales.at[pages, offs].set(scales),
                    pool.fmt, pool.dtype)
 
 

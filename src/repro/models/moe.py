@@ -243,24 +243,33 @@ def prefill_chunk_paged(params, cfg: ArchConfig, cache, block_tables,
                         inputs, start, last_idx,
                         qm: QuantMode = QuantMode.off()):
     """Chunked prefill against a paged pool (see
-    :func:`transformer.prefill_chunk_paged`); router aux losses are
-    dropped (serving path), with the same expert-capacity caveat as
-    :func:`prefill_chunk`."""
+    :func:`transformer.prefill_chunk_paged` — including (B,) vector
+    ``start`` / ``last_idx`` for batched prefill admission); router aux
+    losses are dropped (serving path), with the same expert-capacity
+    caveat as :func:`prefill_chunk`."""
     x = dense.embed_inputs(params, cfg, inputs)
     C = x.shape[1]
-    pos = start + jnp.arange(C, dtype=jnp.int32)
+    st = jnp.asarray(start, jnp.int32)
+    if st.ndim == 1:        # (B,) per-lane chunk starts
+        pos = st[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+    else:
+        pos = st + jnp.arange(C, dtype=jnp.int32)
     bt = jnp.asarray(block_tables, jnp.int32)
 
     def body(xc, inp):
         pl, ck, cv = inp
         xc, ck, cv = dense.attn_sublayer_chunk_paged(
-            xc, pl, cfg, qm, ck, cv, bt, pos, start + C)
+            xc, pl, cfg, qm, ck, cv, bt, pos, st + C)
         xc, _ = ffn_sublayer(xc, pl, cfg, qm)
         return xc, (ck, cv)
 
     x, (ks, vs) = scan_layers(body, x, (params["blocks"],
                                cache["k"], cache["v"]), cfg.scan_layers)
-    xl = jax.lax.dynamic_slice_in_dim(x, last_idx, 1, axis=1)
+    li = jnp.asarray(last_idx, jnp.int32)
+    if li.ndim == 1:        # (B,) per-lane last-token indices
+        xl = jnp.take_along_axis(x, li[:, None, None], axis=1)
+    else:
+        xl = jax.lax.dynamic_slice_in_dim(x, last_idx, 1, axis=1)
     xl = rms_norm(xl, params["ln_f"], cfg.norm_eps)
     logits = dense.head_out(xl[:, 0], params, cfg, qm)
     return logits, {"k": ks, "v": vs}

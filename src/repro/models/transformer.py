@@ -17,11 +17,13 @@ from repro.core import folding as fold_lib
 from repro.core.quantize import QuantMode, qlinear
 from repro.kernels.packing import PackedKV, PagedKV
 from repro.launch import pcontext as pctx
+from repro.kernels import ops
 from .layers import (apply_rope, attention, attention_paged, dense_init,
                      flash_attention, gated_mlp, kv_heads_view,
-                     kv_write_chunk_paged, kv_write_rows, kv_write_slice,
-                     kv_write_spec, kv_write_spec_paged,
-                     kv_write_token_paged, rms_norm, scan_layers, shard_kv)
+                     kv_scatter_chunk_paged, kv_write_chunk_paged,
+                     kv_write_rows, kv_write_slice, kv_write_spec,
+                     kv_write_spec_paged, kv_write_token_paged, rms_norm,
+                     scan_layers, shard_kv)
 
 
 # ---------------------------------------------------------------------------
@@ -289,18 +291,46 @@ def attn_sublayer_chunk_paged(x, p, cfg: ArchConfig, qm: QuantMode,
     """Chunked-prefill attention against a paged pool: C prompt tokens
     write through the block tables and attend the partially filled
     logical sequence. Same contract as :func:`attn_sublayer_chunk` with
-    the cache rows resolved per page; the chunk grid inside
-    :func:`attention` is unchanged, so chunked paged prefill accumulates
-    over the same KV-chunk sequence as the contiguous path (extra
-    fully-masked trailing pages are exact no-ops of the online
-    softmax)."""
+    the cache rows resolved per page. ``pos`` is (C,) contiguous
+    positions shared by all lanes, or (B, C) per-lane positions (batched
+    prefill admission — each lane's chunk starts at its own offset);
+    ``kv_len`` is then a (B,) vector.
+
+    Dispatch: with a quantized pool under the fused backend the whole
+    step runs through ``ops.mx_flash_prefill`` — the kernel reads prefix
+    pages via the block-table grid, quantizes the chunk's K/V in-tile,
+    and returns the packed bytes, which :func:`kv_scatter_chunk_paged`
+    commits to the pool (byte-identical to the fallback's
+    quantize-then-write, so both paths stay bit-identical end to end).
+    Everything else (dense pools, the 'ref' backend) quantizes on append
+    and runs the gather + dense jnp path; either way the chunk grid
+    matches the contiguous path (extra fully-masked trailing pages are
+    exact no-ops of the online softmax)."""
     B, C = x.shape[0], x.shape[1]
     q, k, v = _qkv(x, p, cfg, qm, pos)
-    cache_k = kv_write_chunk_paged(cache_k, k, block_tables, pos[0])
-    cache_v = kv_write_chunk_paged(cache_v, v, block_tables, pos[0])
-    out = attention_paged(q, cache_k, cache_v, block_tables, causal=True,
-                          q_pos=pos, kv_len=kv_len, window=window,
-                          chunk=cfg.attn_chunk, backend=qm.backend)
+    posm = jnp.asarray(pos, jnp.int32)
+    start = posm[:, 0] if posm.ndim == 2 else posm[0]
+    if (qm.backend == "fused" and cache_k.fmt != "none"
+            and kv_len is not None):
+        startv = jnp.broadcast_to(jnp.reshape(start, (-1,)), (B,))
+        klv = jnp.broadcast_to(
+            jnp.reshape(jnp.asarray(kv_len, jnp.int32), (-1,)), (B,))
+        out, kc, ksb, vc, vsb = ops.mx_flash_prefill(
+            q, k, v, cache_k.codes, cache_k.scales, cache_v.codes,
+            cache_v.scales, block_tables, startv, klv, cache_k.fmt,
+            window=window)
+        cache_k = kv_scatter_chunk_paged(cache_k, kc, ksb, block_tables,
+                                         startv)
+        cache_v = kv_scatter_chunk_paged(cache_v, vc, vsb, block_tables,
+                                         startv)
+        out = out.astype(x.dtype)
+    else:
+        cache_k = kv_write_chunk_paged(cache_k, k, block_tables, start)
+        cache_v = kv_write_chunk_paged(cache_v, v, block_tables, start)
+        out = attention_paged(q, cache_k, cache_v, block_tables,
+                              causal=True, q_pos=pos, kv_len=kv_len,
+                              window=window, chunk=cfg.attn_chunk,
+                              backend=qm.backend)
     out = out.reshape(B, C, cfg.q_dim)
     out = qlinear(out, p["wo"], p.get("bo"), qm, "attn_out")
     return x + out, cache_k, cache_v
@@ -441,23 +471,38 @@ def prefill_chunk_paged(params, cfg: ArchConfig, cache, block_tables,
     positions start..start+C-1 write through ``block_tables`` (B, maxp).
     Same one-jit-signature contract as :func:`prefill_chunk` — start /
     last_idx traced, C fixed — with the cache rows resolved per page.
+
+    ``start`` / ``last_idx`` are traced i32 scalars shared by all lanes,
+    or (B,) vectors (batched prefill admission: each lane runs its own
+    chunk of its own prompt in one forward — per-lane RoPE positions,
+    per-lane table rows, per-lane last-token readout). Every per-lane op
+    on the path is row-independent, so lane b of a batched call is
+    value-identical to a scalar-start call with lane b's offsets.
     Returns (logits (B, V) at last_idx, cache)."""
     x = embed_inputs(params, cfg, inputs)
     C = x.shape[1]
-    pos = start + jnp.arange(C, dtype=jnp.int32)
+    st = jnp.asarray(start, jnp.int32)
+    if st.ndim == 1:        # (B,) per-lane chunk starts
+        pos = st[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+    else:
+        pos = st + jnp.arange(C, dtype=jnp.int32)
     bt = jnp.asarray(block_tables, jnp.int32)
 
     def body(xc, inp):
         pl, ck, cv = inp
         xc, ck, cv = attn_sublayer_chunk_paged(xc, pl, cfg, qm, ck, cv,
-                                               bt, pos, start + C,
+                                               bt, pos, st + C,
                                                window=cfg.window)
         xc = ffn_sublayer(xc, pl, cfg, qm)
         return xc, (ck, cv)
 
     x, (ks, vs) = scan_layers(body, x, (params["blocks"],
                                cache["k"], cache["v"]), cfg.scan_layers)
-    xl = jax.lax.dynamic_slice_in_dim(x, last_idx, 1, axis=1)
+    li = jnp.asarray(last_idx, jnp.int32)
+    if li.ndim == 1:        # (B,) per-lane last-token indices
+        xl = jnp.take_along_axis(x, li[:, None, None], axis=1)
+    else:
+        xl = jax.lax.dynamic_slice_in_dim(x, last_idx, 1, axis=1)
     xl = rms_norm(xl, params["ln_f"], cfg.norm_eps)
     logits = head_out(xl[:, 0], params, cfg, qm)
     return logits, {"k": ks, "v": vs}

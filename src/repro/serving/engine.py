@@ -360,6 +360,7 @@ class Engine:
     # cache never resets)
     _WINDOW_KEYS = ("admitted", "decode_steps", "slot_steps",
                     "useful_decode_tokens", "prefill_chunk_steps",
+                    "prefill_batched_steps", "prefill_lane_steps",
                     "prefix_hit_tokens", "blocks_evicted",
                     "spec_proposed_tokens", "spec_accepted_tokens")
 
@@ -571,6 +572,20 @@ class Engine:
         self._c_chunk_steps = reg.counter(
             "serving_prefill_chunk_steps_total",
             help="chunked-prefill invocations (drops under prefix hits)")
+        self._c_prefill_batched = reg.counter(
+            "serving_prefill_batched_steps_total",
+            help="chunked-prefill invocations that carried >=2 lanes "
+                 "(paged batched admission — "
+                 "policy.max_prefill_lanes_per_step)")
+        self._c_prefill_lane_steps = reg.counter(
+            "serving_prefill_lane_steps_total",
+            help="chunked-prefill invocations x active lanes; "
+                 "lane_steps / chunk_steps is the mean prefill batch "
+                 "occupancy (1.0 == strictly serial admission)")
+        self._h_prefill_batch = reg.histogram(
+            "serving_prefill_batch_size", unit="lanes",
+            help="active lanes per chunked-prefill invocation (serial "
+                 "admission observes 1 per chunk)")
         self._c_prefix_hit_toks = reg.counter(
             "serving_prefix_hit_tokens_total", unit="tokens",
             help="prompt tokens served from cached prefix pages")
@@ -1510,6 +1525,8 @@ class Engine:
                     jnp.asarray(buf[None, ci * C:(ci + 1) * C]),
                     jnp.int32(ci * C), jnp.int32(width - 1))
             self._c_chunk_steps.inc()
+            self._c_prefill_lane_steps.inc()
+            self._h_prefill_batch.observe(1)
         with self._span("merge", slot=slot):
             self._cache = self._merge(self._cache, self._slot_cache,
                                       jnp.int32(slot))
@@ -1642,6 +1659,25 @@ class Engine:
         A preempted request re-admits with prompt+emitted tokens
         (``_effective_prompt``): its original prompt's registered pages
         are prefix-cache hits, so the retry re-prefills only the tail."""
+        plan = self._admit_paged_prep(slot, req)
+        if plan is None:
+            return None
+        return self._prefill_plan_serial(plan)
+
+    def _admit_paged_prep(self, slot: int, req: Request,
+                          in_flight: bool = False) -> Optional[dict]:
+        """Host-side half of a paged admission: page accounting, prefix
+        matching, copy-on-write, and the lane's block-table write —
+        everything up to (not including) the prefill chunk loop.
+        Returns a *plan* dict consumed by :meth:`_prefill_plan_serial`
+        or the batched admission loop, or ``None`` on backpressure
+        (every page reference taken here has been released).
+
+        ``in_flight`` marks that other admissions hold pages but do not
+        occupy a slot yet (earlier plans of the same batched-admission
+        step) — it suppresses the exhausted-with-idle-pool error, which
+        would otherwise misread their reservations as a permanently
+        unsatisfiable request."""
         prompt = self._effective_prompt(req)
         s = len(prompt)
         max_new = req.max_new - len(req._gen)
@@ -1678,7 +1714,7 @@ class Engine:
                 self._alloc.decref(p)
             if cow_src is not None:
                 self._alloc.decref(cow_src)
-            if (not forced
+            if (not forced and not in_flight
                     and not any(sl is not None for sl in self._slots)):
                 raise ValueError(
                     f"KV page pool exhausted with no requests in "
@@ -1699,26 +1735,44 @@ class Engine:
         self._tables[slot, :] = 0
         self._tables[slot, :len(pages)] = pages
         self._tables_dev = None
-        table_row = self._commit(jnp.asarray(self._tables[slot:slot + 1]))
 
         n_chunks = -(-(s - resume) // C)
         buf = np.zeros(n_chunks * C, np.int32)
         buf[:s - resume] = prompt[resume:]
+        return {"slot": slot, "req": req, "s": s, "resume": resume,
+                "n_chunks": n_chunks, "buf": buf, "pages": pages,
+                "hashes": hashes}
+
+    def _prefill_plan_serial(self, plan: dict) -> tuple:
+        """Run one admission plan's chunked prefill serially (one lane
+        per dispatch — the pre-batching jit signature) and finish it."""
+        slot, s, resume = plan["slot"], plan["s"], plan["resume"]
+        C = self.cfg.attn_chunk
+        buf = plan["buf"]
+        table_row = self._commit(jnp.asarray(self._tables[slot:slot + 1]))
         self._count_compile("prefill_chunk", ("paged", 1, C))
         logits = None
-        for ci in range(n_chunks):
+        for ci in range(plan["n_chunks"]):
             width = min(s - resume - ci * C, C)
             with self._span("prefill_chunk", chunk=ci, slot=slot,
-                            paged=True):
+                            paged=True, prefill_batch=1):
                 logits, self._cache = self._prefill_chunk_paged(
                     self.params, self._cache,
                     jnp.asarray(buf[None, ci * C:(ci + 1) * C]), table_row,
                     jnp.int32(resume + ci * C), jnp.int32(width - 1))
             self._c_chunk_steps.inc()
-        for j in range(s // P):
-            self._alloc.register(hashes[j], pages[j])
-        self._slot_pages[slot] = pages
-        row = np.asarray(logits)[0]
+            self._c_prefill_lane_steps.inc()
+            self._h_prefill_batch.observe(1)
+        return self._admit_paged_finish(plan, np.asarray(logits)[0])
+
+    def _admit_paged_finish(self, plan: dict, row: np.ndarray) -> tuple:
+        """Post-prefill bookkeeping of a paged admission: register the
+        prompt's full pages for prefix sharing, pin the lane's page
+        list, sample the first token from the last chunk's logits row."""
+        slot, req, s = plan["slot"], plan["req"], plan["s"]
+        for j in range(s // self.page_size):
+            self._alloc.register(plan["hashes"][j], plan["pages"][j])
+        self._slot_pages[slot] = plan["pages"]
         tok = self._first_token(req, row)
         return s, tok, bool(np.isfinite(row).all())
 
@@ -1737,11 +1791,19 @@ class Engine:
                     return None
             else:
                 res = self._admit(i, req)
+        self._record_admission(req, t_a0, time.perf_counter(), res[2])
+        return res
+
+    def _record_admission(self, req: Request, t_a0: float, t_a1: float,
+                          ok: bool) -> None:
+        """Admission lifecycle telemetry, shared by serial and batched
+        admission: admitted counter, RUNNING transition, first-token /
+        queue-wait observations, request-track trace events. ``t_a0``
+        is when admission work started for this request, ``t_a1`` when
+        its first token became available on the host."""
         self._c_admitted.inc()
         req.state = RequestState.RUNNING
         first = not req.m_first
-        t_a1 = time.perf_counter()
-        ok = res[2]
         if first and ok:
             req.m_first = t_a1
             req.t_first = time.time()
@@ -1757,7 +1819,196 @@ class Engine:
             if first and ok:
                 self.tracer.instant("first_token", track=req.trace_track,
                                     cat="request")
-        return res
+
+    def _post_admission(self, i: int, req: Request, res: tuple,
+                        paged: bool, done: List[Request]) -> bool:
+        """Shared admission epilogue: NaN guard, first-token emission,
+        same-step completion, or lane occupancy. Returns True when the
+        lane is now occupied (False: it stays free for the next
+        queued request)."""
+        sb, tok, ok = res
+        if not ok:
+            # prefill produced non-finite logits: fail this request
+            # alone, the lane stays free for the next
+            self._c_nan.inc()
+            if (self.tracer is not None
+                    and req.trace_track is not None):
+                self.tracer.instant("nan_guard", track=req.trace_track,
+                                    cat="request", lane=i, step=-1)
+            if paged:
+                self._release_paged(i)
+            self._finish(req, req._gen, state=RequestState.FAILED,
+                         error=f"non-finite logits at prefill "
+                               f"(lane {i})")
+            done.append(req)
+            return False
+        req._gen.append(tok)
+        self._emit(req, tok)
+        if req.max_new - len(req._gen) == 0 or tok == self.eos_id:
+            self._finish(req, req._gen)  # lane freed same step
+            done.append(req)
+            if paged:
+                self._release_paged(i)
+            return False
+        self._slots[i] = _Slot(req, req._gen, sb,
+                               req.max_new - len(req._gen))
+        return True
+
+    def _admit_batched(self, done: List[Request], knob: int) -> None:
+        """Paged admission with prefill batching: admit up to ``knob``
+        queued requests per engine step through ONE chunked-prefill
+        loop whose dispatches carry every candidate lane at once —
+        per-lane block tables, start offsets, and last-token indices
+        stacked on the batch axis under a single jit signature
+        (``("paged", B, C)``). The loop runs ``max(n_chunks)`` steps;
+        a lane whose prompt ran out simply goes inactive (its row
+        rides along on the scrap table, see below).
+
+        Semantics match serial admission exactly: candidates are
+        collected in admit-cursor ring order with the same pop /
+        never-fits / zero-budget / preempt-retry / backpressure
+        handling, and the fused or fallback prefill is row-independent,
+        so each lane's tokens are bit-identical to admitting it alone.
+        The one cross-request interaction serial admission has — a
+        later request prefix-hitting pages a *just-admitted* earlier
+        request registered — cannot happen mid-batch, so a candidate
+        whose prompt pages collide with hashes this batch is about to
+        register is deferred (pushed back to the queue front, stopping
+        collection to preserve queue order); it admits next step with
+        its prefix hit intact.
+
+        Non-candidate lanes (and candidates past their last chunk) run
+        on an all-zeros table row: their writes land on the scrap page
+        (page 0) and their logits rows are never read — rows are
+        independent, so garbage lanes cannot perturb live ones."""
+        C = self.cfg.attn_chunk
+        P = self.page_size
+        plans: List[dict] = []
+        pending: set = set()     # page hashes this batch will register
+        stop = False
+        for off in range(self.B):
+            if stop or len(plans) >= knob:
+                break
+            i = (self._admit_cursor + off) % self.B
+            if self._slots[i] is not None:
+                continue
+            while True:
+                req = self._queue.pop(time.perf_counter())
+                if req is None:
+                    stop = True
+                    break
+                err = self._never_fits(req)
+                if err is not None:
+                    self._reject_never_fit(req, err, done)
+                    continue
+                if req.max_new - len(req._gen) <= 0:
+                    self._c_admitted.inc()
+                    self._finish(req, req._gen)
+                    done.append(req)
+                    continue
+                if plans and any(
+                        h in pending
+                        for h in self._page_hashes(
+                            self._effective_prompt(req))):
+                    # would prefix-hit a page an earlier candidate in
+                    # this batch registers only *after* its prefill —
+                    # defer so the hit is not silently skipped
+                    self._queue.push_front(req)
+                    stop = True
+                    break
+                t_a0 = time.perf_counter()
+                plan = self._admit_paged_prep(i, req,
+                                              in_flight=bool(plans))
+                while plan is None and self.policy.preemption:
+                    # page pressure: same victim/retry dance as serial
+                    lane = pick_victim(self._victim_lanes(),
+                                       max_priority=req.priority)
+                    if lane is None:
+                        break
+                    self._preempt(lane, done, "page pressure")
+                    plan = self._admit_paged_prep(i, req,
+                                                  in_flight=bool(plans))
+                if plan is None:
+                    self._queue.push_front(req)
+                    stop = True
+                    break
+                plan["t0"] = t_a0
+                pending.update(plan["hashes"][:plan["s"] // P])
+                plans.append(plan)
+                break
+        if not plans:
+            return
+        if len(plans) == 1:
+            # a batch of one IS the serial path — same jit signature,
+            # same spans, same counters
+            p = plans[0]
+            req = p["req"]
+            with self._span("admit", slot=p["slot"],
+                            prompt=len(req.prompt),
+                            req=req.trace_track or ""):
+                res = self._prefill_plan_serial(p)
+            self._record_admission(req, p["t0"], time.perf_counter(),
+                                   res[2])
+            self._post_admission(p["slot"], req, res, True, done)
+            return
+
+        B = self.B
+        maxp = self._tables.shape[1]
+        tables = np.zeros((B, maxp), np.int32)
+        for p in plans:
+            tables[p["slot"]] = self._tables[p["slot"]]
+        # committed as a COPY: `tables` is mutated between steps while
+        # earlier dispatches are still in flight, and jnp.asarray of a
+        # host array can be zero-copy on CPU backends — aliasing it
+        # would let the mutation reach computations already enqueued
+        tables_d = self._commit(jnp.asarray(tables.copy()))
+        n_steps = max(p["n_chunks"] for p in plans)
+        self._count_compile("prefill_chunk", ("paged", B, C))
+        lane_logits: dict = {}   # slot -> device logits, its last chunk
+        with self._span("admit", lanes=len(plans), batched=True):
+            for ci in range(n_steps):
+                active = [p for p in plans if ci < p["n_chunks"]]
+                if ci and any(p["n_chunks"] == ci for p in plans):
+                    # a lane just ran out of chunks: park it on the
+                    # scrap table BEFORE the next dispatch, or its
+                    # ride-along garbage rows would overwrite the real
+                    # KV it just finished writing
+                    for p in plans:
+                        if p["n_chunks"] <= ci:
+                            tables[p["slot"]] = 0
+                    tables_d = self._commit(jnp.asarray(tables.copy()))
+                toks = np.zeros((B, C), np.int32)
+                starts = np.zeros(B, np.int32)
+                last = np.zeros(B, np.int32)
+                for p in active:
+                    toks[p["slot"]] = p["buf"][ci * C:(ci + 1) * C]
+                    starts[p["slot"]] = p["resume"] + ci * C
+                    last[p["slot"]] = min(
+                        p["s"] - p["resume"] - ci * C, C) - 1
+                with self._span("prefill_chunk", chunk=ci, paged=True,
+                                prefill_batch=len(active)):
+                    logits, self._cache = self._prefill_chunk_paged(
+                        self.params, self._cache, jnp.asarray(toks),
+                        tables_d, jnp.asarray(starts),
+                        jnp.asarray(last))
+                self._c_chunk_steps.inc()
+                self._c_prefill_lane_steps.inc(len(active))
+                if len(active) > 1:
+                    self._c_prefill_batched.inc()
+                self._h_prefill_batch.observe(len(active))
+                for p in active:
+                    if ci == p["n_chunks"] - 1:
+                        lane_logits[p["slot"]] = logits
+            t_a1 = time.perf_counter()
+            for p in plans:
+                # one host fetch per lane, after every dispatch is in
+                # flight — the sync cost is paid once per admission,
+                # exactly like the serial path's trailing fetch
+                row = np.asarray(lane_logits[p["slot"]])[p["slot"]]
+                res = self._admit_paged_finish(p, row)
+                self._record_admission(p["req"], p["t0"], t_a1, res[2])
+                self._post_admission(p["slot"], p["req"], res, True,
+                                     done)
 
     def _step_continuous(self) -> List[Request]:
         self._ensure_pool()
@@ -1790,76 +2041,57 @@ class Engine:
         self._expire_queued(done)
         self._maybe_preempt_priority(done)
 
-        blocked = False
-        # --- admission: fill free lanes from the queue (ring order) ---
-        for off in range(self.B):
-            i = (self._admit_cursor + off) % self.B
-            if self._slots[i] is not None:
-                continue
-            while True:
-                req = self._queue.pop(time.perf_counter())
-                if req is None:
-                    break
-                err = self._never_fits(req)
-                if err is not None:
-                    self._reject_never_fit(req, err, done)
+        # --- admission: fill free lanes from the queue (ring order).
+        # Paged admission batches up to max_prefill_lanes_per_step
+        # requests into one chunked-prefill loop; knob 1 (and the
+        # contiguous layout, whose admission runs in a single-lane
+        # scratch cache) keeps the serial path bit-identical to the
+        # pre-batching engine. ---
+        knob = (max(1, self.policy.max_prefill_lanes_per_step)
+                if paged else 1)
+        if knob > 1:
+            self._admit_batched(done, knob)
+        else:
+            blocked = False
+            for off in range(self.B):
+                i = (self._admit_cursor + off) % self.B
+                if self._slots[i] is not None:
                     continue
-                if req.max_new - len(req._gen) <= 0:
-                    self._c_admitted.inc()
-                    self._finish(req, req._gen)
-                    done.append(req)
-                    continue
-                res = self._admit_one(i, req, paged)
-                while res is None and self.policy.preemption:
-                    # page pressure: evict a strictly lower-priority
-                    # running request and retry this admission — its
-                    # freed pages (plus cache evictions) cover us
-                    lane = pick_victim(self._victim_lanes(),
-                                       max_priority=req.priority)
-                    if lane is None:
+                while True:
+                    req = self._queue.pop(time.perf_counter())
+                    if req is None:
                         break
-                    self._preempt(lane, done, "page pressure")
+                    err = self._never_fits(req)
+                    if err is not None:
+                        self._reject_never_fit(req, err, done)
+                        continue
+                    if req.max_new - len(req._gen) <= 0:
+                        self._c_admitted.inc()
+                        self._finish(req, req._gen)
+                        done.append(req)
+                        continue
                     res = self._admit_one(i, req, paged)
-                if res is None:
-                    # pool pressure with nothing evictable: requeue at
-                    # the front and stop admitting — pages free up as
-                    # lanes finish
-                    self._queue.push_front(req)
-                    blocked = True
+                    while res is None and self.policy.preemption:
+                        # page pressure: evict a strictly lower-priority
+                        # running request and retry this admission — its
+                        # freed pages (plus cache evictions) cover us
+                        lane = pick_victim(self._victim_lanes(),
+                                           max_priority=req.priority)
+                        if lane is None:
+                            break
+                        self._preempt(lane, done, "page pressure")
+                        res = self._admit_one(i, req, paged)
+                    if res is None:
+                        # pool pressure with nothing evictable: requeue
+                        # at the front and stop admitting — pages free
+                        # up as lanes finish
+                        self._queue.push_front(req)
+                        blocked = True
+                        break
+                    if self._post_admission(i, req, res, paged, done):
+                        break
+                if blocked:
                     break
-                sb, tok, ok = res
-                if not ok:
-                    # prefill produced non-finite logits: fail this
-                    # request alone, the lane stays free for the next
-                    self._c_nan.inc()
-                    if (self.tracer is not None
-                            and req.trace_track is not None):
-                        self.tracer.instant("nan_guard",
-                                            track=req.trace_track,
-                                            cat="request", lane=i,
-                                            step=-1)
-                    if paged:
-                        self._release_paged(i)
-                    self._finish(req, req._gen,
-                                 state=RequestState.FAILED,
-                                 error=f"non-finite logits at prefill "
-                                       f"(lane {i})")
-                    done.append(req)
-                    continue
-                req._gen.append(tok)
-                self._emit(req, tok)
-                if (req.max_new - len(req._gen) == 0
-                        or tok == self.eos_id):
-                    self._finish(req, req._gen)  # lane freed same step
-                    done.append(req)
-                    if paged:
-                        self._release_paged(i)
-                    continue
-                self._slots[i] = _Slot(req, req._gen, sb,
-                                       req.max_new - len(req._gen))
-                break
-            if blocked:
-                break
         self._admit_cursor = (self._admit_cursor + 1) % self.B
 
         live = [i for i in range(self.B) if self._slots[i] is not None]
@@ -2149,6 +2381,10 @@ class Engine:
                 "slot_steps": self.slot_steps,
                 "useful_decode_tokens": self.useful_decode_tokens,
                 "prefill_chunk_steps": self.prefill_chunk_steps,
+                "prefill_batched_steps": int(
+                    self._c_prefill_batched.value),
+                "prefill_lane_steps": int(
+                    self._c_prefill_lane_steps.value),
                 "prefix_hit_tokens": self.prefix_hit_tokens,
                 "blocks_evicted": int(self._c_evicted.value),
                 "spec_proposed_tokens": int(self._c_spec_proposed.value),
@@ -2204,7 +2440,14 @@ class Engine:
         ``prefill_chunk_steps`` counts chunked-prefill invocations under
         both layouts — with prefix hits it drops below the no-sharing
         chunk count, which is how tests prove a shared prefix is
-        prefilled exactly once.
+        prefilled exactly once. Batched paged admission
+        (``policy.max_prefill_lanes_per_step`` > 1) folds several
+        lanes into each invocation: ``prefill_batched_steps`` counts
+        the invocations that carried >=2 lanes, ``prefill_lane_steps``
+        counts invocations x active lanes, and
+        ``prefill_lanes_per_step`` (= lane_steps / chunk_steps) is the
+        mean prefill batch occupancy — 1.0 under strictly serial
+        admission.
 
         Lifecycle keys (``docs/robustness.md``): ``submitted`` —
         requests accepted by submit(); ``terminal`` — dict of terminal-
@@ -2244,6 +2487,11 @@ class Engine:
                 "useful_decode_tokens": cum["useful_decode_tokens"],
                 "decode_utilization": util,
                 "prefill_chunk_steps": cum["prefill_chunk_steps"],
+                "prefill_batched_steps": cum["prefill_batched_steps"],
+                "prefill_lane_steps": cum["prefill_lane_steps"],
+                "prefill_lanes_per_step": (
+                    cum["prefill_lane_steps"]
+                    / max(cum["prefill_chunk_steps"], 1)),
                 "prefix_hit_tokens": cum["prefix_hit_tokens"],
                 "spec_proposed_tokens": cum["spec_proposed_tokens"],
                 "spec_accepted_tokens": cum["spec_accepted_tokens"],

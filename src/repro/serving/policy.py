@@ -135,7 +135,19 @@ class SchedulingPolicy:
     counts ``len(prompt) + max_new`` over queued requests: the worst
     case KV/compute debt admission would take on. Preemption requeues
     (``RequestQueue.push_front``) bypass submit and are exempt — work
-    admitted once must always be able to return."""
+    admitted once must always be able to return.
+
+    ``max_prefill_lanes_per_step`` caps how many queued requests the
+    continuous scheduler's *paged* admission prefills together in one
+    batched chunk loop per engine step (docs/serving.md). Each chunked-
+    prefill dispatch then carries up to that many lanes — per-lane
+    block tables and start offsets stacked on the batch axis under one
+    jit signature — instead of one lane per dispatch. ``1`` restores
+    strictly serial admission (the pre-batching behavior, bit-
+    identical); the contiguous layout always admits serially (its
+    admission runs in a single-lane scratch cache). Batched and serial
+    admission emit token-identical outputs — the knob trades host
+    dispatch count against per-step latency, never results."""
 
     deadline_ms: Optional[float] = None
     ttft_deadline_ms: Optional[float] = None
@@ -146,6 +158,7 @@ class SchedulingPolicy:
     max_queue_depth: Optional[int] = None
     max_queue_depth_per_priority: Optional[int] = None
     admit_token_budget: Optional[int] = None
+    max_prefill_lanes_per_step: int = 4
 
     def backoff_s(self, retries: int) -> float:
         """Hold time before a request's ``retries``-th re-admission."""

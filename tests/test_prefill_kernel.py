@@ -1,0 +1,317 @@
+"""Pallas flash-prefill over the packed paged MX pool: kernel vs the
+jnp oracle (``mx_prefill_ref``) vs a from-scratch dense computation
+across formats / GQA / windows / ragged tails / scattered block tables;
+the fused chunk bytes bitwise-equal to ``packing.kv_encode``; the
+engine's fused chunked-prefill path token-identical to the ref fallback
+and to the contiguous scheduler; and batched prefill admission
+(``policy.max_prefill_lanes_per_step``) bitwise-equal to serial
+admission with prefix-cache hits preserved. See ``docs/paged-kv.md``."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig
+from repro.core.quantize import KVCacheQuant, QuantMode
+from repro.kernels import ops, packing
+from repro.models import api
+from repro.serving.engine import Engine, Request
+from repro.serving.policy import SchedulingPolicy
+
+KV_FMTS = ["mxfp8", "mxint8", "mxfp4", "mxint4"]
+
+
+def _cfg(**kw):
+    base = dict(name="tiny", family="dense", n_layers=2, d_model=64,
+                n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=128,
+                attn_chunk=16)
+    base.update(kw)
+    return ArchConfig(**base)
+
+
+def _requests(cfg, lens, news, seed=0, prefix=None):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for s, n in zip(lens, news):
+        p = rng.integers(0, cfg.vocab_size, s).astype(np.int32)
+        if prefix is not None:
+            p = np.concatenate([prefix, p])
+        reqs.append(Request(prompt=p, max_new=n))
+    return reqs
+
+
+def _case(seed, B, C, H, kvh, Dh, n_pages, P, fmt, starts):
+    """A random prefill case: pool pages hold each lane's real prefix
+    (quantized), the chunk is dense, block tables are scattered."""
+    D = kvh * Dh
+    rng = np.random.default_rng(seed)
+    maxp = -(-(max(starts) + C) // P)
+    n_pages = max(n_pages, B * maxp)   # distinct pages per lane
+    pool_k = jnp.asarray(rng.normal(size=(n_pages, P, D)), jnp.float32)
+    pool_v = jnp.asarray(rng.normal(size=(n_pages, P, D)), jnp.float32)
+    kc, ks = packing.kv_encode(pool_k, fmt)
+    vc, vs = packing.kv_encode(pool_v, fmt)
+    perm = rng.permutation(n_pages)[:B * maxp].reshape(B, maxp)
+    q = jnp.asarray(rng.normal(size=(B, C, H, Dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, C, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, C, D)), jnp.float32)
+    st = jnp.asarray(starts, jnp.int32)
+    return q, k, v, kc, ks, vc, vs, jnp.asarray(perm, jnp.int32), st
+
+
+@pytest.mark.parametrize("fmt", KV_FMTS)
+@pytest.mark.parametrize("gqa", [1, 2])
+def test_prefill_kernel_matches_ref(fmt, gqa):
+    kvh, Dh = 2, 32
+    q, k, v, kc, ks, vc, vs, bt, st = _case(
+        0, B=2, C=32, H=kvh * gqa, kvh=kvh, Dh=Dh, n_pages=8, P=16,
+        fmt=fmt, starts=[16, 32])
+    kl = st + 32
+    got = ops.mx_flash_prefill(q, k, v, kc, ks, vc, vs, bt, st, kl, fmt,
+                               qb=16, kvb=16, interpret=True)
+    want = ops.mx_prefill_ref(q, k, v, kc, ks, vc, vs, bt, st, kl, fmt)
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]),
+                               atol=2e-5, rtol=2e-5)
+    for g, w in zip(got[1:], want[1:]):   # packed chunk bytes: bitwise
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_prefill_chunk_bytes_match_kv_encode():
+    """The kernel's in-tile quantize-on-append emits the exact bytes the
+    fallback's ``packing.kv_encode`` would write — the property that
+    keeps the fused and fallback engine paths bit-identical."""
+    fmt = "mxint4"
+    q, k, v, kc, ks, vc, vs, bt, st = _case(
+        1, B=2, C=32, H=4, kvh=2, Dh=32, n_pages=8, P=16, fmt=fmt,
+        starts=[0, 16])
+    got = ops.mx_flash_prefill(q, k, v, kc, ks, vc, vs, bt, st, st + 32,
+                               fmt, qb=16, kvb=16, interpret=True)
+    ek, es = packing.kv_encode(k, fmt)
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(ek))
+    np.testing.assert_array_equal(np.asarray(got[2]), np.asarray(es))
+    ev, evs = packing.kv_encode(v, fmt)
+    np.testing.assert_array_equal(np.asarray(got[3]), np.asarray(ev))
+    np.testing.assert_array_equal(np.asarray(got[4]), np.asarray(evs))
+
+
+@pytest.mark.parametrize("window", [8, 24])
+def test_prefill_kernel_sliding_window(window):
+    q, k, v, kc, ks, vc, vs, bt, st = _case(
+        2, B=2, C=32, H=4, kvh=2, Dh=32, n_pages=8, P=16, fmt="mxfp8",
+        starts=[16, 48])
+    kl = st + 32
+    got = ops.mx_flash_prefill(q, k, v, kc, ks, vc, vs, bt, st, kl,
+                               "mxfp8", window=window, qb=16, kvb=16,
+                               interpret=True)
+    want = ops.mx_prefill_ref(q, k, v, kc, ks, vc, vs, bt, st, kl,
+                              "mxfp8", window=window)
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_prefill_kernel_ragged_tail_and_midpage_start():
+    """kv_len < start + C (right-padded final chunk) plus a start that
+    is not page-aligned (mid-page prefix resume): tail rows past kv_len
+    and pool rows at/after start must both stay masked."""
+    q, k, v, kc, ks, vc, vs, bt, st = _case(
+        3, B=2, C=32, H=4, kvh=2, Dh=32, n_pages=8, P=16, fmt="mxfp8",
+        starts=[13, 27])
+    kl = st + jnp.asarray([32, 21], jnp.int32)   # lane 1 ragged tail
+    got = ops.mx_flash_prefill(q, k, v, kc, ks, vc, vs, bt, st, kl,
+                               "mxfp8", qb=16, kvb=16, interpret=True)
+    want = ops.mx_prefill_ref(q, k, v, kc, ks, vc, vs, bt, st, kl,
+                              "mxfp8")
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_prefill_ref_matches_dense_jnp():
+    """The oracle itself against a from-scratch dense computation:
+    gather pages through the scattered table, splice in the chunk's
+    quantize-roundtrip, run plain softmax attention."""
+    fmt = "mxfp8"
+    B, C, H, kvh, Dh, P = 2, 32, 4, 2, 32, 16
+    q, k, v, kc, ks, vc, vs, bt, st = _case(
+        4, B=B, C=C, H=H, kvh=kvh, Dh=Dh, n_pages=8, P=P, fmt=fmt,
+        starts=[16, 32])
+    kl = st + C
+    out = np.asarray(ops.mx_prefill_ref(q, k, v, kc, ks, vc, vs, bt, st,
+                                        kl, fmt)[0])
+    stn, kln = np.asarray(st), np.asarray(kl)
+    for b in range(B):
+        kd = np.asarray(packing.kv_decode(
+            jnp.take(kc, bt[b], axis=0), jnp.take(ks, bt[b], axis=0),
+            fmt))
+        vd = np.asarray(packing.kv_decode(
+            jnp.take(vc, bt[b], axis=0), jnp.take(vs, bt[b], axis=0),
+            fmt))
+        kd = kd.reshape(-1, kvh * Dh).copy()
+        vd = vd.reshape(-1, kvh * Dh).copy()
+        kd[stn[b]:stn[b] + C] = np.asarray(packing.kv_decode(
+            *packing.kv_encode(k[b:b + 1], fmt), fmt))[0]
+        vd[stn[b]:stn[b] + C] = np.asarray(packing.kv_decode(
+            *packing.kv_encode(v[b:b + 1], fmt), fmt))[0]
+        kd = kd.reshape(-1, kvh, Dh)
+        vd = vd.reshape(-1, kvh, Dh)
+        qb = np.asarray(q[b])                    # (C, H, Dh)
+        for c in range(C):
+            qp = stn[b] + c
+            for h in range(H):
+                g = h // (H // kvh)
+                logit = (qb[c, h] @ kd[:, g].T) / np.sqrt(Dh)
+                kp = np.arange(kd.shape[0])
+                mask = (kp <= qp) & (kp < kln[b])
+                logit = np.where(mask, logit, -np.inf)
+                w = np.exp(logit - logit.max())
+                w /= w.sum()
+                ref = w @ vd[:, g]
+                np.testing.assert_allclose(out[b, c, h], ref,
+                                           atol=2e-5, rtol=2e-5)
+
+
+def test_prefill_explicit_blocks_and_off_contract():
+    """Explicit qb/kvb that do not divide C raise descriptively; so do
+    a dense (fmt='none') pool and malformed shapes."""
+    q, k, v, kc, ks, vc, vs, bt, st = _case(
+        5, B=1, C=32, H=4, kvh=2, Dh=32, n_pages=4, P=16, fmt="mxfp8",
+        starts=[0])
+    kl = st + 32
+    with pytest.raises(ValueError, match="does not divide"):
+        ops.mx_flash_prefill(q, k, v, kc, ks, vc, vs, bt, st, kl,
+                             "mxfp8", qb=24, interpret=True)
+    with pytest.raises(ValueError, match="does not divide"):
+        ops.mx_flash_prefill(q, k, v, kc, ks, vc, vs, bt, st, kl,
+                             "mxfp8", kvb=24, interpret=True)
+    with pytest.raises(ValueError, match="contract"):
+        ops.mx_flash_prefill(q, k, v, kc, ks, vc, vs, bt, st, kl,
+                             "none", interpret=True)
+    with pytest.raises(ValueError, match="contract"):
+        ops.mx_flash_prefill(q[0], k, v, kc, ks, vc, vs, bt, st, kl,
+                             "mxfp8", interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# Engine: the fused chunked-prefill path
+# ---------------------------------------------------------------------------
+
+def _paged_engine(params, cfg, backend, fmt, knob=1, **kw):
+    return Engine(params, cfg, QuantMode(backend=backend), batch_size=2,
+                  max_len=96, scheduler="continuous", kv_layout="paged",
+                  page_size=32, kv_cache=fmt,
+                  policy=SchedulingPolicy(max_prefill_lanes_per_step=knob),
+                  **kw)
+
+
+@pytest.mark.parametrize("fmt", ["mxfp8", "mxint4"])
+def test_engine_fused_prefill_token_identical(fmt):
+    """The fused engine (kernel prefill + scatter of its bytes) emits
+    the same tokens as the ref engine (quantize + write + dense jnp) and
+    as the contiguous continuous scheduler — multi-chunk prompts, no
+    leaked pages."""
+    cfg = _cfg()
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    lens, news = [40, 44, 38, 52], [6, 5, 7, 4]
+    cont = Engine(params, cfg, QuantMode(backend="ref"), batch_size=2,
+                  max_len=96, scheduler="continuous",
+                  bucket_prompts=False, kv_cache=fmt)
+    want = [r.out for r in cont.generate(_requests(cfg, lens, news, 1))]
+    for backend in ("fused", "ref"):
+        eng = _paged_engine(params, cfg, backend, fmt)
+        got = eng.generate(_requests(cfg, lens, news, 1))
+        for w, g in zip(want, got):
+            np.testing.assert_array_equal(g.out, w)
+        eng._alloc.check()
+        assert eng.stats()["blocks_in_use"] == 0
+
+
+def test_engine_fused_path_uses_kernel():
+    """The fused engine's chunked-prefill jaxpr contains the pallas
+    kernel (and the ref engine's does not) — the dispatch is structural,
+    not a tolerance accident."""
+    cfg = _cfg()
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    cache = api.init_cache_paged(cfg, 8, 32, jnp.float32,
+                                 KVCacheQuant.parse("mxfp8"))
+    toks = jnp.zeros((1, cfg.attn_chunk), jnp.int32)
+    bt = jnp.zeros((1, 3), jnp.int32)
+    jaxprs = {}
+    for backend in ("fused", "ref"):
+        jaxprs[backend] = str(jax.make_jaxpr(
+            lambda c, t: api.prefill_chunk_paged(
+                params, cfg, c, bt, t, jnp.int32(0),
+                jnp.int32(cfg.attn_chunk - 1),
+                QuantMode(backend=backend)))(cache, toks))
+    assert "pallas_call" in jaxprs["fused"]
+    assert "pallas_call" not in jaxprs["ref"]
+
+
+def test_batched_admission_matches_serial():
+    """N queued prompts admitted through the batched prefill loop emit
+    bitwise the tokens serial admission emits, with fewer chunked-
+    prefill dispatches and the same per-lane work; pages all return."""
+    cfg = _cfg()
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    lens, news = [40, 44, 38, 52, 35], [6, 5, 7, 4, 8]
+    outs, stats = {}, {}
+    for knob in (1, 4):
+        eng = _paged_engine(params, cfg, "fused", "mxfp8", knob=knob)
+        outs[knob] = [r.out for r in
+                      eng.generate(_requests(cfg, lens, news, 2))]
+        stats[knob] = eng.stats()
+        eng._alloc.check()
+        assert stats[knob]["blocks_in_use"] == 0
+    for a, b in zip(outs[1], outs[4]):
+        np.testing.assert_array_equal(a, b)
+    s1, s4 = stats[1], stats[4]
+    assert s4["prefill_chunk_steps"] < s1["prefill_chunk_steps"]
+    assert s4["prefill_lane_steps"] == s1["prefill_lane_steps"]
+    assert s4["prefill_batched_steps"] > 0
+    assert s4["prefill_lanes_per_step"] > 1.0
+    assert s1["prefill_batched_steps"] == 0
+    assert s1["prefill_lanes_per_step"] == 1.0
+
+
+def test_batched_admission_preserves_prefix_hits():
+    """Requests sharing a prompt prefix would register the same pages;
+    the batched collector defers the collision so the shared prefix is
+    still prefilled exactly once — hit tokens and chunk steps match the
+    serial schedule, outputs are bitwise equal."""
+    cfg = _cfg()
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    sysp = np.random.default_rng(7).integers(
+        0, cfg.vocab_size, 64).astype(np.int32)
+    outs, hits, steps = {}, {}, {}
+    for knob in (1, 4):
+        eng = Engine(params, cfg, QuantMode(backend="fused"),
+                     batch_size=4, max_len=128, scheduler="continuous",
+                     kv_layout="paged", page_size=32, kv_cache="mxfp8",
+                     policy=SchedulingPolicy(
+                         max_prefill_lanes_per_step=knob))
+        got = eng.generate(_requests(cfg, [6, 4, 8], [4, 4, 4], seed=9,
+                                     prefix=sysp))
+        outs[knob] = [r.out for r in got]
+        st = eng.stats()
+        hits[knob], steps[knob] = (st["prefix_hit_tokens"],
+                                   st["prefill_chunk_steps"])
+        eng._alloc.check()
+        assert st["blocks_in_use"] == 0
+    for a, b in zip(outs[1], outs[4]):
+        np.testing.assert_array_equal(a, b)
+    assert hits[4] == hits[1] > 0
+    assert steps[4] == steps[1]
+
+
+def test_batched_admission_metrics():
+    """The observability satellite: the batch-size histogram and the
+    batched/lane-step counters land in the metrics registry with the
+    documented names."""
+    cfg = _cfg()
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    eng = _paged_engine(params, cfg, "fused", "mxfp8", knob=4)
+    eng.generate(_requests(cfg, [40, 44, 38], [4, 4, 4], seed=3))
+    names = set(eng.metrics.snapshot())
+    assert "serving_prefill_batch_size" in names
+    assert "serving_prefill_batched_steps_total" in names
+    assert "serving_prefill_lane_steps_total" in names
+    # one batch-size observation per chunked-prefill invocation
+    assert eng._h_prefill_batch.count == eng.stats()["prefill_chunk_steps"]
